@@ -1,0 +1,74 @@
+"""Table 2 reproduction: ablation across memory-data ratios.
+
+Mememo / WebANNS-Base (three-tier + compiled compute, eager fetch) /
+WebANNS (full: + phased lazy loading) at memory-data ratios of
+20/90/96/98/100% — the paper's central ablation. Expected ordering at
+every ratio < 100%: Mememo >> WebANNS-Base >> WebANNS; at 100% WebANNS
+matches WebANNS-Base (lazy loading costs nothing when nothing misses).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, csv_row,
+                               get_index, queries_for, run_queries)
+from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.mememo import MememoEngine
+
+RATIOS = (0.2, 0.9, 0.96, 0.98, 1.0)
+
+
+def bench_table2(dataset: str = "wiki-small", n_queries: int = 10,
+                 ratios=RATIOS) -> List[str]:
+    X, g = get_index(dataset)
+    Q = queries_for(X, n_queries)
+    rows: List[str] = []
+    for ratio in ratios:
+        cap = max(16, int(len(X) * ratio))
+        tag = f"r{int(ratio*100)}"
+        mem = MememoEngine(X, g, cache_capacity=cap, prefetch_size=64,
+                           t_setup=IDB_T_SETUP, t_per_item=IDB_T_PER_ITEM)
+        base = WebANNSEngine(
+            X, g, EngineConfig(mode="webanns-base", cache_capacity=cap,
+                               t_setup=IDB_T_SETUP,
+                               t_per_item=IDB_T_PER_ITEM)
+        )
+        web = WebANNSEngine(
+            X, g, EngineConfig(mode="webanns", cache_capacity=cap,
+                               t_setup=IDB_T_SETUP,
+                               t_per_item=IDB_T_PER_ITEM)
+        )
+        fused = WebANNSEngine(
+            X, g, EngineConfig(mode="webanns", cache_capacity=cap,
+                               fused=True, t_setup=IDB_T_SETUP,
+                               t_per_item=IDB_T_PER_ITEM)
+        )
+        if ratio >= 1.0:
+            base.warm_cache()
+            web.warm_cache()
+            fused.warm_cache()
+        m = run_queries(lambda q: mem.query(q, k=10, ef=64), Q)
+        b = run_queries(lambda q: base.query(q, k=10, ef=64), Q)
+        w = run_queries(lambda q: web.query(q, k=10, ef=64), Q)
+        f = run_queries(lambda q: fused.query(q, k=10, ef=64), Q)
+        rows.append(csv_row(
+            f"table2_{tag}_mememo", m["p99_ms"] * 1e3,
+            f"ndb={m.get('mean_ndb', 0):.1f}"))
+        rows.append(csv_row(
+            f"table2_{tag}_webanns-base", b["p99_ms"] * 1e3,
+            f"ndb={b.get('mean_ndb', 0):.1f}"))
+        rows.append(csv_row(
+            f"table2_{tag}_webanns", w["p99_ms"] * 1e3,
+            f"ndb={w.get('mean_ndb', 0):.1f},"
+            f"boost_vs_mememo={m['p99_ms']/max(w['p99_ms'],1e-9):.1f}x"))
+        rows.append(csv_row(
+            f"table2_{tag}_webanns-fused", f["p99_ms"] * 1e3,
+            f"ndb={f.get('mean_ndb', 0):.1f},"
+            f"boost_vs_mememo={m['p99_ms']/max(f['p99_ms'],1e-9):.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench_table2():
+        print(r)

@@ -1,0 +1,82 @@
+"""Fig. 1 reproduction: computational latency + bottleneck breakdown.
+
+Compares the three compute tiers on the ANNS hot loop (distance + top-k
+over one query against N candidates):
+
+- 'interpreted' — scalar Python loops (the JavaScript model),
+- 'numpy'       — vectorized host BLAS (a strong JS-engine upper bound),
+- 'compiled'    — jit (jnp / Pallas on TPU) — the Wasm analogue.
+
+Reports per-tier latency and the distance-vs-sort breakdown (the paper's
+Fig. 1b: >40% distance, ~50% sort/management).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, get_dataset
+from repro.core.mememo import _dist_interpreted
+from repro.kernels import ops as kops
+
+
+def bench_compute(n: int = 2000, d: int = 64, k: int = 10,
+                  iters: int = 5) -> List[str]:
+    X = get_dataset("arxiv-1k") if (n, d) == (1000, 64) else (
+        np.random.default_rng(0).standard_normal((n, d)).astype(np.float32)
+    )
+    q = X[0] + 0.1
+    rows: List[str] = []
+
+    # interpreted: python-loop distances + insertion-sort top-k
+    n_inter = min(n, 300)  # scaled sample, extrapolated linearly
+    t0 = time.perf_counter()
+    dists = [_dist_interpreted(X[i], q, "l2") for i in range(n_inter)]
+    t_dist_i = (time.perf_counter() - t0) * (n / n_inter)
+    t0 = time.perf_counter()
+    top: List[float] = []
+    for v in dists:  # insertion into a bounded sorted list (JS style)
+        if len(top) < k or v < top[-1]:
+            top.append(v)
+            top.sort()
+            top = top[:k]
+    t_sort_i = (time.perf_counter() - t0) * (n / n_inter)
+    rows.append(csv_row("fig1_interpreted_total_1q",
+                        (t_dist_i + t_sort_i) * 1e6,
+                        f"dist_frac={t_dist_i/(t_dist_i+t_sort_i):.2f}"))
+
+    # numpy
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        dnp = ((X - q) ** 2).sum(1)
+    t_dist_n = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        np.argpartition(dnp, k)[:k]
+    t_sort_n = (time.perf_counter() - t0) / iters
+    rows.append(csv_row("fig1_numpy_total_1q",
+                        (t_dist_n + t_sort_n) * 1e6,
+                        f"dist_frac={t_dist_n/(t_dist_n+t_sort_n):.2f}"))
+
+    # compiled (jit; Pallas kernels on TPU via ops dispatch)
+    Qj = jnp.asarray(q)[None]
+    Xj = jnp.asarray(X)
+    fn = jax.jit(lambda Q, X: kops.distance_topk(Q, X, k))
+    fn(Qj, Xj)[0].block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(Qj, Xj)[0].block_until_ready()
+    t_c = (time.perf_counter() - t0) / iters
+    rows.append(csv_row("fig1_compiled_total_1q", t_c * 1e6,
+                        f"speedup_vs_interp={(t_dist_i+t_sort_i)/t_c:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench_compute():
+        print(r)

@@ -1,0 +1,62 @@
+"""Table 1 reproduction: P99 query latency, unrestricted memory.
+
+Mememo vs WebANNS across dataset scales. With unrestricted memory the
+gap isolates (a) compiled-vs-interpreted compute and (b) Mememo's
+prefetch strategy still causing accesses when its heuristics miss. The
+Mememo numbers use its NumPy compute path (conservative: favors the
+baseline; the interpreted path is benchmarked separately in
+bench_compute.py — multiply for the paper's full gap).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, csv_row,
+                               get_index, queries_for, run_queries)
+from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.mememo import MememoEngine
+
+
+def bench_table1(datasets=("arxiv-1k", "wiki-small"),
+                 n_queries: int = 15) -> List[str]:
+    rows: List[str] = []
+    for ds in datasets:
+        X, g = get_index(ds)
+        Q = queries_for(X, n_queries)
+        # Mememo: interpreted compute (the paper's JS baseline) on small
+        # data; NumPy (conservative) on larger sets to keep runtime sane
+        compute = "interpreted" if len(X) <= 2000 else "numpy"
+        mem = MememoEngine(X, g, cache_capacity=len(X), prefetch_size=256,
+                           compute=compute, t_setup=IDB_T_SETUP,
+                           t_per_item=IDB_T_PER_ITEM)
+        web = WebANNSEngine(X, g, EngineConfig(
+            cache_capacity=len(X), t_setup=IDB_T_SETUP,
+            t_per_item=IDB_T_PER_ITEM))
+        fused = WebANNSEngine(X, g, EngineConfig(
+            cache_capacity=len(X), fused=True, t_setup=IDB_T_SETUP,
+            t_per_item=IDB_T_PER_ITEM))
+        # paper protocol: with unrestricted memory the engine's INIT
+        # stage loads the payload (index loader, §3.1); queries then pay
+        # compute only. Mememo fills its cache through its own prefetch
+        # heuristic — paying storage accesses even here is precisely the
+        # paper's Table-1 finding.
+        web.warm_cache()
+        fused.warm_cache()
+        m = run_queries(lambda q: mem.query(q, k=10, ef=64), Q)
+        w = run_queries(lambda q: web.query(q, k=10, ef=64), Q)
+        f = run_queries(lambda q: fused.query(q, k=10, ef=64), Q)
+        boost = m["p99_ms"] / max(w["p99_ms"], 1e-9)
+        boost_f = m["p99_ms"] / max(f["p99_ms"], 1e-9)
+        rows.append(csv_row(f"table1_{ds}_mememo_{compute}",
+                            m["p99_ms"] * 1e3, f"p99_ms={m['p99_ms']:.2f}"))
+        rows.append(csv_row(f"table1_{ds}_webanns", w["p99_ms"] * 1e3,
+                            f"p99_ms={w['p99_ms']:.2f},boost={boost:.1f}x"))
+        rows.append(csv_row(f"table1_{ds}_webanns-fused", f["p99_ms"] * 1e3,
+                            f"p99_ms={f['p99_ms']:.2f},boost={boost_f:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench_table1():
+        print(r)

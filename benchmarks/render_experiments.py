@@ -1,0 +1,60 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline from reports/dryrun/*.json.
+
+Keeps the hand-written sections (everything outside the AUTOGEN markers)
+and regenerates the tables between them.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks.roofline import load_cells, markdown_table, shortlist
+
+BEGIN = "<!-- AUTOGEN:ROOFLINE BEGIN -->"
+END = "<!-- AUTOGEN:ROOFLINE END -->"
+
+
+def render() -> str:
+    parts = []
+    for mesh in ("16x16", "2x16x16"):
+        cells = [c for c in load_cells(mesh)
+                 if c.get("variant", "baseline") == "baseline"]
+        if not cells:
+            continue
+        n_ok = sum(1 for c in cells if c.get("ok"))
+        parts.append(f"### Mesh {mesh} — {n_ok}/{len(cells)} cells compile\n")
+        parts.append(markdown_table(cells))
+        parts.append("")
+    cells = load_cells("16x16")
+    sl = shortlist(cells)
+    if sl:
+        parts.append("Hillclimb shortlist (computed):")
+        for s in sl:
+            parts.append(f"- {s}")
+    return "\n".join(parts)
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    with open(path) as f:
+        text = f.read()
+    block = BEGIN + "\n" + render() + "\n" + END
+    if BEGIN in text:
+        text = re.sub(
+            re.escape(BEGIN) + ".*?" + re.escape(END), block, text,
+            flags=re.S,
+        )
+    else:
+        text += "\n" + block + "\n"
+    with open(path, "w") as f:
+        f.write(text)
+    print("rendered roofline tables into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Roofline aggregation: reports/dryrun/*.json → markdown tables.
+
+Reads every dry-run cell report, computes the three roofline terms
+(already embedded per cell), identifies the dominant term, and renders
+the §Roofline table for EXPERIMENTS.md. Also emits the hillclimb-cell
+shortlist (worst useful-FLOPs ratio, most collective-bound, most
+paper-representative).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+REPORT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "reports/dryrun")
+
+
+def load_cells(mesh: str = "16x16") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(REPORT_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            cells.append(r)
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-6:
+        return f"{x*1e9:.1f}ns"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def markdown_table(cells: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | kind | compute | memory | collective | "
+        "bottleneck | HLO GFLOPs/dev | temp GB/dev | useful-FLOPs |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if not c.get("ok"):
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['kind']} | — | — | — "
+                f"| FAILED | — | — | — |"
+            )
+            continue
+        t = c["roofline"]
+        mem = c.get("memory") or {}
+        temp_gb = (mem.get("temp_bytes") or 0) / 1e9
+        ufr = c.get("useful_flops_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['kind']} "
+            f"| {_fmt_s(t['compute_s'])} | {_fmt_s(t['memory_s'])} "
+            f"| {_fmt_s(t['collective_s'])} | {c['bottleneck'].replace('_s','')} "
+            f"| {c['hlo_flops']/1e9:.1f} | {temp_gb:.2f} "
+            f"| {f'{ufr:.2f}' if ufr else '—'} |"
+        )
+    return "\n".join(lines)
+
+
+def shortlist(cells: List[Dict]) -> List[str]:
+    ok = [c for c in cells if c.get("ok")]
+    out = []
+    with_ratio = [c for c in ok if c.get("useful_flops_ratio")]
+    if with_ratio:
+        worst = min(with_ratio, key=lambda c: c["useful_flops_ratio"])
+        out.append(f"worst useful-FLOPs: {worst['arch']}/{worst['shape']} "
+                   f"(ratio {worst['useful_flops_ratio']:.2f})")
+    coll = [c for c in ok if c["bottleneck"] == "collective_s"]
+    if coll:
+        most = max(coll, key=lambda c: c["roofline"]["collective_s"]
+                   / max(sum(c["roofline"].values()), 1e-12))
+        out.append(f"most collective-bound: {most['arch']}/{most['shape']}")
+    return out
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        cells = load_cells(mesh)
+        if not cells:
+            continue
+        print(f"\n## Roofline — mesh {mesh} ({len(cells)} cells)\n")
+        print(markdown_table(cells))
+    cells = load_cells("16x16")
+    print("\nHillclimb shortlist:")
+    for s in shortlist(cells):
+        print(" -", s)
+
+
+if __name__ == "__main__":
+    main()

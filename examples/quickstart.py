@@ -1,0 +1,61 @@
+"""Quickstart: build a WebANNS index, query it through the tiered store,
+optimize the cache size with Algorithm 2, and verify recall.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.cache_opt import QueryTestStats, optimize_memory_size
+from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.hnsw import exact_search
+from repro.data.synthetic import corpus_embeddings, corpus_texts
+
+
+def main():
+    # 1. a personalized corpus: 3000 docs, 64-d embeddings (+ texts,
+    #    stored separately — the paper's text-embedding separation)
+    X = corpus_embeddings(1200, 64, seed=0)
+    texts = corpus_texts(1200, seed=0)
+
+    # 2. offline index construction (the service-worker stage)
+    print("building HNSW index…")
+    eng = WebANNSEngine.build(
+        X, M=10, ef_construction=60, texts=texts,
+        config=EngineConfig(mode="webanns", cache_capacity=len(X) // 4),
+    )
+
+    # 3. online queries through the three-tier store with lazy loading
+    rng = np.random.default_rng(1)
+    q = X[42] + 0.05 * rng.standard_normal(64).astype(np.float32)
+    ids, dists, stats = eng.query(q, k=5, ef=64)
+    print(f"top-5 ids: {ids.tolist()}")
+    print(f"  visited |Q|={stats.n_visited}, external accesses "
+          f"n_db={stats.n_db}, items fetched={stats.items_fetched}")
+    print(f"  first hit text: {eng.get_texts(ids[:1])[0][:60]}…")
+    ex, _ = exact_search(X, q, 5)
+    print(f"  recall@5 vs brute force: "
+          f"{len(set(ids.tolist()) & set(ex.tolist()))}/5")
+
+    # 4. heuristic cache-size optimization (Algorithm 2, p=0.8, Tθ=100ms)
+    probes = X[rng.choice(len(X), 4)] + 0.05
+    def query_test(c):
+        eng.resize_cache(c)
+        eng.warm_cache()
+        agg = [eng.query(p, k=5, ef=64)[2] for p in probes]
+        return QueryTestStats(
+            n_db=float(np.mean([s.n_db for s in agg])),
+            n_q=float(np.mean([s.n_visited for s in agg])),
+            t_query=float(np.mean([s.t_query for s in agg])),
+            t_db=eng.external.access_cost(64),
+        )
+
+    res = optimize_memory_size(query_test, c0=len(X), p=0.8, t_theta=0.1,
+                               max_iters=6)
+    print(f"cache optimizer: {res.c0} → {res.c_best} items "
+          f"({res.saved_fraction()*100:.0f}% memory saved, "
+          f"{len(res.steps)} probes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end RAG serving: WebANNS retrieval feeding a smoke-scale LM,
+with the retrieval/KV HBM budget split by the cache-size optimizer.
+
+    PYTHONPATH=src python examples/rag_serving.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.data.synthetic import corpus_embeddings, corpus_texts
+from repro.models import transformer as T
+from repro.serve.rag import RAGPipeline, budget_retrieval
+from repro.serve.serve_loop import greedy_generate
+
+
+def main():
+    # corpus + index (offline)
+    X = corpus_embeddings(700, 48, seed=3)
+    texts = corpus_texts(700, seed=3)
+    engine = WebANNSEngine.build(
+        X, M=8, ef_construction=50, texts=texts,
+        config=EngineConfig(cache_capacity=len(X)),
+    )
+
+    # split a (toy) HBM budget between ANNS cache and KV cache
+    probes = X[:4] + 0.02
+    cache_items, kv_budget = budget_retrieval(
+        engine, probes, hbm_budget_bytes=len(X) * 48 * 4, p=0.8,
+        t_theta=0.05,
+    )
+    print(f"HBM split: ANNS cache {cache_items} items, "
+          f"KV budget {kv_budget/1e3:.0f} KB")
+
+    # generator: smoke-config qwen (any LM arch works via --arch)
+    cfg = configs.get("qwen2.5-14b").make_smoke_config()
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+
+    def embed(query: str) -> np.ndarray:
+        rng = np.random.default_rng(abs(hash(query)) % 2**31)
+        return X[rng.integers(0, len(X))] + 0.03
+
+    def tokenize(query: str, docs) -> np.ndarray:
+        rng = np.random.default_rng(abs(hash(query)) % 2**31)
+        return rng.integers(0, cfg.vocab, (1, 8)).astype(np.int32)
+
+    def generate(prompt: np.ndarray) -> np.ndarray:
+        return np.asarray(
+            greedy_generate(params, cfg, jnp.asarray(prompt), n_new=8)
+        )
+
+    rag = RAGPipeline(engine, embed, tokenize, generate, k=3)
+    for query in ("what is attention", "expert routing", "hnsw layers"):
+        out = rag(query)
+        s = out.retrieval_stats
+        print(f"Q: {query!r}")
+        print(f"  retrieved {out.retrieved_ids.tolist()} "
+              f"(n_db={s.n_db}, |Q|={s.n_visited})")
+        print(f"  generated tokens: {out.generated[0, -8:].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

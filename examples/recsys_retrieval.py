@@ -1,0 +1,52 @@
+"""Recsys candidate retrieval: brute-force scoring vs WebANNS HNSW.
+
+The ``retrieval_cand`` shape (1 query × 1M candidates) is exactly the
+ANNS serving problem. This example scores a user query against a candidate
+catalog both ways and compares results + work done.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.data.synthetic import corpus_embeddings
+from repro.models.recsys import retrieval_score
+
+
+def main():
+    n_cand, dim, k = 6_000, 32, 10
+    cands = corpus_embeddings(n_cand, dim, seed=7)
+    user = cands[123] + 0.05  # a user vector near a real item
+
+    # 1) brute force (the serve_bulk path; Pallas scan kernels on TPU)
+    t0 = time.perf_counter()
+    d_bf, i_bf = retrieval_score(jnp.asarray(user)[None], jnp.asarray(cands),
+                                 k=k)
+    i_bf = np.asarray(i_bf)[0]
+    t_bf = time.perf_counter() - t0
+    print(f"brute force: top-{k} in {t_bf*1e3:.1f} ms "
+          f"(scored {n_cand} candidates)")
+
+    # 2) WebANNS index (ip metric == dot-product scoring)
+    print("building catalog index…")
+    eng = WebANNSEngine.build(
+        cands, M=10, ef_construction=60,
+        config=EngineConfig(metric="ip", cache_capacity=n_cand // 5),
+    )
+    eng.query(user, k=k, ef=96)  # warm-up (compile; paper protocol)
+    t0 = time.perf_counter()
+    ids, _, stats = eng.query(user, k=k, ef=96)
+    t_ann = time.perf_counter() - t0
+    overlap = len(set(ids.tolist()) & set(i_bf.tolist()))
+    print(f"webanns: top-{k} in {t_ann*1e3:.1f} ms — visited only "
+          f"|Q|={stats.n_visited}/{n_cand} candidates "
+          f"({stats.n_db} external accesses)")
+    print(f"recall vs brute force: {overlap}/{k}")
+
+
+if __name__ == "__main__":
+    main()

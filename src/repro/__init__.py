@@ -1,0 +1,18 @@
+"""repro: WebANNS on TPU — a multi-pod JAX ANNS + retrieval-serving framework.
+
+Reproduces and extends *WebANNS: Fast and Efficient Approximate Nearest
+Neighbor Search in Web Browsers* (SIGIR '25) as a TPU-native system:
+
+- ``repro.core``        — HNSW + phased lazy loading + three-tier store +
+                          heuristic cache-size optimization (the paper).
+- ``repro.kernels``     — Pallas TPU kernels for the compute hot path
+                          (blocked distance matrix, fused gather+distance,
+                          on-chip partial top-k, embedding bag).
+- ``repro.models``      — assigned architecture zoo (LM dense/MoE, NequIP,
+                          recsys).
+- ``repro.train`` / ``repro.serve`` — training & serving substrates.
+- ``repro.distributed`` — sharding rules and collective helpers.
+- ``repro.launch``      — production mesh, multi-pod dry-run, drivers.
+"""
+
+__version__ = "0.1.0"

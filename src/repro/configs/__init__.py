@@ -1,0 +1,19 @@
+"""Config registry: import side-effect registers every assigned arch."""
+
+from repro.configs import base  # noqa: F401
+from repro.configs.base import REGISTRY, get, list_archs  # noqa: F401
+
+# one module per assigned architecture (+ the paper's own)
+from repro.configs import (  # noqa: F401
+    autoint,
+    bst,
+    deepseek_moe_16b,
+    din,
+    dlrm_rm2,
+    mistral_large_123b,
+    nequip,
+    phi35_moe_42b,
+    qwen25_14b,
+    stablelm_12b,
+    webanns,
+)

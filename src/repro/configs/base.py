@@ -1,0 +1,124 @@
+"""Config registry: every assigned architecture is a selectable config.
+
+``--arch <id>`` anywhere in the launchers resolves through REGISTRY.
+Each ArchSpec carries the exact published configuration, its input-shape
+set (each cell of the assignment is (arch × shape)), a reduced smoke
+config, and ``input_specs`` — ShapeDtypeStruct stand-ins for every model
+input (dry-run: no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode' | 'serve' | 'retrieval'
+    params: Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str  # 'lm' | 'gnn' | 'recsys' | 'anns'
+    source: str  # citation tag from the assignment
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    shapes: Dict[str, ShapeSpec]
+    notes: str = ""
+
+
+REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(REGISTRY)}"
+        )
+    return REGISTRY[arch_id]
+
+
+def list_archs() -> list:
+    return sorted(REGISTRY)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ------------------------------------------------------------ shape sets
+
+LM_SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train",
+                          {"seq_len": 4096, "global_batch": 256}),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                             {"seq_len": 32768, "global_batch": 32}),
+    "decode_32k": ShapeSpec("decode_32k", "decode",
+                            {"seq_len": 32768, "global_batch": 128}),
+    # long_500k is a DECODE shape (1 new token vs a 524288 KV cache):
+    # O(S·d) per step even with full attention — run, not skipped
+    # (DESIGN.md §4).
+    "long_500k": ShapeSpec("long_500k", "decode",
+                           {"seq_len": 524288, "global_batch": 1}),
+}
+
+GNN_SHAPES: Dict[str, ShapeSpec] = {
+    "full_graph_sm": ShapeSpec(
+        "full_graph_sm", "train",
+        {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433, "n_graphs": 1},
+    ),
+    "minibatch_lg": ShapeSpec(
+        "minibatch_lg", "train",
+        {
+            "n_nodes": 232965, "n_edges": 114615892,
+            "batch_nodes": 1024, "fanout": (15, 10),
+            # padded sampled-subgraph caps: 1024 seeds ×(1+15) nodes after
+            # hop1, ×10 edges per hop-2 frontier node (see models/sampler)
+            "sub_nodes": 180224, "sub_edges": 172032, "d_feat": 0,
+            "n_graphs": 1,
+        },
+    ),
+    "ogb_products": ShapeSpec(
+        "ogb_products", "train",
+        {"n_nodes": 2449029, "n_edges": 61859140, "d_feat": 100,
+         "n_graphs": 1},
+    ),
+    "molecule": ShapeSpec(
+        "molecule", "train",
+        {"n_nodes": 30, "n_edges": 64, "batch": 128, "n_graphs": 128},
+    ),
+}
+
+RECSYS_SHAPES: Dict[str, ShapeSpec] = {
+    "train_batch": ShapeSpec("train_batch", "train", {"batch": 65536}),
+    "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+    "retrieval_cand": ShapeSpec(
+        "retrieval_cand", "retrieval",
+        {"batch": 1, "n_candidates": 1_000_000},
+    ),
+}
+
+ANNS_SHAPES: Dict[str, ShapeSpec] = {
+    "query_sharded": ShapeSpec(
+        "query_sharded", "retrieval",
+        {"batch": 1024, "n_items": 4_194_304, "dim": 768, "k": 10,
+         "ef": 64},
+    ),
+    "query_flat": ShapeSpec(
+        "query_flat", "retrieval",
+        {"batch": 1024, "n_items": 4_194_304, "dim": 768, "k": 10},
+    ),
+}

@@ -1,0 +1,28 @@
+"""BST: Behavior Sequence Transformer (Alibaba) [arXiv:1905.06874]."""
+
+from repro.configs.base import (
+    ANNS_SHAPES,
+    ArchSpec,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    register,
+)
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import LMConfig
+
+register(ArchSpec(
+    arch_id="bst",
+    family="recsys",
+    source="arXiv:1905.06874",
+    make_config=lambda: RecsysConfig(
+        name="bst", model="bst", embed_dim=32, seq_len=20, n_blocks=1,
+        n_heads=8, top_mlp=(1024, 512, 256, 1), vocab=1_000_000,
+    ),
+    make_smoke_config=lambda: RecsysConfig(
+        name="bst-smoke", model="bst", embed_dim=16, seq_len=6,
+        n_blocks=1, n_heads=2, top_mlp=(32, 16, 1), vocab=1000,
+    ),
+    shapes=RECSYS_SHAPES,
+))

@@ -1,0 +1,30 @@
+"""DeepSeekMoE-16B [arXiv:2401.06066]: 2 shared + 64 routed experts, top-6, fine-grained."""
+
+from repro.configs.base import (
+    ANNS_SHAPES,
+    ArchSpec,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    register,
+)
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import LMConfig
+
+register(ArchSpec(
+    arch_id="deepseek-moe-16b",
+    family="lm",
+    source="arXiv:2401.06066; hf",
+    make_config=lambda: LMConfig(
+        name="deepseek-moe-16b", n_layers=28, d_model=2048, n_heads=16,
+        kv_heads=16, d_ff=1408, vocab=102400, n_experts=64, top_k=6,
+        n_shared=2, dtype="bfloat16", remat=True,
+    ),
+    make_smoke_config=lambda: LMConfig(
+        name="deepseek-moe-16b-smoke", n_layers=2, d_model=64, n_heads=4,
+        kv_heads=4, d_ff=32, vocab=512, n_experts=8, top_k=2, n_shared=2,
+    ),
+    shapes=LM_SHAPES,
+    notes="fine-grained MoE: 2 shared + 64 routed, top-6",
+))

@@ -1,0 +1,28 @@
+"""Mistral-Large 123B dense decoder (88L, d=12288)."""
+
+from repro.configs.base import (
+    ANNS_SHAPES,
+    ArchSpec,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    register,
+)
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import LMConfig
+
+register(ArchSpec(
+    arch_id="mistral-large-123b",
+    family="lm",
+    source="hf:mistralai/Mistral-Large-Instruct-2407 (unverified)",
+    make_config=lambda: LMConfig(
+        name="mistral-large-123b", n_layers=88, d_model=12288, n_heads=96,
+        kv_heads=8, d_ff=28672, vocab=32768, dtype="bfloat16", remat=True,
+    ),
+    make_smoke_config=lambda: LMConfig(
+        name="mistral-large-smoke", n_layers=2, d_model=96, n_heads=6,
+        kv_heads=2, d_ff=256, vocab=512,
+    ),
+    shapes=LM_SHAPES,
+))

@@ -1,0 +1,31 @@
+"""NequIP O(3)-equivariant interatomic potential [arXiv:2101.03164]."""
+
+from repro.configs.base import (
+    ANNS_SHAPES,
+    ArchSpec,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    register,
+)
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import LMConfig
+
+register(ArchSpec(
+    arch_id="nequip",
+    family="gnn",
+    source="arXiv:2101.03164",
+    make_config=lambda: GNNConfig(
+        name="nequip", n_layers=5, d_hidden=32, l_max=2, n_rbf=8,
+        cutoff=5.0,
+    ),
+    make_smoke_config=lambda: GNNConfig(
+        name="nequip-smoke", n_layers=2, d_hidden=8, l_max=2, n_rbf=4,
+        cutoff=3.0,
+    ),
+    shapes=GNN_SHAPES,
+    notes="O(3)-equivariant tensor products in Cartesian basis "
+          "(DESIGN.md §2); ANNS technique inapplicable to the energy task "
+          "— arch implemented without it (DESIGN.md §4).",
+))

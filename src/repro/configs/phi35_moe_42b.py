@@ -1,0 +1,30 @@
+"""Phi-3.5-MoE 42B (6.6B active): 16 experts top-2, GQA kv=8."""
+
+from repro.configs.base import (
+    ANNS_SHAPES,
+    ArchSpec,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    register,
+)
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import LMConfig
+
+register(ArchSpec(
+    arch_id="phi3.5-moe-42b-a6.6b",
+    family="lm",
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+    make_config=lambda: LMConfig(
+        name="phi3.5-moe-42b", n_layers=32, d_model=4096, n_heads=32,
+        kv_heads=8, d_ff=6400, vocab=32064, n_experts=16, top_k=2,
+        dtype="bfloat16", remat=True,
+    ),
+    make_smoke_config=lambda: LMConfig(
+        name="phi3.5-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+        kv_heads=2, d_ff=64, vocab=512, n_experts=4, top_k=2,
+    ),
+    shapes=LM_SHAPES,
+    notes="16 experts top-2, GQA kv=8",
+))

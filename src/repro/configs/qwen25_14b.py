@@ -1,0 +1,30 @@
+"""Qwen2.5-14B dense decoder, GQA kv=8 with QKV bias."""
+
+from repro.configs.base import (
+    ANNS_SHAPES,
+    ArchSpec,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    register,
+)
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import LMConfig
+
+register(ArchSpec(
+    arch_id="qwen2.5-14b",
+    family="lm",
+    source="hf:Qwen/Qwen2.5-14B",
+    make_config=lambda: LMConfig(
+        name="qwen2.5-14b", n_layers=48, d_model=5120, n_heads=40,
+        kv_heads=8, d_ff=13824, vocab=152064, qkv_bias=True,
+        dtype="bfloat16", remat=True,
+    ),
+    make_smoke_config=lambda: LMConfig(
+        name="qwen2.5-smoke", n_layers=2, d_model=64, n_heads=4,
+        kv_heads=2, d_ff=128, vocab=512, qkv_bias=True,
+    ),
+    shapes=LM_SHAPES,
+    notes="GQA with QKV bias",
+))

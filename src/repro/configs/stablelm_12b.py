@@ -1,0 +1,28 @@
+"""StableLM-2-12B dense decoder, GQA kv=8."""
+
+from repro.configs.base import (
+    ANNS_SHAPES,
+    ArchSpec,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    register,
+)
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import LMConfig
+
+register(ArchSpec(
+    arch_id="stablelm-12b",
+    family="lm",
+    source="hf:stabilityai/stablelm-2-12b",
+    make_config=lambda: LMConfig(
+        name="stablelm-12b", n_layers=40, d_model=5120, n_heads=32,
+        kv_heads=8, d_ff=13824, vocab=100352, dtype="bfloat16", remat=True,
+    ),
+    make_smoke_config=lambda: LMConfig(
+        name="stablelm-smoke", n_layers=2, d_model=64, n_heads=4,
+        kv_heads=2, d_ff=128, vocab=512,
+    ),
+    shapes=LM_SHAPES,
+))

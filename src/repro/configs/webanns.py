@@ -1,0 +1,30 @@
+"""The paper's own config: WebANNS HNSW engine over a Wiki-480k-like payload."""
+
+from repro.configs.base import (
+    ANNS_SHAPES,
+    ArchSpec,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    register,
+)
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+from repro.models.transformer import LMConfig
+
+register(ArchSpec(
+    arch_id="webanns",
+    family="anns",
+    source="SIGIR'25 (this paper)",
+    make_config=lambda: {
+        "M": 16, "ef_construction": 200, "ef_search": 64, "k": 10,
+        "dim": 768, "metric": "l2",
+    },
+    make_smoke_config=lambda: {
+        "M": 8, "ef_construction": 40, "ef_search": 32, "k": 5,
+        "dim": 32, "metric": "l2",
+    },
+    shapes=ANNS_SHAPES,
+    notes="Wiki-480k-like payload (768-d embeddings), sharded over the "
+          "mesh data axis; see core/distributed.py.",
+))

@@ -1,0 +1,3 @@
+"""WebANNS core: the paper's contribution as a composable JAX module."""
+
+from repro.core.graph import HNSWGraph, PAD  # noqa: F401

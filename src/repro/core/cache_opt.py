@@ -1,0 +1,211 @@
+"""Heuristic cache-size optimization (paper §3.4, Algorithm 2) + rollback.
+
+The optimizer treats the query process as a black box. Starting from the
+maximum memory size ``C0`` it runs a query test, computes the access
+budget θ from the latency model (Eq. 2), and picks the next candidate size
+by intersecting the secant from the measured point ``X_i = (C_i, n_db)``
+through the extreme point ``A = (1, n_Q)`` with the line ``y = θ``. The
+real fetch curve is bracketed between the random-fetch line (Eq. 3) and
+the optimal-fetch hyperbola (Eq. 4), so the secant underestimates how far
+the cache can shrink — each step is safe, and steps shrink geometrically
+(the paper's two convergence observations).
+
+θ setting (both of the paper's methods, combined by min):
+    θ_pct = p · T_query / t_db         (external time ≤ p of total)
+    θ_abs = T_θ / t_db                 (external time ≤ T_θ seconds)
+
+Rollback: the optimizer records the (C_i, θ_i) ladder; if a live query at
+C_i exceeds θ_i the manager rolls back to C_{i-1}, repeating up to C_0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QueryTestStats:
+    """Aggregates from one QUERY_TEST run at a candidate cache size."""
+
+    n_db: float  # mean external accesses per query
+    n_q: float  # mean query-path length |Q| per query
+    t_query: float  # mean total query time (s)
+    t_db: float  # mean time of a single external access (s)
+
+
+@dataclasses.dataclass
+class CacheOptStep:
+    c: int
+    theta: float
+    stats: QueryTestStats
+    accepted: bool
+
+
+@dataclasses.dataclass
+class CacheOptResult:
+    c_best: int
+    c0: int
+    steps: List[CacheOptStep]
+
+    @property
+    def ladder(self) -> List[Tuple[int, float]]:
+        """(C_i, θ_i) pairs of accepted sizes, descending C."""
+        return [(s.c, s.theta) for s in self.steps if s.accepted]
+
+    def saved_fraction(self) -> float:
+        return 1.0 - self.c_best / max(self.c0, 1)
+
+
+def get_theta(
+    p: float, t_theta: float, t_query: float, t_db: float
+) -> float:
+    """θ = min(p·T_query/t_db, T_θ/t_db) — both of the paper's methods."""
+    if t_db <= 0:
+        return float("inf")
+    theta_pct = p * t_query / t_db
+    theta_abs = t_theta / t_db
+    return min(theta_pct, theta_abs)
+
+
+def optimize_memory_size(
+    query_test: Callable[[int], QueryTestStats],
+    c0: int,
+    p: float = 0.8,
+    t_theta: float = 0.1,
+    max_iters: int = 32,
+) -> CacheOptResult:
+    """Algorithm 2: OPTIMIZE_MEMORY_SIZE.
+
+    ``query_test(C)`` must resize the cache to C items, run the probe
+    query set, and return the aggregate stats.
+    """
+    c_best = c0
+    c_test = c0
+    steps: List[CacheOptStep] = []
+    for _ in range(max_iters):
+        if not (0 < c_test <= c0):
+            break
+        stats = query_test(c_test)
+        theta = get_theta(p, t_theta, stats.t_query, stats.t_db)
+        if stats.n_db > theta:
+            steps.append(CacheOptStep(c_test, theta, stats, accepted=False))
+            break  # over the threshold → C_best stands
+        c_best = c_test
+        steps.append(CacheOptStep(c_test, theta, stats, accepted=True))
+        # secant through A = (1, n_Q): k = (n_Q - n_db) / (1 - C_test)
+        denom = 1.0 - c_test
+        if denom == 0:
+            break
+        k = (stats.n_q - stats.n_db) / denom
+        if k >= 0:
+            # curve is flat or rising toward small C measured as non-
+            # increasing accesses — no constraint from θ; stop.
+            break
+        c_next = math.ceil((theta - stats.n_q) / k + 1)
+        c_next = min(c_next, c_test - 1)  # guarantee progress
+        if c_next < 1:
+            c_next = 1
+            if c_test == 1:
+                break
+        c_test = c_next
+    return CacheOptResult(c_best=c_best, c0=c0, steps=steps)
+
+
+class RollbackManager:
+    """Paper §3.4 'Rollback of memory size'.
+
+    Tracks the accepted ladder {(C_0, θ_0), (C_1, θ_1), ...} (descending
+    C). ``observe`` is called with each live query's n_db; if it exceeds
+    the current θ, memory rolls back one rung (toward C_0).
+    """
+
+    def __init__(
+        self, ladder: List[Tuple[int, float]], resize: Callable[[int], None]
+    ):
+        if not ladder:
+            raise ValueError("empty ladder")
+        self.ladder = list(ladder)  # index 0 = C_0 (largest)
+        self.resize = resize
+        self.idx = len(self.ladder) - 1  # start at the optimized size
+
+    @property
+    def current(self) -> Tuple[int, float]:
+        return self.ladder[self.idx]
+
+    def observe(self, n_db: float) -> bool:
+        """Returns True if a rollback happened."""
+        _, theta = self.current
+        if n_db > theta and self.idx > 0:
+            self.idx -= 1
+            self.resize(self.ladder[self.idx][0])
+            return True
+        return False
+
+
+# ----------------------------------------------------- closed-form curves
+
+
+def n_db_random(n_mem: float, n_q: float, n: float) -> float:
+    """Eq. 3: random fetching — n_db linear in n_mem."""
+    if n_mem >= n:
+        return 1.0
+    return (1.0 - n_q) / (n - 1.0) * n_mem + (n * n_q - 1.0) / (n - 1.0)
+
+
+def n_db_optimal(n_mem: float, n_q: float) -> float:
+    """Eq. 4: optimal fetching — n_db = ceil(|Q| / n_mem)."""
+    if n_mem >= n_q:
+        return 1.0
+    return float(math.ceil(n_q / n_mem))
+
+
+def simulate_n_db(
+    path: np.ndarray,
+    n_items: int,
+    n_mem: int,
+    strategy: str = "random",
+    rng: Optional[np.random.Generator] = None,
+) -> int:
+    """Simulate external accesses along a query path under a fetch strategy.
+
+    'random'  — the proof model behind Eq. 3: on a miss of D_i, one access
+                loads D_i plus (n_mem - 1) uniformly random items, replacing
+                the cache contents wholesale.
+    'optimal' — the proof model behind Eq. 4: on a miss at position i, one
+                access loads the next n_mem items of the path.
+    'lazy'    — WebANNS per-phase batching upper bound for a linear path:
+                misses accumulate to at most ``ef`` before one access; here
+                approximated as optimal (the engine itself is measured in
+                the integration tests, not simulated).
+    """
+    rng = rng or np.random.default_rng(0)
+    path = np.asarray(path)
+    if n_mem >= n_items and strategy == "random":
+        return 1
+    n_db = 0
+    if strategy == "random":
+        cache: set = set()
+        for x in path:
+            if int(x) not in cache:
+                n_db += 1
+                fill = rng.choice(n_items, size=min(n_mem, n_items) - 1,
+                                  replace=False)
+                cache = set(fill.tolist())
+                cache.add(int(x))
+        return n_db
+    if strategy in ("optimal", "lazy"):
+        i = 0
+        cache = set()
+        while i < len(path):
+            if int(path[i]) in cache:
+                i += 1
+                continue
+            n_db += 1
+            cache = set(int(v) for v in path[i : i + n_mem])
+            i += 1
+        return n_db
+    raise ValueError(strategy)

@@ -1,0 +1,60 @@
+"""Distance computations for the online query path (JAX).
+
+Small, per-hop distance batches (``(deg, d)`` against one query) are plain
+``jnp`` — they are latency-bound and fuse into the search loop. Bulk paths
+(brute-force scoring, shard scans, phase-2 lazy-load re-ranks) route
+through the Pallas kernels in :mod:`repro.kernels` via
+:func:`bulk_distance` when available.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Metric = str  # 'l2' | 'ip' | 'cos'
+
+
+def point_distance(x: jnp.ndarray, q: jnp.ndarray, metric: Metric) -> jnp.ndarray:
+    """Distance between batched points ``x`` (..., d) and query ``q`` (d,)."""
+    if metric == "l2":
+        diff = x - q
+        return jnp.sum(diff * diff, axis=-1)
+    if metric == "ip":
+        return -jnp.sum(x * q, axis=-1)
+    if metric == "cos":
+        xn = jnp.linalg.norm(x, axis=-1) + 1e-30
+        qn = jnp.linalg.norm(q) + 1e-30
+        return -jnp.sum(x * q, axis=-1) / (xn * qn)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def distance_matrix(
+    Q: jnp.ndarray, X: jnp.ndarray, metric: Metric
+) -> jnp.ndarray:
+    """(nq, d) x (n, d) -> (nq, n) distances, MXU-friendly matmul form."""
+    G = Q @ X.T
+    if metric == "l2":
+        qn = jnp.sum(Q * Q, axis=-1)
+        xn = jnp.sum(X * X, axis=-1)
+        return jnp.maximum(qn[:, None] + xn[None, :] - 2.0 * G, 0.0)
+    if metric == "ip":
+        return -G
+    if metric == "cos":
+        qn = jnp.linalg.norm(Q, axis=-1) + 1e-30
+        xn = jnp.linalg.norm(X, axis=-1) + 1e-30
+        return -G / (qn[:, None] * xn[None, :])
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def brute_force_topk(
+    Q: jnp.ndarray, X: jnp.ndarray, k: int, metric: Metric = "l2"
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact top-k oracle: returns (dists (nq,k), ids (nq,k))."""
+    D = distance_matrix(Q, X, metric)
+    neg, ids = jax.lax.top_k(-D, k)
+    return -neg, ids

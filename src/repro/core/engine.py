@@ -1,0 +1,315 @@
+"""WebANNS engine: public API + the host-driven phased-lazy query driver.
+
+This mirrors the paper's execution split exactly (§3.2, Fig. 5): the
+compute-heavy search phases are compiled (jitted — our "Wasm"), while
+fetches from tier 3 are host-side calls orchestrated by the Python driver
+(our "JavaScript bridge"). One driver iteration = one ❶–❻ round trip of
+the paper's execution-model coordination, except the signal/event-loop
+dance is unnecessary on the host — the JAX dispatch boundary plays that
+role.
+
+Engine modes (paper §4.2 baselines):
+
+- ``webanns``       — full system: phased lazy loading + heuristic cache
+                      sizing hooks + compiled compute.
+- ``webanns-base``  — compiled compute + three-tier cache, but *eager*
+                      fetches (every expansion's misses fetched
+                      immediately, no lazy list) and no cache optimizer.
+- ``mememo``        — the SIGIR'24 baseline: heuristic neighbor prefetch
+                      (BFS over the current layer, up to ``prefetch_size``
+                      items per miss) + fixed cache; see
+                      :mod:`repro.core.mememo`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as S
+from repro.core.graph import PAD, HNSWGraph
+from repro.core.hnsw import build_hnsw
+from repro.core.store import (
+    CacheState,
+    ExternalStore,
+    TieredStore,
+    cache_lookup,
+)
+
+
+@dataclasses.dataclass
+class QueryStats:
+    """Per-query decomposition behind Eq. 2: T = |Q|·t_in_mem + n_db·t_db."""
+
+    n_visited: int = 0  # |Q|: unique items visited on the search path
+    n_dist: int = 0  # distance evaluations
+    n_hops: int = 0  # beam expansions
+    n_db: int = 0  # external accesses during this query
+    items_fetched: int = 0
+    t_in_mem: float = 0.0  # host+device compute wall time
+    t_db: float = 0.0  # modeled external-access time
+
+    @property
+    def t_query(self) -> float:
+        return self.t_in_mem + self.t_db
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    mode: str = "webanns"  # 'webanns' | 'webanns-base'
+    metric: str = "l2"
+    ef_search: int = 64
+    ef_upper: int = 1  # beam width on upper layers (HNSW standard: 1)
+    cache_capacity: Optional[int] = None  # items; None = dataset size
+    eviction: str = "fifo"
+    # external-store cost model (see store.ExternalStore)
+    t_setup: float = 1.0e-3
+    t_per_item: float = 2.0e-6
+    simulate_latency: bool = False
+    max_phases: int = 10000  # safety bound on lazy phase loop
+    # fused=True runs the WHOLE lazy query (phases + bulk loads + cache
+    # updates) as one jitted program (search.lazy_knn_search_fused) with
+    # the tier-3 payload device-resident — the TPU-native endpoint;
+    # False = host-driven phase loop (the paper's Wasm/JS split).
+    fused: bool = False
+
+
+# --------------------------------------------------------------- jit phases
+# Cache state is an explicit argument so phases trace once per (shape, ef).
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ef", "metric")
+)
+def _seed_cached(q, entry_ids, cache: CacheState, ef: int, miss_cap_arr,
+                 metric: str):
+    n = cache.slot_of.shape[0]
+    state = S.make_state(ef, miss_cap_arr.shape[0], n)
+    lookup = lambda ids: cache_lookup(cache, ids)
+    return S.seed_state(state, q, entry_ids, lookup, metric)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "ef_trigger")
+)
+def _phase_cached(q, neighbors_l, state: S.SearchState, cache: CacheState,
+                  metric: str, ef_trigger: int):
+    lookup = lambda ids: cache_lookup(cache, ids)
+    return S.search_phase(
+        q, neighbors_l, state, lookup, metric, ef_trigger=ef_trigger
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _load_cached(q, state: S.SearchState, loaded_ids, loaded_vecs,
+                 metric: str):
+    return S.load_phase(q, state, loaded_ids, loaded_vecs, metric)
+
+
+class WebANNSEngine:
+    """Build / load / query API over the three-tier store."""
+
+    def __init__(
+        self,
+        vectors: np.ndarray,
+        graph: HNSWGraph,
+        config: Optional[EngineConfig] = None,
+        texts: Optional[List[str]] = None,
+    ):
+        self.config = config or EngineConfig()
+        vectors = np.asarray(vectors, dtype=np.float32)
+        self.graph = graph
+        self.n, self.dim = vectors.shape
+        cap = self.config.cache_capacity or self.n
+        self.external = ExternalStore(
+            vectors,
+            t_setup=self.config.t_setup,
+            t_per_item=self.config.t_per_item,
+            simulate_latency=self.config.simulate_latency,
+        )
+        self.store = TieredStore(self.external, cap, self.config.eviction)
+        self.neighbors = jnp.asarray(graph.neighbors)
+        # Text-embedding separation (paper §4.1): texts live in a separate
+        # id-indexed store, never loaded during queries.
+        self.doc_store = DocStore(texts) if texts is not None else None
+        self._miss_cap = self.config.ef_search + graph.max_degree + 1
+
+    # ----------------------------------------------------------- factory
+
+    @classmethod
+    def build(
+        cls,
+        vectors: np.ndarray,
+        M: int = 16,
+        ef_construction: int = 200,
+        config: Optional[EngineConfig] = None,
+        texts: Optional[List[str]] = None,
+        seed: int = 0,
+    ) -> "WebANNSEngine":
+        config = config or EngineConfig()
+        g = build_hnsw(
+            vectors, M=M, ef_construction=ef_construction,
+            metric=config.metric, seed=seed,
+        )
+        return cls(vectors, g, config, texts)
+
+    # ------------------------------------------------------------ sizing
+
+    def resize_cache(self, capacity: int) -> None:
+        self.store.resize(int(capacity))
+
+    def warm_cache(self, ids: Optional[np.ndarray] = None) -> None:
+        if ids is None:
+            ids = np.arange(min(self.store.capacity, self.n))
+        self.store.warm(ids)
+
+    def cache_bytes(self) -> int:
+        return self.store.capacity * self.dim * 4
+
+    # ------------------------------------------------------------- query
+
+    def _lazy_layer(
+        self, q: jnp.ndarray, layer: int, entry_ids: np.ndarray, ef: int,
+        stats: QueryStats, eager: bool,
+    ) -> S.SearchState:
+        """Run one layer with phased lazy loading (or eager fetches)."""
+        cfg = self.config
+        miss_cap = ef + self.graph.max_degree + 1
+        dummy = jnp.zeros((miss_cap,), jnp.int32)
+        entry_np = np.full(max(len(entry_ids), 1), -1, np.int32)
+        entry_np[: len(entry_ids)] = entry_ids
+        state = _seed_cached(
+            q, jnp.asarray(entry_np), self.store.cache, ef, dummy, cfg.metric
+        )
+        # eager mode (webanns-base): trigger=1 → flush L after every miss
+        trigger = 1 if eager else ef
+        from repro.core.store import EVICT_LRU, cache_touch
+
+        for _ in range(cfg.max_phases):
+            t0 = time.perf_counter()
+            state = _phase_cached(
+                q, self.neighbors[layer], state, self.store.cache,
+                cfg.metric, trigger,
+            )
+            mc = int(state.miss_count)
+            if self.store.eviction == EVICT_LRU:
+                # phase-boundary touch: the beam approximates the
+                # recently-used set (in-phase hits can't touch in-graph)
+                self.store.cache = cache_touch(
+                    self.store.cache, state.beam.ids
+                )
+            stats.t_in_mem += time.perf_counter() - t0
+            if mc == 0:
+                break
+            # ONE tier-3 access for the whole lazy list (Alg. 1 line 24)
+            miss_ids = np.asarray(state.miss_ids[:mc])
+            db0 = self.external.stats.n_db
+            vecs = self.store.gather(miss_ids)
+            stats.n_db += self.external.stats.n_db - db0
+            stats.items_fetched += len(miss_ids)
+            # pad host-side (fixed shapes → zero eager-op compiles)
+            padded_ids = np.full((miss_cap,), -1, np.int32)
+            padded_ids[:mc] = miss_ids
+            padded_vecs = np.zeros((miss_cap, self.dim), np.float32)
+            padded_vecs[:mc] = vecs
+            t0 = time.perf_counter()
+            state = _load_cached(
+                q, state, jnp.asarray(padded_ids), jnp.asarray(padded_vecs),
+                cfg.metric,
+            )
+            stats.t_in_mem += time.perf_counter() - t0
+        return state
+
+    def _query_fused(
+        self, q: np.ndarray, k: int, ef: int
+    ) -> Tuple[np.ndarray, np.ndarray, QueryStats]:
+        cfg = self.config
+        stats = QueryStats()
+        if not hasattr(self, "_table_dev"):
+            self._table_dev = jnp.asarray(self.external.vectors)
+        t0 = time.perf_counter()
+        dists, ids, (n_db, n_fetch), cache = S.lazy_knn_search_fused(
+            jnp.asarray(q, jnp.float32), self._table_dev, self.neighbors,
+            jnp.asarray(self.graph.entry_point, jnp.int32),
+            self.store.cache, k=k, ef=ef, metric=cfg.metric,
+            eviction=self.store.eviction,
+        )
+        ids.block_until_ready()
+        stats.t_in_mem = time.perf_counter() - t0
+        self.store.cache = cache
+        stats.n_db = int(n_db)
+        stats.items_fetched = int(n_fetch)
+        # apply the external-access cost model analytically
+        stats.t_db = stats.n_db * cfg.t_setup \
+            + stats.items_fetched * cfg.t_per_item
+        self.external.stats.n_db += stats.n_db
+        self.external.stats.items_fetched += stats.items_fetched
+        self.external.stats.items_used += stats.items_fetched  # lazy: R=0
+        self.external.stats.modeled_time += stats.t_db
+        stats.n_visited = stats.items_fetched  # lower bound (hits uncounted)
+        return np.asarray(ids), np.asarray(dists), stats
+
+    def query(
+        self, q: np.ndarray, k: int = 10, ef: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray, QueryStats]:
+        """Top-k query through the tiered store. Returns (ids, dists, stats)."""
+        cfg = self.config
+        ef = ef or cfg.ef_search
+        if cfg.fused and cfg.mode == "webanns":
+            return self._query_fused(q, k, ef or cfg.ef_search)
+        eager = cfg.mode == "webanns-base"
+        stats = QueryStats()
+        qj = jnp.asarray(q, jnp.float32)
+        t_db0 = self.external.stats.modeled_time
+        entry = np.array([self.graph.entry_point], np.int32)
+        # upper layers: beam of ef_upper (greedy for 1), lazily loaded too
+        for lc in range(self.graph.max_level, 0, -1):
+            st = self._lazy_layer(qj, lc, entry, cfg.ef_upper, stats, eager)
+            best = np.asarray(st.beam.ids[: cfg.ef_upper])
+            entry = best[best >= 0][:1] if (best >= 0).any() else entry
+            stats.n_hops += int(st.n_hops)
+            stats.n_dist += int(st.n_dist)
+        st = self._lazy_layer(qj, 0, entry, max(ef, k), stats, eager)
+        stats.n_hops += int(st.n_hops)
+        stats.n_dist += int(st.n_dist)
+        stats.n_visited = stats.n_dist  # every visited id gets a distance
+        stats.t_db = self.external.stats.modeled_time - t_db0
+        ids = np.asarray(st.beam.ids[:k])
+        dists = np.asarray(st.beam.dists[:k])
+        self.external.mark_used(0)  # no-op; counters already updated
+        return ids, dists, stats
+
+    def query_batch(
+        self, Q: np.ndarray, k: int = 10, ef: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray, List[QueryStats]]:
+        out_i, out_d, out_s = [], [], []
+        for q in Q:
+            i, d, s = self.query(q, k, ef)
+            out_i.append(i)
+            out_d.append(d)
+            out_s.append(s)
+        return np.stack(out_i), np.stack(out_d), out_s
+
+    def get_texts(self, ids: np.ndarray) -> List[Optional[str]]:
+        if self.doc_store is None:
+            return [None] * len(ids)
+        return self.doc_store.get(ids)
+
+
+class DocStore:
+    """Id → text store, kept separate from embeddings (paper §4.1)."""
+
+    def __init__(self, texts: List[str]):
+        self._texts = list(texts)
+
+    def get(self, ids) -> List[Optional[str]]:
+        out = []
+        for i in np.asarray(ids).tolist():
+            out.append(self._texts[i] if 0 <= i < len(self._texts) else None)
+        return out

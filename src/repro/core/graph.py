@@ -1,0 +1,152 @@
+"""Flat, padded HNSW graph arrays.
+
+The HNSW index is stored as dense, statically-shaped arrays so the online
+query path can be jitted/vmapped on TPU:
+
+- ``neighbors``: ``(n_layers, N, max_degree) int32``; entry ``-1`` = padding.
+  Layer 0 allows up to ``2*M`` links (HNSW convention), upper layers ``M``;
+  all layers are padded to ``max_degree = 2*M``.
+- ``levels``: ``(N,) int32`` — highest layer each node appears in.
+- ``entry_point`` / ``max_level``: search entry state.
+
+This mirrors the paper's offline index construction (WebANNS builds the
+HNSW graph offline in a service worker and persists it to IndexedDB); here
+the persisted artifact is a set of ``.npy`` shards loadable in chunks
+(paper §4.1 "streaming data loading").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+PAD = -1  # sentinel for absent neighbor slots
+
+
+@dataclasses.dataclass
+class HNSWGraph:
+    """Immutable flat HNSW graph (construction output, query input)."""
+
+    neighbors: np.ndarray  # (n_layers, N, max_degree) int32, PAD-padded
+    levels: np.ndarray  # (N,) int32
+    entry_point: int
+    max_level: int
+    M: int  # construction connectivity parameter
+    metric: str = "l2"  # 'l2' | 'ip' | 'cos'
+
+    @property
+    def n_layers(self) -> int:
+        return int(self.neighbors.shape[0])
+
+    @property
+    def size(self) -> int:
+        return int(self.neighbors.shape[1])
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.neighbors.shape[2])
+
+    def degree(self, layer: int, node: int) -> int:
+        row = self.neighbors[layer, node]
+        return int((row != PAD).sum())
+
+    def layer_nodes(self, layer: int) -> np.ndarray:
+        """Ids of nodes present at ``layer``."""
+        return np.nonzero(self.levels >= layer)[0]
+
+    def validate(self) -> None:
+        """Cheap structural invariants (used by tests)."""
+        L, N, D = self.neighbors.shape
+        assert self.levels.shape == (N,)
+        assert 0 <= self.entry_point < N
+        assert self.max_level == int(self.levels.max())
+        assert L == self.max_level + 1
+        assert int(self.levels[self.entry_point]) == self.max_level
+        # neighbor ids in range; no self loops; links only between nodes
+        # that exist at that layer.
+        for l in range(L):
+            nb = self.neighbors[l]
+            ok = (nb == PAD) | ((nb >= 0) & (nb < N))
+            assert ok.all(), f"layer {l}: neighbor id out of range"
+            rows = np.nonzero(self.levels >= l)[0]
+            absent = np.nonzero(self.levels < l)[0]
+            if absent.size:
+                assert (nb[absent] == PAD).all(), (
+                    f"layer {l}: node below layer has links"
+                )
+            for i in rows[: min(64, rows.size)]:  # spot-check self loops
+                assert i not in nb[i][nb[i] != PAD], f"self loop at {i}"
+
+    # ---------------------------------------------------------------- io
+
+    def save(self, path: str, shard_bytes: int = 64 * 1024 * 1024) -> None:
+        """Persist as chunked shards + manifest (streaming-load friendly)."""
+        os.makedirs(path, exist_ok=True)
+        manifest = {
+            "entry_point": int(self.entry_point),
+            "max_level": int(self.max_level),
+            "M": int(self.M),
+            "metric": self.metric,
+            "n_layers": self.n_layers,
+            "N": self.size,
+            "max_degree": self.max_degree,
+            "shards": [],
+        }
+        flat = self.neighbors.reshape(self.n_layers, -1)
+        rows_per_shard = max(1, shard_bytes // max(1, flat.shape[1] * 4))
+        for l in range(self.n_layers):
+            layer_shards = []
+            nb = self.neighbors[l]
+            for s, start in enumerate(range(0, nb.shape[0], rows_per_shard * 1)):
+                stop = min(nb.shape[0], start + rows_per_shard)
+                fn = f"neighbors_l{l}_s{s}.npy"
+                np.save(os.path.join(path, fn), nb[start:stop])
+                layer_shards.append({"file": fn, "start": start, "stop": stop})
+            manifest["shards"].append(layer_shards)
+        np.save(os.path.join(path, "levels.npy"), self.levels)
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+
+    @classmethod
+    def load(cls, path: str) -> "HNSWGraph":
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        L, N, D = manifest["n_layers"], manifest["N"], manifest["max_degree"]
+        neighbors = np.full((L, N, D), PAD, dtype=np.int32)
+        for l, layer_shards in enumerate(manifest["shards"]):
+            for sh in layer_shards:  # chunked ("streaming") load
+                neighbors[l, sh["start"] : sh["stop"]] = np.load(
+                    os.path.join(path, sh["file"])
+                )
+        levels = np.load(os.path.join(path, "levels.npy"))
+        return cls(
+            neighbors=neighbors,
+            levels=levels,
+            entry_point=manifest["entry_point"],
+            max_level=manifest["max_level"],
+            M=manifest["M"],
+            metric=manifest["metric"],
+        )
+
+
+def empty_graph(n: int, max_level: int, M: int, metric: str = "l2") -> HNSWGraph:
+    return HNSWGraph(
+        neighbors=np.full((max_level + 1, n, 2 * M), PAD, dtype=np.int32),
+        levels=np.zeros(n, dtype=np.int32),
+        entry_point=0,
+        max_level=max_level,
+        M=M,
+        metric=metric,
+    )
+
+
+def random_levels(n: int, M: int, rng: np.random.Generator) -> np.ndarray:
+    """HNSW level assignment: P(level >= l) = exp(-l / mL), mL = 1/ln(M)."""
+    m_l = 1.0 / np.log(M)
+    u = rng.random(n)
+    lv = np.floor(-np.log(u) * m_l).astype(np.int32)
+    return lv

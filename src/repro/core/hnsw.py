@@ -1,0 +1,323 @@
+"""Offline HNSW index construction (NumPy).
+
+The paper (§3.1) builds the HNSW graph *offline* (in a service worker) and
+persists it; only the *online query path* is latency-critical and runs on
+the accelerated tier. We mirror that split: construction is a faithful
+NumPy implementation of Malkov & Yashunin's algorithms 1/3/4/5 (INSERT,
+SEARCH-LAYER, SELECT-NEIGHBORS-HEURISTIC, KNN-SEARCH); the online path
+lives in :mod:`repro.core.search` as jittable JAX.
+
+Distances are batched through NumPy BLAS so construction of the test- and
+benchmark-scale indices (1e3–1e5 vectors) stays fast without sacrificing
+algorithmic fidelity.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import PAD, HNSWGraph, empty_graph, random_levels
+
+
+# --------------------------------------------------------------- distances
+
+
+def pairwise_distance(
+    X: np.ndarray, q: np.ndarray, metric: str = "l2"
+) -> np.ndarray:
+    """Distance from query ``q`` (d,) to each row of ``X`` (k, d).
+
+    'l2'  : squared euclidean (monotonic in euclidean; HNSW only compares)
+    'ip'  : negative inner product (so smaller = more similar)
+    'cos' : negative cosine similarity
+    """
+    if X.ndim == 1:
+        X = X[None, :]
+    if metric == "l2":
+        diff = X - q[None, :]
+        return np.einsum("kd,kd->k", diff, diff)
+    if metric == "ip":
+        return -(X @ q)
+    if metric == "cos":
+        xn = np.linalg.norm(X, axis=-1) + 1e-30
+        qn = np.linalg.norm(q) + 1e-30
+        return -(X @ q) / (xn * qn)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+class _VisitedPool:
+    """Reusable visited-set with O(1) reset via version stamping."""
+
+    def __init__(self, n: int):
+        self.stamp = np.zeros(n, dtype=np.int64)
+        self.version = 0
+
+    def fresh(self) -> "_VisitedPool":
+        self.version += 1
+        return self
+
+    def visit(self, ids) -> None:
+        self.stamp[ids] = self.version
+
+    def seen(self, ids) -> np.ndarray:
+        return self.stamp[ids] == self.version
+
+
+# ---------------------------------------------------------- layer search
+
+
+def search_layer_np(
+    X: np.ndarray,
+    neighbors_l: np.ndarray,
+    q: np.ndarray,
+    eps: Sequence[int],
+    ef: int,
+    metric: str,
+    visited: Optional[_VisitedPool] = None,
+) -> List[Tuple[float, int]]:
+    """SEARCH-LAYER (HNSW Alg. 2): returns up to ``ef`` nearest (dist, id),
+    sorted ascending by distance. Reference implementation, fully in-memory
+    (no cache model) — also the oracle for the lazy JAX search.
+    """
+    if visited is None:
+        visited = _VisitedPool(X.shape[0])
+    visited = visited.fresh()
+    eps = list(dict.fromkeys(int(e) for e in eps))
+    d0 = pairwise_distance(X[eps], q, metric)
+    visited.visit(eps)
+    # C: min-heap of candidates; W: max-heap (negated) of current best ef
+    C = [(float(d), int(e)) for d, e in zip(d0, eps)]
+    heapq.heapify(C)
+    W = [(-float(d), int(e)) for d, e in zip(d0, eps)]
+    heapq.heapify(W)
+    while len(W) > ef:
+        heapq.heappop(W)
+    while C:
+        dc, c = heapq.heappop(C)
+        df = -W[0][0]
+        if dc > df and len(W) >= ef:
+            break  # all elements in W evaluated
+        nbrs = neighbors_l[c]
+        nbrs = nbrs[nbrs != PAD]
+        if nbrs.size == 0:
+            continue
+        new = nbrs[~visited.seen(nbrs)]
+        if new.size == 0:
+            continue
+        visited.visit(new)
+        dn = pairwise_distance(X[new], q, metric)
+        df = -W[0][0]
+        for d, e in zip(dn, new):
+            d = float(d)
+            if len(W) < ef or d < df:
+                heapq.heappush(C, (d, int(e)))
+                heapq.heappush(W, (-d, int(e)))
+                if len(W) > ef:
+                    heapq.heappop(W)
+                df = -W[0][0]
+    out = sorted((-d, i) for d, i in W)
+    return [(d, i) for d, i in out]
+
+
+def greedy_closest_np(
+    X: np.ndarray,
+    neighbors_l: np.ndarray,
+    q: np.ndarray,
+    ep: int,
+    metric: str,
+) -> int:
+    """Greedy ef=1 descent step used on upper layers."""
+    cur = int(ep)
+    cur_d = float(pairwise_distance(X[cur], q, metric)[0])
+    while True:
+        nbrs = neighbors_l[cur]
+        nbrs = nbrs[nbrs != PAD]
+        if nbrs.size == 0:
+            return cur
+        dn = pairwise_distance(X[nbrs], q, metric)
+        j = int(np.argmin(dn))
+        if dn[j] < cur_d:
+            cur, cur_d = int(nbrs[j]), float(dn[j])
+        else:
+            return cur
+
+
+# ------------------------------------------------------ neighbor selection
+
+
+def _dist_matrix(V: np.ndarray, metric: str) -> np.ndarray:
+    """All-pairs distances among rows of V (k, d) under ``metric``."""
+    G = V @ V.T
+    if metric == "l2":
+        n2 = np.einsum("kd,kd->k", V, V)
+        D = n2[:, None] + n2[None, :] - 2.0 * G
+        return np.maximum(D, 0.0)
+    if metric == "ip":
+        return -G
+    if metric == "cos":
+        nv = np.linalg.norm(V, axis=-1) + 1e-30
+        return -G / (nv[:, None] * nv[None, :])
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def select_neighbors_heuristic(
+    X: np.ndarray,
+    q: np.ndarray,
+    candidates: List[Tuple[float, int]],
+    M: int,
+    metric: str,
+) -> List[int]:
+    """SELECT-NEIGHBORS-HEURISTIC (HNSW Alg. 4), keepPruned=True.
+
+    Keeps a diverse neighbor set: candidate e is accepted only if it is
+    closer to q than to every already-selected neighbor. Candidate-to-
+    candidate distances are computed once as a matrix (one BLAS call)
+    instead of per-pair — same semantics, ~10x faster construction.
+    """
+    cand = sorted(candidates)
+    if len(cand) <= 1 or M >= len(cand):
+        return [e for _, e in cand[:M]]
+    ids = [e for _, e in cand]
+    d_q = [d for d, _ in cand]
+    D = _dist_matrix(X[ids], metric)
+    selected: List[int] = []
+    pruned: List[int] = []
+    for i in range(len(ids)):
+        if len(selected) >= M:
+            break
+        if not selected or d_q[i] < D[i, selected].min():
+            selected.append(i)
+        else:
+            pruned.append(i)
+    for i in pruned:  # keepPrunedConnections: fill with closest pruned
+        if len(selected) >= M:
+            break
+        selected.append(i)
+    return [ids[i] for i in selected]
+
+
+def select_neighbors_simple(
+    candidates: List[Tuple[float, int]], M: int
+) -> List[int]:
+    return [e for _, e in sorted(candidates)[:M]]
+
+
+# ------------------------------------------------------------ construction
+
+
+def build_hnsw(
+    X: np.ndarray,
+    M: int = 16,
+    ef_construction: int = 200,
+    metric: str = "l2",
+    seed: int = 0,
+    heuristic: bool = True,
+    levels: Optional[np.ndarray] = None,
+) -> HNSWGraph:
+    """Construct an HNSW graph over ``X`` (N, d). Faithful insert loop."""
+    X = np.asarray(X, dtype=np.float32)
+    N = X.shape[0]
+    if N == 0:
+        raise ValueError("empty dataset")
+    rng = np.random.default_rng(seed)
+    if levels is None:
+        levels = random_levels(N, M, rng)
+    levels = levels.astype(np.int32)
+    g = empty_graph(N, int(levels.max()), M, metric)
+    g.levels = levels
+    nb = g.neighbors  # (L, N, 2M) int32 view, mutated in place
+    deg = np.zeros((g.n_layers, N), dtype=np.int32)
+    visited = _VisitedPool(N)
+
+    entry, max_level = 0, int(levels[0])
+
+    def _add_link(l: int, a: int, b: int, m_max: int) -> None:
+        """Append link a->b; shrink with the selection rule if over m_max."""
+        da = deg[l, a]
+        if da < m_max:
+            nb[l, a, da] = b
+            deg[l, a] = da + 1
+            return
+        cur = nb[l, a, :da]
+        cand_ids = np.concatenate([cur, [b]])
+        dists = pairwise_distance(X[cand_ids], X[a], metric)
+        cand = list(zip(dists.tolist(), cand_ids.tolist()))
+        if heuristic:
+            keep = select_neighbors_heuristic(X, X[a], cand, m_max, metric)
+        else:
+            keep = select_neighbors_simple(cand, m_max)
+        nb[l, a, : len(keep)] = keep
+        nb[l, a, len(keep) :] = PAD
+        deg[l, a] = len(keep)
+
+    for i in range(1, N):
+        l_i = int(levels[i])
+        ep = entry
+        # greedy descent through layers above l_i
+        for lc in range(max_level, l_i, -1):
+            ep = greedy_closest_np(X, nb[lc], X[i], ep, metric)
+        eps = [ep]
+        for lc in range(min(l_i, max_level), -1, -1):
+            W = search_layer_np(
+                X, nb[lc], X[i], eps, ef_construction, metric, visited
+            )
+            m_max = 2 * M if lc == 0 else M
+            if heuristic:
+                sel = select_neighbors_heuristic(X, X[i], W, M, metric)
+            else:
+                sel = select_neighbors_simple(W, M)
+            for e in sel:
+                _add_link(lc, i, e, m_max)
+                _add_link(lc, e, i, m_max)
+            eps = [e for _, e in W]
+        if l_i > max_level:
+            entry, max_level = i, l_i
+            g.entry_point, g.max_level = entry, max_level
+
+    g.entry_point, g.max_level = entry, max_level
+    return g
+
+
+# ------------------------------------------------------------ knn search
+
+
+def knn_search_np(
+    X: np.ndarray,
+    g: HNSWGraph,
+    q: np.ndarray,
+    k: int,
+    ef: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """KNN-SEARCH (HNSW Alg. 5) — in-memory reference query path."""
+    ep = g.entry_point
+    for lc in range(g.max_level, 0, -1):
+        ep = greedy_closest_np(X, g.neighbors[lc], q, ep, g.metric)
+    W = search_layer_np(X, g.neighbors[0], q, [ep], max(ef, k), g.metric)
+    W = W[:k]
+    ids = np.array([i for _, i in W], dtype=np.int32)
+    dists = np.array([d for d, _ in W], dtype=np.float32)
+    return ids, dists
+
+
+def exact_search(
+    X: np.ndarray, q: np.ndarray, k: int, metric: str = "l2"
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Brute-force oracle."""
+    d = pairwise_distance(X, q, metric)
+    ids = np.argsort(d, kind="stable")[:k].astype(np.int32)
+    return ids, d[ids].astype(np.float32)
+
+
+def recall_at_k(
+    X: np.ndarray, g: HNSWGraph, queries: np.ndarray, k: int, ef: int
+) -> float:
+    hits, total = 0, 0
+    for q in queries:
+        approx, _ = knn_search_np(X, g, q, k, ef)
+        exact, _ = exact_search(X, q, k, g.metric)
+        hits += len(set(approx.tolist()) & set(exact.tolist()))
+        total += k
+    return hits / max(total, 1)

@@ -1,0 +1,488 @@
+"""Phased lazy-loading HNSW search (paper §3.3, Algorithm 1) in JAX.
+
+The search of one layer is a *beam search* over statically-shaped arrays —
+the standard fixed-shape reformulation of HNSW's SEARCH-LAYER in which the
+candidate heap ``C`` and result list ``W`` coincide as one sorted beam of
+size ``ef``. The two formulations explore the identical node set (the
+classic algorithm stops the moment the nearest unexplored candidate is
+worse than the furthest result, i.e. it also never explores anything
+outside the current beam), so recall is unchanged while every buffer gets
+a static shape — the property that makes the search jittable and
+vmappable on TPU.
+
+Lazy loading (the paper's contribution) appears as *phases*:
+
+- an **in-memory phase** (:func:`search_phase`) runs the beam search
+  against tier-2 lookups only; any missing neighbor id is appended to the
+  bounded miss list ``L`` and skipped (Algorithm 1 lines 14–16). The phase
+  ends when the beam is exhausted (inter-layer boundary, line 23) or when
+  ``|L| >= ef`` (intra-layer trigger, line 22).
+- a **load phase** fetches all of ``L`` in ONE tier-3 access, inserts into
+  tier 2, computes distances, and merges the loaded nodes into the beam as
+  unexplored candidates (lines 24–31). The ids were already marked visited
+  when first encountered, exactly as in the paper.
+
+The *driver* alternates phases until ``L`` drains. Two drivers exist:
+
+- :class:`repro.core.engine.WebANNSEngine` — host-driven, mirrors the
+  paper's Wasm(sync compute)/JS(async fetch) split: the phase function is
+  jitted, the fetch is a host call.
+- :mod:`repro.core.distributed` — fully-jitted: tier 3 is a mesh-sharded
+  array and the fetch is a collective gather inside ``lax.while_loop``
+  (the multi-pod dry-run target).
+
+Why this is the *natural* TPU formulation (see DESIGN.md §2): a traced
+search loop cannot make data-dependent host/remote fetches per miss; misses
+must be batched at phase boundaries — which is exactly what Algorithm 1
+prescribes for IndexedDB.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import point_distance
+from repro.core.graph import PAD
+
+INF = jnp.float32(jnp.inf)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Beam:
+    """Sorted candidate/result beam (C == W in the fixed-shape variant)."""
+
+    ids: jnp.ndarray  # (ef,) int32, -1 padded
+    dists: jnp.ndarray  # (ef,) float32, +inf padded
+    explored: jnp.ndarray  # (ef,) bool
+
+    @property
+    def ef(self) -> int:
+        return int(self.ids.shape[0])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SearchState:
+    """Full per-query state threaded through phases of one layer search."""
+
+    beam: Beam
+    visited: jnp.ndarray  # (N,) bool
+    miss_ids: jnp.ndarray  # (miss_cap,) int32, -1 padded
+    miss_count: jnp.ndarray  # () int32
+    n_hops: jnp.ndarray  # () int32 — beam expansions done (|Q| contribution)
+    n_dist: jnp.ndarray  # () int32 — distance evaluations done
+
+
+def beam_init(ef: int) -> Beam:
+    return Beam(
+        ids=jnp.full((ef,), -1, jnp.int32),
+        dists=jnp.full((ef,), INF),
+        explored=jnp.zeros((ef,), bool),
+    )
+
+
+def beam_merge(
+    beam: Beam,
+    new_ids: jnp.ndarray,
+    new_dists: jnp.ndarray,
+    new_valid: jnp.ndarray,
+) -> Beam:
+    """Merge (id, dist) entries into the beam, keep ef best, stable order.
+
+    New entries arrive unexplored. Padded/invalid rows get +inf distance
+    so they sort to the tail and are dropped. Selection uses ``lax.top_k``
+    on negated distances — O(n log ef) vs argsort's O(n log n), with the
+    same index-order tie-breaking as a stable ascending sort (§Perf
+    hillclimb on the webanns cell; see EXPERIMENTS.md).
+    """
+    ef = beam.ef
+    ids = jnp.concatenate([beam.ids, jnp.where(new_valid, new_ids, -1)])
+    dists = jnp.concatenate([beam.dists, jnp.where(new_valid, new_dists, INF)])
+    expl = jnp.concatenate([beam.explored, jnp.zeros_like(new_valid)])
+    # invalid beam rows also +inf
+    dists = jnp.where(ids >= 0, dists, INF)
+    _, order = jax.lax.top_k(-dists, ef)
+    return Beam(ids=ids[order], dists=dists[order], explored=expl[order])
+
+
+class LookupFn(NamedTuple):
+    """Tier-2 membership probe: ids (k,) -> (present (k,), vecs (k, d))."""
+
+    fn: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def make_state(ef: int, miss_cap: int, n: int) -> SearchState:
+    return SearchState(
+        beam=beam_init(ef),
+        visited=jnp.zeros((n,), bool),
+        miss_ids=jnp.full((miss_cap,), -1, jnp.int32),
+        miss_count=jnp.zeros((), jnp.int32),
+        n_hops=jnp.zeros((), jnp.int32),
+        n_dist=jnp.zeros((), jnp.int32),
+    )
+
+
+def seed_state(
+    state: SearchState,
+    q: jnp.ndarray,
+    entry_ids: jnp.ndarray,  # (k,) int32, -1 padded
+    lookup: Callable,
+    metric: str,
+) -> SearchState:
+    """Enter a layer: probe entry points, merging hits into the beam and
+    misses into L (entry points must be resolved before the phase loop —
+    the paper's inter-layer correctness requirement)."""
+    n = state.visited.shape[0]
+    valid = entry_ids >= 0
+    present, vecs = lookup(entry_ids)
+    usable = valid & present
+    dists = point_distance(vecs, q, metric)
+    beam = beam_merge(state.beam, entry_ids, dists, usable)
+    # invalid rows scatter out-of-range (dropped) — NEVER to a real index:
+    # duplicate-index scatter order is undefined and a padded row writing
+    # a stale value could clobber a real node's visited bit
+    visited = state.visited.at[jnp.where(valid, entry_ids, n)].set(
+        True, mode="drop"
+    )
+    missing = valid & ~present
+    state = dataclasses.replace(state, beam=beam, visited=visited)
+    return _push_misses(state, entry_ids, missing)
+
+
+def _push_misses(
+    state: SearchState, ids: jnp.ndarray, missing: jnp.ndarray
+) -> SearchState:
+    """Append `ids[missing]` to the bounded miss list (Alg. 1 line 15)."""
+    cap = state.miss_ids.shape[0]
+    offs = jnp.cumsum(missing.astype(jnp.int32)) - 1
+    pos = state.miss_count + jnp.where(missing, offs, cap)
+    pos = jnp.where(pos < cap, pos, cap)  # drop overflow (trigger fires first)
+    miss_ids = state.miss_ids.at[pos].set(ids, mode="drop")
+    miss_count = jnp.minimum(
+        state.miss_count + jnp.sum(missing.astype(jnp.int32)), cap
+    )
+    return dataclasses.replace(state, miss_ids=miss_ids, miss_count=miss_count)
+
+
+def search_phase(
+    q: jnp.ndarray,  # (d,)
+    neighbors_l: jnp.ndarray,  # (N, deg) int32, PAD padded
+    state: SearchState,
+    lookup: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
+    metric: str,
+    ef_trigger: Optional[int] = None,
+    max_hops: int = 100000,
+) -> SearchState:
+    """One in-memory phase of Algorithm 1 (lines 6–22). Jittable.
+
+    Expands beam candidates against tier-2 data only; misses go to L.
+    Stops when the beam is exhausted (all explored) or |L| >= ef_trigger.
+    """
+    ef = state.beam.ef
+    trigger = ef if ef_trigger is None else ef_trigger
+    n = neighbors_l.shape[0]
+
+    def cond(s: SearchState):
+        unexplored = (s.beam.ids >= 0) & ~s.beam.explored
+        return (
+            jnp.any(unexplored)
+            & (s.miss_count < trigger)
+            & (s.n_hops < max_hops)
+        )
+
+    def body(s: SearchState) -> SearchState:
+        unexplored = (s.beam.ids >= 0) & ~s.beam.explored
+        d_masked = jnp.where(unexplored, s.beam.dists, INF)
+        j = jnp.argmin(d_masked)
+        c = s.beam.ids[j]
+        beam = dataclasses.replace(
+            s.beam, explored=s.beam.explored.at[j].set(True)
+        )
+        nbrs = neighbors_l[jnp.clip(c, 0, n - 1)]  # (deg,)
+        valid = nbrs != PAD
+        safe = jnp.where(valid, nbrs, 0)
+        fresh = valid & ~s.visited[safe]
+        # fresh rows set True; all others dropped (out-of-range index) —
+        # see seed_state for why padded rows must never hit a real index
+        visited = s.visited.at[jnp.where(fresh, nbrs, n)].set(
+            True, mode="drop"
+        )
+        present, vecs = lookup(jnp.where(fresh, nbrs, -1))
+        usable = fresh & present
+        dists = point_distance(vecs, q, metric)
+        beam = beam_merge(beam, nbrs, dists, usable)
+        s = dataclasses.replace(
+            s,
+            beam=beam,
+            visited=visited,
+            n_hops=s.n_hops + 1,
+            n_dist=s.n_dist + jnp.sum(usable.astype(jnp.int32)),
+        )
+        return _push_misses(s, nbrs, fresh & ~present)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def load_phase(
+    q: jnp.ndarray,
+    state: SearchState,
+    loaded_ids: jnp.ndarray,  # (miss_cap,) int32, -1 padded
+    loaded_vecs: jnp.ndarray,  # (miss_cap, d)
+    metric: str,
+) -> SearchState:
+    """Merge bulk-loaded vectors into the beam (Alg. 1 lines 25–31) and
+    clear L. The driver has already inserted them into tier 2. Jittable."""
+    valid = loaded_ids >= 0
+    dists = point_distance(loaded_vecs, q, metric)
+    beam = beam_merge(state.beam, loaded_ids, dists, valid)
+    return dataclasses.replace(
+        state,
+        beam=beam,
+        miss_ids=jnp.full_like(state.miss_ids, -1),
+        miss_count=jnp.zeros_like(state.miss_count),
+        n_dist=state.n_dist + jnp.sum(valid.astype(jnp.int32)),
+    )
+
+
+# ------------------------------------------------------ fused lazy search
+
+
+def search_layer_lazy_fused(
+    q: jnp.ndarray,
+    neighbors_l: jnp.ndarray,  # (N, deg)
+    table: jnp.ndarray,  # (N, d) — tier-3 payload (device/host-resident)
+    cache,  # CacheState — tier 2
+    entry_ids: jnp.ndarray,
+    ef: int,
+    metric: str,
+    trigger: Optional[int] = None,
+    max_phases: int = 256,
+    eviction: int = 0,
+):
+    """One layer of Algorithm 1 with the WHOLE phase loop in-graph.
+
+    The host-driven engine mirrors the paper's Wasm/JS split (jitted
+    phases + host fetches). This variant is the TPU-native endpoint: the
+    bulk load of the miss list L is a device-side gather from the tier-3
+    payload, so phases + fetches + cache updates compile into ONE
+    program (`lax.while_loop` over phases). Access accounting (n_db,
+    items fetched) is carried in-graph; the t_db cost model is applied by
+    the caller. Returns (state, cache, n_db, n_fetched).
+
+    On real hardware ``table`` lives in host/remote memory
+    (``memory_kind='pinned_host'`` or a remote shard — DESIGN.md §2);
+    the phase structure is identical.
+    """
+    from repro.core.store import cache_insert, cache_lookup
+
+    n = neighbors_l.shape[0]
+    trig = trigger if trigger is not None else ef
+    miss_cap = ef + neighbors_l.shape[1] + 1
+
+    state = make_state(ef, miss_cap, n)
+    state = seed_state(
+        state, q, entry_ids, lambda ids: cache_lookup(cache, ids), metric
+    )
+
+    def cond(carry):
+        # continue while the LAST phase produced misses (load_phase
+        # clears miss_count, so a dedicated flag carries that fact)
+        state, cache, n_db, n_fetch, phase, run_more = carry
+        return run_more & (phase < max_phases)
+
+    def body(carry):
+        state, cache, n_db, n_fetch, phase, _ = carry
+        state = search_phase(
+            q, neighbors_l, state,
+            lambda ids: cache_lookup(cache, ids), metric, ef_trigger=trig,
+        )
+        mc = state.miss_count
+        has_miss = mc > 0
+        # ONE bulk access for the whole miss list (no-op when empty)
+        safe = jnp.clip(state.miss_ids, 0, n - 1)
+        vecs = jnp.where(
+            (state.miss_ids >= 0)[:, None], table[safe], 0.0
+        )
+        cache = cache_insert(cache, state.miss_ids, vecs, policy=eviction)
+        state = load_phase(q, state, state.miss_ids, vecs, metric)
+        return (
+            state, cache,
+            n_db + has_miss.astype(jnp.int32),
+            n_fetch + mc,
+            phase + 1,
+            has_miss,  # loaded candidates pending → run another phase
+        )
+
+    init = (state, cache, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.bool_(True))
+    state, cache, n_db, n_fetch, _, _ = jax.lax.while_loop(cond, body, init)
+    return state, cache, n_db, n_fetch
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "metric", "eviction", "n_layers"),
+)
+def lazy_knn_search_fused(
+    q: jnp.ndarray,
+    table: jnp.ndarray,  # (N, d) tier-3 payload
+    neighbors: jnp.ndarray,  # (L, N, deg)
+    entry: jnp.ndarray,  # () int32
+    cache,  # CacheState
+    k: int,
+    ef: int,
+    metric: str = "l2",
+    eviction: int = 0,
+    n_layers: Optional[int] = None,
+):
+    """Whole lazy KNN query (all layers) as ONE jitted program.
+
+    Returns (dists (k,), ids (k,), (n_db, n_fetched), cache').
+    Result equality with the host-driven engine is enforced in tests.
+    """
+    L = n_layers if n_layers is not None else neighbors.shape[0]
+    n_db = jnp.int32(0)
+    n_fetch = jnp.int32(0)
+    entry_ids = jnp.full((1,), entry, jnp.int32)
+    # upper layers: ef=1 greedy with lazy loading
+    for lc in range(L - 1, 0, -1):
+        st, cache, db, fc = search_layer_lazy_fused(
+            q, neighbors[lc], table, cache, entry_ids, 1, metric,
+            eviction=eviction,
+        )
+        n_db, n_fetch = n_db + db, n_fetch + fc
+        entry_ids = st.beam.ids[:1]
+    st, cache, db, fc = search_layer_lazy_fused(
+        q, neighbors[0], table, cache, entry_ids, max(ef, k), metric,
+        eviction=eviction,
+    )
+    n_db, n_fetch = n_db + db, n_fetch + fc
+    return st.beam.dists[:k], st.beam.ids[:k], (n_db, n_fetch), cache
+
+
+# ------------------------------------------------------- in-memory fast path
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ef", "metric", "max_hops")
+)
+def search_layer_inmem(
+    q: jnp.ndarray,
+    vectors: jnp.ndarray,  # (N, d) — full table resident (tier-2 = everything)
+    neighbors_l: jnp.ndarray,
+    entry_ids: jnp.ndarray,
+    ef: int,
+    metric: str = "l2",
+    max_hops: int = 100000,
+) -> SearchState:
+    """Single-phase search when the whole table is in memory (memory-data
+    ratio = 100%); L stays empty. Used as the oracle the lazy search must
+    match exactly, and as the production fast path."""
+    n = vectors.shape[0]
+
+    def lookup(ids):
+        safe = jnp.clip(ids, 0, n - 1)
+        return ids >= 0, vectors[safe]
+
+    state = make_state(ef, 1, n)
+    # ef_trigger > any possible miss count; misses never happen here
+    state = seed_state(state, q, entry_ids, lookup, metric)
+    return search_phase(
+        q, neighbors_l, state, lookup, metric, ef_trigger=2, max_hops=max_hops
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "max_hops"))
+def greedy_descend_inmem(
+    q: jnp.ndarray,
+    vectors: jnp.ndarray,
+    neighbors_upper: jnp.ndarray,  # (L-1, N, deg) layers 1..max stacked
+    levels: jnp.ndarray,  # (N,) int32
+    entry: jnp.ndarray,  # () int32
+    max_level: jnp.ndarray,  # () int32
+    metric: str = "l2",
+    max_hops: int = 10000,
+) -> jnp.ndarray:
+    """Greedy ef=1 descent through layers max_level..1 (in-memory).
+
+    Scans the stacked upper-layer array with a while_loop over (layer, cur).
+    """
+    n = vectors.shape[0]
+
+    def layer_step(carry):
+        lc, cur, cur_d, hops = carry
+
+        def cond(c):
+            _cur, _d, moved, _h = c
+            return moved & (_h < max_hops)
+
+        def body(c):
+            _cur, _d, _moved, _h = c
+            nbrs = neighbors_upper[lc - 1, _cur]  # layer lc at index lc-1
+            valid = nbrs != PAD
+            safe = jnp.where(valid, nbrs, 0)
+            dn = point_distance(vectors[safe], q, metric)
+            dn = jnp.where(valid, dn, INF)
+            jbest = jnp.argmin(dn)
+            better = dn[jbest] < _d
+            return (
+                jnp.where(better, nbrs[jbest], _cur),
+                jnp.where(better, dn[jbest], _d),
+                better,
+                _h + 1,
+            )
+
+        cur, cur_d, _, hops = jax.lax.while_loop(
+            cond, body, (cur, cur_d, jnp.bool_(True), hops)
+        )
+        return (lc - 1, cur, cur_d, hops)
+
+    d0 = point_distance(vectors[entry], q, metric)
+    lc0 = max_level
+    init = (lc0, entry, d0, jnp.int32(0))
+    out = jax.lax.while_loop(lambda c: c[0] >= 1, layer_step, init)
+    return out[1]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "metric"))
+def knn_search_inmem(
+    q: jnp.ndarray,
+    vectors: jnp.ndarray,
+    neighbors: jnp.ndarray,  # (L, N, deg)
+    levels: jnp.ndarray,
+    entry: jnp.ndarray,
+    max_level: jnp.ndarray,
+    k: int,
+    ef: int,
+    metric: str = "l2",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full in-memory KNN query (jittable, vmappable over q)."""
+    n_layers = neighbors.shape[0]
+    if n_layers > 1:
+        ep = greedy_descend_inmem(
+            q, vectors, neighbors[1:], levels, entry, max_level, metric
+        )
+    else:
+        ep = entry
+    entry_ids = jnp.full((1,), ep, jnp.int32)
+    st = search_layer_inmem(q, vectors, neighbors[0], entry_ids, ef, metric)
+    return st.beam.dists[:k], st.beam.ids[:k]
+
+
+def batch_knn_search_inmem(
+    Q: jnp.ndarray, vectors, neighbors, levels, entry, max_level, k, ef,
+    metric: str = "l2",
+):
+    """vmapped batched in-memory query (the TPU throughput path)."""
+    fn = functools.partial(
+        knn_search_inmem, k=k, ef=ef, metric=metric,
+        vectors=vectors, neighbors=neighbors, levels=levels,
+        entry=entry, max_level=max_level,
+    )
+    return jax.vmap(fn)(Q)

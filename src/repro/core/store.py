@@ -1,0 +1,337 @@
+"""Three-tier data management (paper §3.2), TPU-adapted.
+
+Tier 1 (paper: Wasm heap / here: VMEM) is implicit — it is the BlockSpec
+working set of the Pallas kernels and the registers of the fused search
+loop; it has no persistent state.
+
+Tier 2 (paper: JavaScript cache / here: per-device HBM cache slab) is
+:class:`CacheState` — a fixed-capacity vector slab plus an id→slot map,
+with pluggable eviction (FIFO default, as in the paper's prototype §4.1;
+LRU and LFU-ish "clock" provided as beyond-paper options). All operations
+are jittable pure functions on the pytree.
+
+Tier 3 (paper: IndexedDB / here: external store) is
+:class:`ExternalStore` — the full vector payload living host-side (or on
+a remote shard), with a calibratable access-cost model
+
+    t_access = t_setup + n_items * t_per_item          (paper Fig. 3b)
+
+and exact access counters, so every experiment on n_db / redundancy /
+latency decomposition (Eq. 1, Eq. 2) is deterministic and reproducible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EVICT_FIFO = 0
+EVICT_LRU = 1
+
+_EVICTION_NAMES = {"fifo": EVICT_FIFO, "lru": EVICT_LRU}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CacheState:
+    """Tier-2 cache: fixed-capacity slab + id→slot map (jittable pytree)."""
+
+    slab: jnp.ndarray  # (capacity, d) float32 — cached vectors
+    slot_of: jnp.ndarray  # (N,) int32 — slot of id, -1 if absent
+    id_of: jnp.ndarray  # (capacity,) int32 — id in slot, -1 if empty
+    clock: jnp.ndarray  # () int32 — insertion cursor (FIFO) / tick (LRU)
+    last_used: jnp.ndarray  # (capacity,) int32 — LRU timestamps
+
+    @property
+    def capacity(self) -> int:
+        return int(self.slab.shape[0])
+
+
+def cache_init(n_items: int, capacity: int, dim: int) -> CacheState:
+    capacity = int(max(1, capacity))
+    return CacheState(
+        slab=jnp.zeros((capacity, dim), jnp.float32),
+        slot_of=jnp.full((n_items,), -1, jnp.int32),
+        id_of=jnp.full((capacity,), -1, jnp.int32),
+        clock=jnp.zeros((), jnp.int32),
+        last_used=jnp.zeros((capacity,), jnp.int32),
+    )
+
+
+def cache_lookup(
+    cache: CacheState, ids: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized membership + gather. ids may contain -1 padding.
+
+    Returns (present (k,) bool, vectors (k, d) — garbage rows where absent).
+    """
+    safe_ids = jnp.clip(ids, 0, cache.slot_of.shape[0] - 1)
+    slots = cache.slot_of[safe_ids]
+    safe_slots = jnp.clip(slots, 0, cache.capacity - 1)
+    # id_of cross-check guards against stale mappings after ring wrap
+    present = (slots >= 0) & (ids >= 0) & (cache.id_of[safe_slots] == ids)
+    vecs = cache.slab[safe_slots]
+    return present, vecs
+
+
+def cache_touch(cache: CacheState, ids: jnp.ndarray) -> CacheState:
+    """LRU bookkeeping for a batch of accessed ids (no-op rows for -1)."""
+    safe_ids = jnp.clip(ids, 0, cache.slot_of.shape[0] - 1)
+    slots = cache.slot_of[safe_ids]
+    ok = (slots >= 0) & (ids >= 0)
+    tick = cache.clock + 1
+    last = cache.last_used.at[jnp.where(ok, slots, 0)].max(
+        jnp.where(ok, tick, 0)
+    )
+    return dataclasses.replace(cache, last_used=last, clock=tick)
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def cache_insert(
+    cache: CacheState,
+    ids: jnp.ndarray,  # (k,) int32, -1 padded
+    vecs: jnp.ndarray,  # (k, d) float32
+    policy: int = EVICT_FIFO,
+) -> CacheState:
+    """Insert a fetched batch, evicting per ``policy``. Jittable.
+
+    FIFO: slots are a ring buffer advanced by the insert cursor (paper's
+    prototype behavior). LRU: each insert claims the least-recently-used
+    slot (computed per batch via top_k on stale timestamps).
+    """
+    k = ids.shape[0]
+    cap = cache.capacity
+    valid = ids >= 0
+    already_present, _ = cache_lookup(cache, ids)
+    need = valid & ~already_present
+
+    if policy == EVICT_FIFO:
+        offsets = jnp.cumsum(need.astype(jnp.int32)) - 1
+        slots = (cache.clock + jnp.where(need, offsets, 0)) % cap
+        new_clock = cache.clock + jnp.sum(need.astype(jnp.int32))
+    else:  # LRU: pick the k stalest slots
+        stale = -cache.last_used
+        _, lru_slots = jax.lax.top_k(stale, min(k, cap))
+        lru_slots = jnp.resize(lru_slots, (k,))
+        offsets = jnp.cumsum(need.astype(jnp.int32)) - 1
+        slots = lru_slots[jnp.clip(offsets, 0, k - 1) % cap]
+        new_clock = cache.clock + 1
+
+    slots = jnp.where(need, slots, cap)  # out-of-range = dropped scatter
+    n_items = cache.slot_of.shape[0]
+    # 1) unmap evicted ids (inactive rows scatter out-of-range → dropped;
+    # never to a real index, which would clobber it under duplicate-index
+    # scatter with undefined ordering)
+    evicted = cache.id_of[jnp.clip(slots, 0, cap - 1)]
+    evict_ok = need & (evicted >= 0)
+    e_idx = jnp.where(evict_ok, evicted, n_items)
+    slot_of = cache.slot_of.at[e_idx].set(-1, mode="drop")
+    # 2) write new vectors / maps (mode='drop' ignores out-of-range rows)
+    i_idx = jnp.where(need, ids, n_items)
+    slot_of = slot_of.at[i_idx].set(slots, mode="drop")
+    slab = cache.slab.at[slots, :].set(vecs, mode="drop")
+    id_of = cache.id_of.at[slots].set(ids, mode="drop")
+    last_used = cache.last_used.at[slots].set(new_clock, mode="drop")
+    return CacheState(
+        slab=slab,
+        slot_of=slot_of,
+        id_of=id_of,
+        clock=new_clock,
+        last_used=last_used,
+    )
+
+
+# --------------------------------------------------------------- tier 3
+
+
+@dataclasses.dataclass
+class AccessStats:
+    """Counters behind Eq. 1 (redundancy) and Eq. 2 (latency model)."""
+
+    n_db: int = 0  # number of external accesses (transactions)
+    items_fetched: int = 0  # total items pulled from tier 3
+    items_used: int = 0  # items that were actually needed (#hit in Eq. 1)
+    modeled_time: float = 0.0  # sum of modeled t_db per access
+    wall_time: float = 0.0  # measured host time in fetch calls
+
+    def redundancy(self) -> float:
+        """Eq. 1: R = 1 - hits / (n_db * prefetch_size)."""
+        if self.items_fetched == 0:
+            return 0.0
+        return 1.0 - self.items_used / self.items_fetched
+
+    def reset(self) -> None:
+        self.n_db = 0
+        self.items_fetched = 0
+        self.items_used = 0
+        self.modeled_time = 0.0
+        self.wall_time = 0.0
+
+
+class ExternalStore:
+    """Tier 3: the full vector payload + cost model + counters.
+
+    ``t_setup`` dominates per paper Fig. 3b ("all-in-one loading is ~45%
+    faster than sequential") — the default constants reproduce that ratio.
+    Set ``simulate_latency=True`` to actually sleep (end-to-end wall-clock
+    realism); by default latency is accounted analytically so tests stay
+    fast and deterministic.
+    """
+
+    def __init__(
+        self,
+        vectors: np.ndarray,
+        t_setup: float = 1.0e-3,
+        t_per_item: float = 2.0e-6,
+        simulate_latency: bool = False,
+    ):
+        self.vectors = np.asarray(vectors, dtype=np.float32)
+        self.t_setup = float(t_setup)
+        self.t_per_item = float(t_per_item)
+        self.simulate_latency = simulate_latency
+        self.stats = AccessStats()
+        self._pending: set = set()  # fetched ids not yet demanded
+
+    @property
+    def n_items(self) -> int:
+        return int(self.vectors.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.vectors.shape[1])
+
+    def access_cost(self, n: int) -> float:
+        return self.t_setup + n * self.t_per_item
+
+    def fetch(self, ids: np.ndarray) -> np.ndarray:
+        """ONE external access (one 'transaction') for a batch of ids."""
+        t0 = time.perf_counter()
+        ids = np.asarray(ids)
+        ids = ids[ids >= 0]
+        out = self.vectors[ids]
+        cost = self.access_cost(len(ids))
+        if self.simulate_latency:
+            time.sleep(cost)
+        self.stats.n_db += 1
+        self.stats.items_fetched += len(ids)
+        self.stats.modeled_time += cost
+        self.stats.wall_time += time.perf_counter() - t0
+        self._pending.update(int(i) for i in ids)
+        return out
+
+    def fetch_sequential(self, ids: np.ndarray) -> np.ndarray:
+        """n separate accesses for n items (paper Fig. 3b's slow path)."""
+        ids = np.asarray(ids)
+        ids = ids[ids >= 0]
+        out = np.empty((len(ids), self.dim), np.float32)
+        for j, i in enumerate(ids):
+            out[j] = self.fetch(np.array([i]))
+        return out
+
+    def mark_used(self, n: int) -> None:
+        self.stats.items_used += int(n)
+
+    def mark_used_ids(self, ids) -> None:
+        """Eq. 1 hit accounting, per fetch event: each fetched copy of an
+        item counts as 'used' when first demanded after that fetch.
+        Repeat hits don't double-count; a refetch-after-eviction that is
+        demanded again is useful work, not redundancy."""
+        for i in np.atleast_1d(np.asarray(ids)).tolist():
+            i = int(i)
+            if i in self._pending:
+                self._pending.discard(i)
+                self.stats.items_used += 1
+
+
+class TieredStore:
+    """Tier 2 + tier 3 composition used by the engine driver.
+
+    ``gather(ids)``: look up tier 2; fetch only the misses from tier 3 in
+    ONE access; insert them into tier 2; return all vectors. This is the
+    bulk phase-2 load of the lazy search (Algorithm 1 line 24).
+    """
+
+    def __init__(
+        self,
+        external: ExternalStore,
+        capacity: int,
+        eviction: str = "fifo",
+    ):
+        self.external = external
+        self.eviction = _EVICTION_NAMES[eviction]
+        self.cache = cache_init(external.n_items, capacity, external.dim)
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.cache.capacity
+
+    def resize(self, capacity: int) -> None:
+        """Re-initialize tier 2 with a new capacity (cache-size optimizer)."""
+        self.cache = cache_init(
+            self.external.n_items, capacity, self.external.dim
+        )
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, ids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return cache_lookup(self.cache, ids)
+
+    @staticmethod
+    def _pad_pow2(ids: np.ndarray) -> np.ndarray:
+        """Pad id batches to power-of-2 buckets so the jitted cache ops
+        trace once per bucket instead of once per batch size."""
+        n = max(1, len(ids))
+        cap = 1 << (n - 1).bit_length()
+        out = np.full(cap, -1, np.int32)
+        out[: len(ids)] = ids
+        return out
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        """Bulk gather with single-access miss fill. ids: (k,) no padding."""
+        ids = np.asarray(ids, dtype=np.int32)
+        k = len(ids)
+        padded = self._pad_pow2(ids)
+        present, vecs = cache_lookup(self.cache, jnp.asarray(padded))
+        present = np.asarray(present)[:k]
+        vecs = np.array(vecs)[:k]  # writable host copy
+        n_miss = int((~present).sum())
+        self.hits += int(present.sum())
+        self.misses += n_miss
+        if n_miss:
+            miss_ids = ids[~present]
+            fetched = self.external.fetch(miss_ids)
+            miss_padded = self._pad_pow2(miss_ids)
+            fetch_padded = np.zeros(
+                (len(miss_padded), self.external.dim), np.float32
+            )
+            fetch_padded[: len(miss_ids)] = fetched
+            self.cache = cache_insert(
+                self.cache,
+                jnp.asarray(miss_padded),
+                jnp.asarray(fetch_padded),
+                policy=self.eviction,
+            )
+            vecs[~present] = fetched
+        self.external.mark_used_ids(ids)  # every gathered id is demanded
+        if self.eviction == EVICT_LRU:
+            self.cache = cache_touch(self.cache, jnp.asarray(padded))
+        return vecs
+
+    def warm(self, ids: np.ndarray) -> None:
+        """Pre-populate tier 2 (initialization-stage index loading)."""
+        ids = np.asarray(ids, dtype=np.int32)
+        padded = self._pad_pow2(ids)
+        vecs = np.zeros((len(padded), self.external.dim), np.float32)
+        vecs[: len(ids)] = self.external.vectors[ids]
+        self.cache = cache_insert(
+            self.cache, jnp.asarray(padded), jnp.asarray(vecs),
+            policy=self.eviction,
+        )

@@ -1,0 +1,69 @@
+"""Input pipeline: host-side prefetch + shard placement + redundancy.
+
+- :class:`PrefetchPipeline` — background thread keeps ``depth`` batches
+  ready (host→device overlap with compute).
+- :func:`shard_batch` — places a host batch onto the mesh with the
+  family's batch PartitionSpec (one device_put, no per-device loops).
+- Redundant dispatch hook for straggler mitigation: the pipeline can
+  replay the last batch for a flagged shard (policy in train/elastic.py).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def shard_batch(mesh: Mesh, specs: Dict[str, PartitionSpec], batch: Dict):
+    """device_put each leaf with its PartitionSpec."""
+    out = {}
+    for k, v in batch.items():
+        spec = specs.get(k, PartitionSpec())
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out
+
+
+class PrefetchPipeline:
+    """Wrap a host batch iterator with a depth-N prefetch thread."""
+
+    def __init__(
+        self,
+        source: Iterator[Dict[str, np.ndarray]],
+        depth: int = 2,
+        place: Optional[Callable[[Dict], Any]] = None,
+    ):
+        self.source = source
+        self.place = place or (lambda b: b)
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._last = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for b in self.source:
+                self._q.put(self.place(b))
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        self._last = item
+        return item
+
+    def replay_last(self):
+        """Redundant dispatch: hand back the last batch (straggler path)."""
+        if self._last is None:
+            raise RuntimeError("no batch to replay")
+        return self._last

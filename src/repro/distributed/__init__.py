@@ -1,0 +1,1 @@
+"""Sharding rules and collective helpers for the production mesh."""

@@ -1,0 +1,219 @@
+"""Sharding rules per architecture family (DP/TP/EP/SP composition).
+
+Conventions on the production mesh (launch/mesh.py):
+
+- ``data`` (and ``pod`` when present) — batch/data parallelism; the pod
+  axis always composes with data (``DATA = ("pod", "data")`` multi-pod),
+  so adding pods widens DP without touching any rule here.
+- ``model`` — tensor parallelism: attention heads, FFN inner dim, MoE
+  experts (EP), embedding-table rows (recsys), vocab (LM embed).
+
+LM params use TP over ``model`` + ZeRO-style optimizer-state sharding
+over ``data`` (opt state reuses param specs but shards the largest axis
+further — see ``zero_opt_specs``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import LMConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ------------------------------------------------------------------- LM
+
+
+def lm_param_specs(cfg: LMConfig, mesh: Mesh, fsdp: bool = False) -> Dict:
+    """PartitionSpec pytree congruent with init_lm(params).
+
+    TP: qkv column-parallel, attn-out row-parallel, MLP in/gate column,
+    MLP out row; MoE experts sharded over `model` (EP). With ``fsdp`` the
+    d_model axis of the big matrices additionally shards over data
+    (weight-gathered FSDP — halves HBM at the cost of an all-gather that
+    overlaps with compute).
+    """
+    DATA = data_axes(mesh)
+    dp = DATA if fsdp else None
+    attn = {
+        "wq": P(dp, "model"),
+        "wk": P(dp, "model"),
+        "wv": P(dp, "model"),
+        "wo": P("model", dp),
+    }
+    if cfg.qkv_bias:
+        attn.update({"bq": P("model"), "bk": P("model"), "bv": P("model")})
+    # stacked layer params have a leading layer axis → specs gain None
+    def L(spec):  # prepend layer axis
+        return P(*((None,) + tuple(spec)))
+
+    layer = {
+        "attn": {k: L(v) for k, v in attn.items()},
+        "ln1": {"scale": P(None, None)},
+        "ln2": {"scale": P(None, None)},
+    }
+    if cfg.is_moe:
+        moe = {
+            "router": P(None, None, None),
+            "w_gate": P(None, "model", dp, None),  # (L, E, d, ff): EP
+            "w_in": P(None, "model", dp, None),
+            "w_out": P(None, "model", None, dp),
+        }
+        if cfg.n_shared:
+            moe.update({
+                "shared_gate": P(None, dp, "model"),
+                "shared_in": P(None, dp, "model"),
+                "shared_out": P(None, "model", dp),
+            })
+        layer["moe"] = moe
+    else:
+        layer["mlp"] = {
+            "w_in": P(None, dp, "model"),
+            "w_gate": P(None, dp, "model"),
+            "w_out": P(None, "model", dp),
+        }
+    return {
+        "embed": {"table": P("model", None)},  # vocab-sharded
+        "layers": layer,
+        "ln_f": {"scale": P(None)},
+    }
+
+
+def lm_batch_specs(mesh: Mesh) -> Dict[str, P]:
+    DATA = data_axes(mesh)
+    return {"tokens": P(DATA, None), "labels": P(DATA, None)}
+
+
+def lm_decode_state_specs(cfg: LMConfig, mesh: Mesh, batch: int,
+                          seq: int) -> Dict[str, P]:
+    """KV cache (L, B, S, Hkv, hd) sharding, divisibility-aware:
+
+    - B shards over data when divisible; otherwise replicated and the
+      freed data axis moves to S (long_500k: B=1, S over data+model).
+    - Hkv shards over model when divisible (it rarely is under GQA);
+      otherwise S takes the model axis.
+    """
+    DATA = data_axes(mesh)
+    n_data = 1
+    for a in DATA:
+        n_data *= mesh.shape[a]
+    n_model = mesh.shape["model"]
+    b_axes = DATA if batch % n_data == 0 and batch >= n_data else None
+    h_ok = cfg.kv_heads % n_model == 0 and cfg.kv_heads >= n_model
+    s_axes: Tuple[str, ...] = ()
+    if not h_ok:
+        s_axes = ("model",)
+    if b_axes is None:
+        s_axes = tuple(DATA) + s_axes
+    kv = P(
+        None,
+        b_axes,
+        s_axes if s_axes else None,
+        "model" if h_ok else None,
+        None,
+    )
+    return {"k": kv, "v": kv, "pos": P()}
+
+
+def zero_opt_specs(param_specs, mesh: Mesh):
+    """ZeRO-1: optimizer moments reuse param specs (m/v are param-shaped);
+    count is replicated. Returned as an AdamWState-shaped tuple pytree."""
+    from repro.train.optimizer import AdamWState
+
+    return AdamWState(m=param_specs, v=param_specs, count=P())
+
+
+# ------------------------------------------------------------------ GNN
+
+
+def gnn_param_specs(mesh: Mesh) -> Any:
+    """NequIP params are tiny (d_hidden=32) → replicate everything."""
+    return None  # None spec pytree → fully replicated (jax treats None)
+
+
+def gnn_batch_specs(mesh: Mesh) -> Dict[str, P]:
+    """Edges shard over data (segment ops are per-shard + scatter-add
+    psum); nodes replicated for NequIP's small widths."""
+    DATA = data_axes(mesh)
+    return {
+        "positions": P(),
+        "species": P(),
+        "node_feats": P(),
+        "graph_ids": P(),
+        "edge_src": P(DATA),
+        "edge_dst": P(DATA),
+        "edge_mask": P(DATA),
+        "energy": P(),
+        "forces": P(),
+    }
+
+
+# --------------------------------------------------------------- RecSys
+
+
+def recsys_param_specs(cfg, mesh: Mesh) -> Any:
+    """Embedding tables row-shard over `model` (the recsys model
+    parallelism); MLPs replicated (tiny)."""
+    specs: Dict[str, Any] = {}
+    if cfg.model == "dlrm":
+        specs = {
+            "tables": P(None, "model", None),  # (F, V, D): V → model
+            "bot": {"w": [P()] * len(cfg.bot_mlp), "b": [P()] * len(cfg.bot_mlp)},
+            "top": {"w": [P()] * len(cfg.top_mlp), "b": [P()] * len(cfg.top_mlp)},
+        }
+    elif cfg.model == "din":
+        n_attn = len(cfg.attn_mlp) + 1
+        n_top = len(cfg.top_mlp[:-1]) + 1
+        specs = {
+            "item_table": P("model", None),
+            "attn": {"w": [P()] * n_attn, "b": [P()] * n_attn},
+            "mlp": {"w": [P()] * n_top, "b": [P()] * n_top},
+        }
+    elif cfg.model == "autoint":
+        layer0 = {k: P() for k in ("wq", "wk", "wv", "wres")}
+        specs = {
+            "tables": P(None, "model", None),
+            "layer0": layer0,
+            "out": P(),
+        }
+        if cfg.n_attn_layers > 1:
+            specs["layers"] = {k: P(None) for k in ("wq", "wk", "wv", "wres")}
+    elif cfg.model == "bst":
+        blocks = {k: P(None) for k in ("wq", "wk", "wv", "wo", "ff1", "ff2")}
+        n_top = len(cfg.top_mlp[:-1]) + 1
+        specs = {
+            "item_table": P("model", None),
+            "pos_embed": P(),
+            "blocks": blocks,
+            "mlp": {"w": [P()] * n_top, "b": [P()] * n_top},
+        }
+    return specs
+
+
+def recsys_batch_specs(mesh: Mesh) -> Dict[str, P]:
+    DATA = data_axes(mesh)
+    return {
+        "dense": P(DATA, None),
+        "sparse": P(DATA, None),
+        "hist": P(DATA, None),
+        "target": P(DATA),
+        "label": P(DATA),
+    }
+
+
+# ----------------------------------------------------------------- ANNS
+
+
+def anns_specs(mesh: Mesh) -> Tuple[Tuple[str, ...], P]:
+    DATA = data_axes(mesh)
+    return DATA, P(DATA, None)

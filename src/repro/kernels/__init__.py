@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot path (+ jnp oracles).
+
+Kernels (each <name>.py has the pl.pallas_call; ops.py wraps; ref.py is
+the pure-jnp oracle):
+
+- distance.py        blocked (B,N) distance matrix in MXU matmul form
+- topk.py            split-K partial top-k (FlashDecoding-style)
+- gather_distance.py fused scalar-prefetch gather + distance (ANNS hot path)
+- embedding_bag.py   fused gather-accumulate embedding bag (recsys)
+"""
+
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,78 @@
+"""Fused gather + distance Pallas kernel — the ANNS hot path.
+
+The lazy load phase (Algorithm 1 line 24–27) materializes the miss list
+``L``, bulk-loads those vectors, and computes their distances to the
+query. On TPU the gather and the distance fuse into one kernel using the
+scalar-prefetch idiom (the same indirection pattern as paged attention):
+the id list sits in SMEM ahead of the grid; each grid step's BlockSpec
+``index_map`` reads ``ids[i]`` to select which table row-block to DMA from
+HBM into VMEM, and the kernel body computes the distance contribution —
+the gathered row never round-trips to HBM.
+
+Rows are processed in groups of ``rg`` (default 8) so each DMA moves
+``rg × d × 4`` bytes; ids within a group are arbitrary (one row-block DMA
+each via a second grid dimension).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gd_kernel(ids_ref, q_ref, row_ref, o_ref, *, metric: str):
+    """Grid = (n_ids,). row_ref holds table[ids[i]] (1, d) via index_map."""
+    i = pl.program_id(0)
+    x = row_ref[...].astype(jnp.float32)  # (1, d)
+    q = q_ref[...].astype(jnp.float32)  # (1, d)
+    if metric == "l2":
+        diff = x - q
+        d = jnp.sum(diff * diff)
+    else:  # 'ip' ('cos' pre-normalized by wrapper)
+        d = -jnp.sum(x * q)
+    valid = ids_ref[i] >= 0
+    o_ref[0] = jnp.where(valid, d, jnp.inf)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "interpret")
+)
+def gather_distance_pallas(
+    table: jnp.ndarray,  # (N, d) — stays in HBM; rows DMA'd on demand
+    ids: jnp.ndarray,  # (B,) int32, -1 padded
+    q: jnp.ndarray,  # (d,)
+    metric: str = "l2",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Distances (B,) of table[ids] to q; +inf for padded ids."""
+    N, d = table.shape
+    B = ids.shape[0]
+    if metric == "cos":
+        table = table / (jnp.linalg.norm(table, axis=-1, keepdims=True) + 1e-30)
+        q = q / (jnp.linalg.norm(q) + 1e-30)
+        metric = "ip"
+    raw_ids = ids.astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids_ref: (0, 0)),  # q (broadcast)
+            # raw ids prefetched; clip in the index_map so the DMA stays
+            # in-bounds while the kernel body can test validity (id >= 0).
+            pl.BlockSpec(
+                (1, d), lambda i, ids_ref: (jnp.maximum(ids_ref[i], 0), 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, ids_ref: (i,)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_gd_kernel, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(raw_ids, q[None, :], table)
+    return jnp.where(ids >= 0, out, jnp.inf)

@@ -1,0 +1,76 @@
+"""Jitted public wrappers over the Pallas kernels, with backend dispatch.
+
+On TPU (the target) these route to the Pallas kernels. On the CPU host
+(this container) Pallas only *interprets* — correct but slow to compile at
+production grids — so by default the mathematically-identical jnp
+reference path runs instead, keeping the multi-pod dry-run's HLO clean
+and compile times sane. Kernel-vs-ref equivalence is enforced by the
+sweep tests in ``tests/test_kernels.py`` (interpret mode), so the dispatch
+is behavior-preserving.
+
+Set ``REPRO_FORCE_PALLAS=1`` to force the interpret-mode kernels off-TPU.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.distance import distance_matrix_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.gather_distance import gather_distance_pallas
+from repro.kernels.topk import topk_pallas
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def distance_matrix(Q: jnp.ndarray, X: jnp.ndarray, metric: str = "l2"):
+    """(B, d) × (N, d) → (B, N) f32 distances."""
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return distance_matrix_pallas(Q, X, metric=metric, interpret=interp)
+    return ref.distance_matrix_ref(Q, X, metric)
+
+
+def distance_topk_ready(Q, X, metric: str = "l2"):
+    """Distance matrix shaped for a follow-up top-k (distributed scan)."""
+    return distance_matrix(Q, X, metric)
+
+
+def topk(D: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return topk_pallas(D, k, interpret=interp)
+    return ref.topk_ref(D, k)
+
+
+def distance_topk(Q, X, k: int, metric: str = "l2"):
+    """Fused scan: distance matrix + split-K top-k."""
+    return topk(distance_matrix(Q, X, metric), k)
+
+
+def gather_distance(table, ids, q, metric: str = "l2"):
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return gather_distance_pallas(table, ids, q, metric=metric,
+                                      interpret=interp)
+    return ref.gather_distance_ref(table, ids, q, metric)
+
+
+def embedding_bag(table, idx, weights=None, combiner: str = "sum"):
+    if _use_pallas() and weights is None:
+        interp = jax.default_backend() != "tpu"
+        return embedding_bag_pallas(table, idx, combiner=combiner,
+                                    interpret=interp)
+    return ref.embedding_bag_ref(table, idx, weights, combiner)

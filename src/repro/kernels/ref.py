@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each ``<name>_ref`` matches the corresponding kernel in semantics and
+(where relevant) accumulation dtype. Kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def distance_matrix_ref(
+    Q: jnp.ndarray, X: jnp.ndarray, metric: str = "l2"
+) -> jnp.ndarray:
+    """(B, d) × (N, d) → (B, N) distances; f32 accumulation."""
+    Qf = Q.astype(jnp.float32)
+    Xf = X.astype(jnp.float32)
+    G = Qf @ Xf.T
+    if metric == "l2":
+        qn = jnp.sum(Qf * Qf, axis=-1)
+        xn = jnp.sum(Xf * Xf, axis=-1)
+        return jnp.maximum(qn[:, None] + xn[None, :] - 2.0 * G, 0.0)
+    if metric == "ip":
+        return -G
+    if metric == "cos":
+        qn = jnp.linalg.norm(Qf, axis=-1) + 1e-30
+        xn = jnp.linalg.norm(Xf, axis=-1) + 1e-30
+        return -G / (qn[:, None] * xn[None, :])
+    raise ValueError(metric)
+
+
+def topk_ref(D: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-wise smallest-k of (B, N): returns (dists (B,k), ids (B,k))."""
+    negd, ids = jax.lax.top_k(-D.astype(jnp.float32), k)
+    return -negd, ids.astype(jnp.int32)
+
+
+def distance_topk_ref(
+    Q: jnp.ndarray, X: jnp.ndarray, k: int, metric: str = "l2"
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return topk_ref(distance_matrix_ref(Q, X, metric), k)
+
+
+def gather_distance_ref(
+    table: jnp.ndarray,  # (N, d)
+    ids: jnp.ndarray,  # (B,) int32, -1 padded
+    q: jnp.ndarray,  # (d,)
+    metric: str = "l2",
+) -> jnp.ndarray:
+    """Fused gather + distance-to-query; +inf for padded ids."""
+    safe = jnp.clip(ids, 0, table.shape[0] - 1)
+    x = table[safe].astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    if metric == "l2":
+        diff = x - qf[None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    elif metric == "ip":
+        d = -(x @ qf)
+    elif metric == "cos":
+        d = -(x @ qf) / (
+            (jnp.linalg.norm(x, axis=-1) + 1e-30)
+            * (jnp.linalg.norm(qf) + 1e-30)
+        )
+    else:
+        raise ValueError(metric)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,  # (V, d)
+    idx: jnp.ndarray,  # (B, S) int32, -1 padded
+    weights: jnp.ndarray | None = None,  # (B, S) or None
+    combiner: str = "sum",
+) -> jnp.ndarray:
+    """Padded multi-hot embedding bag: out (B, d); f32 accumulation."""
+    safe = jnp.clip(idx, 0, table.shape[0] - 1)
+    rows = table[safe].astype(jnp.float32)  # (B, S, d)
+    mask = (idx >= 0).astype(jnp.float32)[..., None]
+    if weights is not None:
+        mask = mask * weights.astype(jnp.float32)[..., None]
+    summed = jnp.sum(rows * mask, axis=1)
+    if combiner == "sum":
+        return summed
+    if combiner == "mean":
+        cnt = jnp.maximum(jnp.sum(mask, axis=1), 1e-9)
+        return summed / cnt
+    raise ValueError(combiner)

@@ -1,0 +1,104 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture.
+
+    PYTHONPATH=src python -m repro.launch.train --arch dlrm-rm2 --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch nequip --steps 20
+
+Runs the smoke-scale config on the host devices with the full substrate
+(AdamW, checkpointing, straggler monitor). The production-mesh versions
+of these step functions are exactly what launch/dryrun.py lowers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.synthetic import click_batches, molecular_graphs, token_batches
+from repro.models import transformer as T
+from repro.models.gnn import gnn_force_loss, init_gnn
+from repro.models.recsys import init_recsys, recsys_loss
+from repro.train.checkpoint import AsyncCheckpointer
+from repro.train.elastic import StragglerMonitor
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_loop import make_train_step
+
+
+def build(arch: str, batch: int, seq: int):
+    spec = configs.get(arch)
+    cfg = spec.make_smoke_config()
+    key = jax.random.PRNGKey(0)
+    if spec.family == "lm":
+        params = T.init_lm(key, cfg)
+        loss = lambda p, b: T.lm_loss(p, b["tokens"], b["labels"], cfg,
+                                      loss_chunk=min(seq, 64))
+        batches = (
+            {k: jnp.asarray(v) for k, v in b.items()}
+            for b in token_batches(cfg.vocab, batch, seq, 10**9)
+        )
+        return params, loss, batches
+    if spec.family == "recsys":
+        params = init_recsys(key, cfg)
+        loss = lambda p, b: recsys_loss(p, cfg, b)
+        batches = (
+            {k: jnp.asarray(v) for k, v in b.items()}
+            for b in click_batches(cfg, batch, 10**9)
+        )
+        return params, loss, batches
+    if spec.family == "gnn":
+        params = init_gnn(key, cfg)
+        def gen():
+            s = 0
+            while True:
+                d = molecular_graphs(4, 8, e_per_graph=24,
+                                     cutoff=cfg.cutoff, seed=s)
+                s += 1
+                yield {k: jnp.asarray(v) for k, v in d.items()}
+        def loss(p, b):
+            return gnn_force_loss(
+                p, cfg, b["positions"], b["species"], b["edge_src"],
+                b["edge_dst"], b["edge_mask"], b["energy"], b["forces"],
+                graph_ids=b["graph_ids"], n_graphs=4,
+            )
+        return params, loss, gen()
+    raise ValueError(f"{arch}: family {spec.family} has no train driver")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+    params, loss_fn, batches = build(args.arch, args.batch, args.seq)
+    step = make_train_step(loss_fn, AdamWConfig(lr=1e-3), donate=False)
+    opt = adamw_init(params)
+    ckpt = AsyncCheckpointer(args.ckpt) if args.ckpt else None
+    mon = StragglerMonitor()
+    t0 = time.time()
+    first = last = None
+    for i, b in zip(range(args.steps), batches):
+        mon.start_step()
+        params, opt, _, m = step(params, opt, None, b)
+        mon.end_step(i)
+        last = float(m["loss"])
+        first = first if first is not None else last
+        if i % 5 == 0:
+            print(f"step {i:4d} loss {last:.4f}")
+        if ckpt and (i + 1) % 10 == 0:
+            ckpt.save(i + 1, {"params": params, "opt": opt})
+    if ckpt:
+        ckpt.wait()
+    print(f"{args.arch}: loss {first:.4f} → {last:.4f} "
+          f"({args.steps} steps, {time.time()-t0:.1f}s, "
+          f"stragglers={len(mon.events)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""GQA attention: train (full causal), prefill, and decode w/ KV cache.
+
+Grouped-query attention covers all five assigned LM archs (MHA is the
+kv_heads == n_heads special case). The decode path is written flash-style
+(blockwise over the KV length) so a 524k-token KV cache (``long_500k``)
+streams through in chunks instead of materializing (B, H, 1, S) scores at
+once — O(S·d) work, VMEM-sized working set per chunk, and the KV length
+dimension stays shardable.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _init, apply_rope
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def init_attention(
+    key,
+    d_model: int,
+    n_heads: int,
+    kv_heads: int,
+    head_dim: Optional[int] = None,
+    qkv_bias: bool = False,
+    dtype=jnp.float32,
+) -> Params:
+    hd = head_dim or d_model // n_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": _init(kq, (d_model, n_heads * hd), dtype=dtype),
+        "wk": _init(kk, (d_model, kv_heads * hd), dtype=dtype),
+        "wv": _init(kv, (d_model, kv_heads * hd), dtype=dtype),
+        "wo": _init(ko, (n_heads * hd, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((kv_heads * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, n_heads, kv_heads, hd):
+    B, S, _ = x.shape
+    q = x @ p["wq"] + p.get("bq", 0.0)
+    k = x @ p["wk"] + p.get("bk", 0.0)
+    v = x @ p["wv"] + p.get("bv", 0.0)
+    return (
+        q.reshape(B, S, n_heads, hd),
+        k.reshape(B, S, kv_heads, hd),
+        v.reshape(B, S, kv_heads, hd),
+    )
+
+
+def attention_train(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D)
+    n_heads: int,
+    kv_heads: int,
+    head_dim: Optional[int] = None,
+    rope_theta: float = 10000.0,
+) -> jnp.ndarray:
+    """Full causal GQA attention (training / prefill)."""
+    B, S, D = x.shape
+    hd = head_dim or D // n_heads
+    g = n_heads // kv_heads
+    q, k, v = _project_qkv(p, x, n_heads, kv_heads, hd)
+    pos = jnp.arange(S)[None, :]
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    # (B, S, Hkv, g, hd): group query heads over shared KV heads
+    q = q.reshape(B, S, kv_heads, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k) / jnp.sqrt(hd).astype(
+        q.dtype
+    )
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(causal[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    out = out.reshape(B, S, n_heads * hd)
+    return out @ p["wo"]
+
+
+def attention_train_chunked(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D)
+    n_heads: int,
+    kv_heads: int,
+    head_dim: Optional[int] = None,
+    rope_theta: float = 10000.0,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style causal GQA: scan over query chunks, online softmax.
+
+    Peak live scores drop from (B, H, S, S) to (B, H, q_chunk, S) — the
+    §Perf memory fix for the 32k prefill cells (EXPERIMENTS.md). Same
+    math as attention_train (tested allclose).
+    """
+    B, S, D = x.shape
+    hd = head_dim or D // n_heads
+    g = n_heads // kv_heads
+    q_chunk = min(q_chunk, S)
+    n_chunks = S // q_chunk
+    assert S % q_chunk == 0, (S, q_chunk)
+    q, k, v = _project_qkv(p, x, n_heads, kv_heads, hd)
+    pos = jnp.arange(S)[None, :]
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    q = q.reshape(B, n_chunks, q_chunk, kv_heads, g, hd)
+    scale = 1.0 / jnp.sqrt(hd)
+    kv_pos = jnp.arange(S)
+
+    def chunk(ci):
+        qc = q[:, ci]  # (B, qc, Hkv, g, hd)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qc, k).astype(jnp.float32)
+        sc = sc * scale
+        q_pos = ci * q_chunk + jnp.arange(q_chunk)
+        causal = kv_pos[None, :] <= q_pos[:, None]  # (qc, S)
+        sc = jnp.where(causal[None, None, None], sc, NEG_INF)
+        pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", pr, v)  # (B, qc, Hkv, g, hd)
+
+    out = jax.lax.map(chunk, jnp.arange(n_chunks))  # (n, B, qc, Hkv, g, hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, n_heads * hd)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------- decode
+
+
+def init_kv_cache(
+    batch: int, max_len: int, kv_heads: int, head_dim: int, dtype=jnp.float32
+) -> Dict[str, jnp.ndarray]:
+    return {
+        "k": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+    }
+
+
+def attention_decode(
+    p: Params,
+    x: jnp.ndarray,  # (B, 1, D) — one new token
+    cache_k: jnp.ndarray,  # (B, S_max, Hkv, hd)
+    cache_v: jnp.ndarray,
+    position: jnp.ndarray,  # () int32 — index of the new token
+    n_heads: int,
+    kv_heads: int,
+    head_dim: Optional[int] = None,
+    rope_theta: float = 10000.0,
+    kv_chunk: int = 2048,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step. Returns (out (B,1,D), new_cache_k, new_cache_v).
+
+    Flash-style: streams the KV cache in ``kv_chunk`` blocks with a
+    running (max, sum, acc) online-softmax state, so peak memory is
+    O(B·H·kv_chunk) regardless of context length (long_500k-safe).
+    """
+    B, _, D = x.shape
+    hd = head_dim or D // n_heads
+    g = n_heads // kv_heads
+    S_max = cache_k.shape[1]
+    q, k_new, v_new = _project_qkv(p, x, n_heads, kv_heads, hd)
+    pos = jnp.full((B, 1), position, jnp.int32)
+    q = apply_rope(q, pos, rope_theta)  # (B, 1, H, hd)
+    k_new = apply_rope(k_new, pos, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), position, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), position, axis=1
+    )
+    q = q.reshape(B, kv_heads, g, hd)
+    kv_chunk = min(kv_chunk, S_max)  # clamp for short caches
+    n_chunks = (S_max + kv_chunk - 1) // kv_chunk
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def chunk_step(c, carry):
+        m, s, acc = carry
+        start = c * kv_chunk
+        kc = jax.lax.dynamic_slice_in_dim(cache_k, start, kv_chunk, 1)
+        vc = jax.lax.dynamic_slice_in_dim(cache_v, start, kv_chunk, 1)
+        idx = start + jnp.arange(kv_chunk)
+        mask = idx <= position  # causal: only written positions
+        sc = jnp.einsum("bhgd,bkhd->bhgk", q, kc).astype(jnp.float32) * scale
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pr = jnp.exp(sc - m_new[..., None])
+        s = s * alpha + jnp.sum(pr, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgk,bkhd->bhgd", pr.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return m_new, s, acc
+
+    m0 = jnp.full((B, kv_heads, g), NEG_INF)
+    s0 = jnp.zeros((B, kv_heads, g), jnp.float32)
+    a0 = jnp.zeros((B, kv_heads, g, hd), jnp.float32)
+    m, s, acc = jax.lax.fori_loop(0, n_chunks, chunk_step, (m0, s0, a0))
+    out = acc / jnp.maximum(s[..., None], 1e-30)
+    out = out.reshape(B, 1, n_heads * hd).astype(x.dtype)
+    return out @ p["wo"], cache_k, cache_v

@@ -1,0 +1,74 @@
+"""Embedding substrate for recsys: EmbeddingBag & friends, JAX-native.
+
+JAX has no ``nn.EmbeddingBag`` and no CSR sparse — the lookup path here IS
+part of the system: ``jnp.take`` over the table + ``jax.ops.segment_sum``
+reduce (ragged layout) or masked sum (padded multi-hot layout, which maps
+to the Pallas ``embedding_bag`` kernel on TPU). Tables row-shard over the
+``model`` mesh axis (classic recsys model parallelism).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import Params, _init
+
+
+def init_embedding_table(key, vocab: int, dim: int, scale: float = 0.01):
+    return {"table": _init(key, (vocab, dim), scale=scale)}
+
+
+def embedding_bag_padded(
+    table: jnp.ndarray,  # (V, d)
+    idx: jnp.ndarray,  # (B, S) int32, -1 padded
+    weights: Optional[jnp.ndarray] = None,
+    combiner: str = "sum",
+) -> jnp.ndarray:
+    """Padded multi-hot bag — routes to the Pallas kernel on TPU."""
+    return kops.embedding_bag(table, idx, weights, combiner)
+
+
+def embedding_bag_ragged(
+    table: jnp.ndarray,  # (V, d)
+    indices: jnp.ndarray,  # (L,) int32 — flat indices
+    segment_ids: jnp.ndarray,  # (L,) int32 — bag of each index
+    n_bags: int,
+    combiner: str = "sum",
+) -> jnp.ndarray:
+    """Ragged bag via take + segment_sum (the JAX-native formulation)."""
+    rows = jnp.take(table, jnp.clip(indices, 0, table.shape[0] - 1), axis=0)
+    rows = jnp.where((indices >= 0)[:, None], rows, 0.0)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(
+            (indices >= 0).astype(jnp.float32), segment_ids,
+            num_segments=n_bags,
+        )
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def hashed_embedding_lookup(
+    table: jnp.ndarray,  # (buckets, d)
+    ids: jnp.ndarray,  # any int ids (unbounded vocab)
+) -> jnp.ndarray:
+    """Hash-trick lookup for unbounded vocabularies (QR-style fallback)."""
+    buckets = table.shape[0]
+    h = (ids.astype(jnp.uint32) * jnp.uint32(2654435761)) % jnp.uint32(buckets)
+    return table[h.astype(jnp.int32)]
+
+
+def multi_field_lookup(
+    tables: jnp.ndarray,  # (F, V, d) — stacked per-field tables
+    ids: jnp.ndarray,  # (B, F) int32
+) -> jnp.ndarray:
+    """One id per field → (B, F, d). Vectorized over fields."""
+    B, F = ids.shape
+    safe = jnp.clip(ids, 0, tables.shape[1] - 1)
+    return jax.vmap(lambda t, i: t[i], in_axes=(0, 1), out_axes=1)(
+        tables, safe
+    )

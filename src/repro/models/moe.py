@@ -1,0 +1,259 @@
+"""Mixture-of-Experts FFN (GShard-style dispatch; EP-shardable).
+
+Covers both assigned MoE archs:
+
+- deepseek-moe-16b: 2 shared + 64 routed experts, top-6, fine-grained
+  (d_ff per expert is small) [arXiv:2401.06066].
+- phi3.5-moe: 16 routed experts, top-2.
+
+Dispatch uses the capacity-based one-hot matmul formulation: tokens pick
+top-k experts; a (T, E, C) dispatch tensor routes tokens to per-expert
+buffers computed as one batched einsum — the canonical TPU formulation
+(dense, static shapes, shardable over E = the ``model`` axis for expert
+parallelism). Load-balancing aux loss per Switch/GShard included.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import Params, _init
+
+
+# Active mesh for the a2a variant (set by the launcher/dry-run before
+# tracing; shard_map needs the concrete mesh object, which can't live in
+# the hashable model config).
+_ACTIVE_MESH = None
+
+
+def set_active_mesh(mesh) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_active_mesh():
+    return _ACTIVE_MESH
+
+
+def _constrain(x, spec: Optional[P]):
+    """Best-effort sharding constraint (no-op outside a mesh context)."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def init_moe(
+    key,
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    n_shared: int = 0,
+    dtype=jnp.float32,
+) -> Params:
+    kr, kg, ki, ko, ksi, kso, ksg = jax.random.split(key, 7)
+    p = {
+        "router": _init(kr, (d_model, n_experts), scale=0.02, dtype=jnp.float32),
+        # stacked expert weights: (E, d, ff) / (E, ff, d) — EP shards dim 0
+        "w_gate": _init(kg, (n_experts, d_model, d_ff), dtype=dtype),
+        "w_in": _init(ki, (n_experts, d_model, d_ff), dtype=dtype),
+        "w_out": _init(ko, (n_experts, d_ff, d_model), dtype=dtype),
+    }
+    if n_shared:
+        p["shared_gate"] = _init(ksg, (d_model, n_shared * d_ff), dtype=dtype)
+        p["shared_in"] = _init(ksi, (d_model, n_shared * d_ff), dtype=dtype)
+        p["shared_out"] = _init(kso, (n_shared * d_ff, d_model), dtype=dtype)
+    return p
+
+
+def moe_ffn(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D)
+    top_k: int,
+    capacity_factor: float = 1.25,
+    capacity: Optional[int] = None,
+    ep_axis: Optional[str] = None,  # mesh axis for expert parallelism
+    dp_axes: Optional[Sequence[str]] = None,  # mesh axes of the token dim
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (B,S,D), aux_loss ()). Static shapes throughout.
+
+    With ``ep_axis``/``dp_axes`` set, explicit sharding constraints pin
+    the dispatch buffers to expert-parallel layout and token arrays to
+    data-parallel layout, turning the dispatch/combine into all-to-alls
+    instead of letting SPMD replicate the (E, C, D) buffer (the §Perf
+    hillclimb fix for the MoE train cells — see EXPERIMENTS.md).
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+    tok_spec = P(tuple(dp_axes), None) if dp_axes else None
+    ep_spec = P(ep_axis, None, None) if ep_axis else None
+    xt = _constrain(x.reshape(T, D), tok_spec)
+    logits = (xt.astype(jnp.float32) @ p["router"])  # (T, E) fp32 routing
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9
+    )  # renormalize over selected (DeepSeek/Mixtral convention)
+
+    C = capacity or max(1, int(capacity_factor * T * top_k / E))
+    # position of each (token, choice) within its expert's buffer
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32)  # (T, k, E)
+    pos_in_e = jnp.cumsum(onehot.reshape(T * top_k, E), axis=0) - 1
+    pos_in_e = (pos_in_e.reshape(T, top_k, E) * onehot).sum(-1)  # (T, k)
+    keep = pos_in_e < C  # capacity drop (overflow tokens fall through)
+    disp_idx = jnp.where(keep, pos_in_e, C)  # C = drop slot
+
+    # dispatch: scatter tokens into (E, C+1, D) buffers, last slot = trash
+    buf = jnp.zeros((E, C + 1, D), x.dtype)
+    e_flat = expert_ids.reshape(-1)
+    c_flat = disp_idx.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(T), top_k)
+    buf = buf.at[e_flat, c_flat].set(xt[t_flat])
+    buf = _constrain(buf, ep_spec)  # EP layout → dispatch = all-to-all
+    xb = buf[:, :C]  # (E, C, D)
+
+    # batched expert SwiGLU (einsum over stacked weights; EP shards E)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xb, p["w_in"])
+    yb = jnp.einsum("ecf,efd->ecd", h, p["w_out"])  # (E, C, D)
+    yb = _constrain(yb, P(ep_axis, None, None) if ep_axis else None)
+
+    # combine: gather back and weight by gates
+    gathered = yb[e_flat, jnp.clip(c_flat, 0, C - 1)]  # (T*k, D)
+    w = (gate_vals.reshape(-1) * keep.reshape(-1)).astype(x.dtype)
+    out = jax.ops.segment_sum(gathered * w[:, None], t_flat, num_segments=T)
+    out = _constrain(out, tok_spec)  # combine = all-to-all back to DP
+
+    if "shared_in" in p:
+        hs = jax.nn.silu(xt @ p["shared_gate"]) * (xt @ p["shared_in"])
+        out = out + hs @ p["shared_out"]
+
+    # Switch-style load balance loss: E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0
+    )  # fraction of tokens whose top-1 is e
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, D), aux
+
+
+def moe_ffn_a2a(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D) — batch sharded over dp_axes
+    top_k: int,
+    mesh,
+    ep_axis: str = "model",
+    dp_axes: Sequence[str] = ("data",),
+    capacity_factor: float = 1.25,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-parallel MoE with EXPLICIT all-to-all dispatch (shard_map).
+
+    §Perf hillclimb attempt #2 for the MoE train cells. Attempt #1
+    (sharding constraints on the auto-SPMD dispatch) was REFUTED: XLA
+    still replicates every token to every device (a 320 GB/device
+    all-gather on deepseek/train_4k) and replicates the expert einsums
+    across the data axis. This variant makes both the communication and
+    the compute placement explicit — the GShard/MegaBlocks pattern on a
+    2D (data × model) mesh:
+
+      1. tokens are further split across the EP (model) axis inside the
+         shard_map, so routing/dispatch is computed once per token;
+      2. each device scatters its token chunk into per-expert buffers
+         (E, C_chunk, D) — C_chunk is per-chunk capacity, so buffers are
+         ~E/ep·ep smaller than the global-capacity formulation;
+      3. ONE all_to_all over the EP axis delivers every expert-block to
+         its owning column → (E_local, ep·C_chunk, D);
+      4. local expert FFN (fair share: E_local·ep·C_chunk slots/device);
+      5. ONE all_to_all back + local combine + all_gather of the token
+         chunks.
+
+    Bytes moved/device/layer ≈ 2·T_chunk·k·cf·D + T_local·D — dense,
+    batched, routed-tokens-only: the paper's lazy batched-loading insight
+    applied at mesh scale.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    ep = mesh.shape[ep_axis]
+    E_local = E // ep
+    assert E % ep == 0, (E, ep)
+
+    x_spec = P(tuple(dp_axes), None, None)
+    w_spec = P(ep_axis, None, None)  # stacked expert weights: EP on dim 0
+
+    def local(xb, router, w_gate, w_in, w_out):
+        # xb: (B_local, S, D) — replicated across ep; w_*: (E_local, ...)
+        Bl = xb.shape[0]
+        T = Bl * S
+        assert T % ep == 0, (T, ep)
+        Tc = T // ep  # this device's token chunk
+        j = jax.lax.axis_index(ep_axis)
+        xt = jax.lax.dynamic_slice_in_dim(
+            xb.reshape(T, D), j * Tc, Tc, axis=0
+        )  # (Tc, D)
+        logits = xt.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, ids = jax.lax.top_k(probs, top_k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        C = max(1, int(capacity_factor * Tc * top_k / E))
+        onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot.reshape(Tc * top_k, E), axis=0) - 1
+        pos = (pos.reshape(Tc, top_k, E) * onehot).sum(-1)
+        keep = pos < C
+        slot = jnp.where(keep, pos, C)
+        e_flat = ids.reshape(-1)
+        c_flat = slot.reshape(-1)
+        t_flat = jnp.repeat(jnp.arange(Tc), top_k)
+        buf = jnp.zeros((E, C + 1, D), xb.dtype)
+        buf = buf.at[e_flat, c_flat].set(xt[t_flat])[:, :C]
+        # dispatch a2a over EP: (ep, E_local, C, D) → recv[s] = block of
+        # MY experts from column s
+        buf = buf.reshape(ep, E_local, C, D)
+        recv = jax.lax.all_to_all(
+            buf, ep_axis, split_axis=0, concat_axis=0, tiled=False
+        )
+        recv = jnp.moveaxis(recv, 0, 1).reshape(E_local, ep * C, D)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, w_gate))
+        h = h * jnp.einsum("ecd,edf->ecf", recv, w_in)
+        y = jnp.einsum("ecf,efd->ecd", h, w_out)  # (E_local, ep·C, D)
+        # combine a2a back: every column retrieves its tokens' outputs
+        y = jnp.moveaxis(y.reshape(E_local, ep, C, D), 1, 0)
+        back = jax.lax.all_to_all(
+            y, ep_axis, split_axis=0, concat_axis=0, tiled=False
+        )
+        yb = back.reshape(E, C, D)
+        gathered = yb[e_flat, jnp.clip(c_flat, 0, C - 1)]
+        w = (gates.reshape(-1) * keep.reshape(-1)).astype(xb.dtype)
+        out_c = jax.ops.segment_sum(gathered * w[:, None], t_flat,
+                                    num_segments=Tc)  # (Tc, D)
+        # reassemble the full local token set from the ep chunks
+        out = jax.lax.all_gather(
+            out_c, ep_axis, axis=0, tiled=True
+        )  # (T, D)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), 0)
+        aux = E * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, (ep_axis,) + tuple(dp_axes))
+        return out.reshape(Bl, S, D), aux
+
+    mapped = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    out, aux = mapped(x, p["router"], p["w_gate"], p["w_in"], p["w_out"])
+    if "shared_in" in p:
+        xt = x.reshape(-1, D)
+        hs = jax.nn.silu(xt @ p["shared_gate"]) * (xt @ p["shared_in"])
+        out = out + (hs @ p["shared_out"]).reshape(B, S, D)
+    return out, aux

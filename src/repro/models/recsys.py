@@ -1,0 +1,281 @@
+"""Assigned recsys architectures: DLRM-RM2, DIN, AutoInt, BST.
+
+All four share the template: sparse embedding lookup (the hot path; see
+:mod:`repro.models.embeddings`) → feature interaction (dot / target-attn /
+self-attn / transformer-seq) → small MLP → logit. Pure-functional params,
+static shapes, batch shardable over ``data``; embedding tables row-shard
+over ``model``.
+
+Retrieval scoring (``retrieval_cand``: 1 query × 1e6 candidates) is
+``retrieval_score`` — batched dot + top-k through the Pallas scan kernels,
+and the integration point for the WebANNS engine (HNSW-indexed retrieval
+vs brute force; see examples/recsys_retrieval.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.embeddings import multi_field_lookup
+from repro.models.layers import Params, _init
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str = "dlrm-rm2"
+    model: str = "dlrm"  # 'dlrm' | 'din' | 'autoint' | 'bst'
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab: int = 100_000  # rows per sparse table
+    seq_len: int = 0  # user-history length (din/bst)
+    bot_mlp: Tuple[int, ...] = (512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    attn_mlp: Tuple[int, ...] = (80, 40)  # din
+    n_attn_layers: int = 3  # autoint
+    n_heads: int = 2
+    d_attn: int = 32
+    n_blocks: int = 1  # bst
+
+
+def _init_mlp_stack(key, d_in: int, widths: Tuple[int, ...]) -> Params:
+    ws, bs = [], []
+    for i, w in enumerate(widths):
+        key, k = jax.random.split(key)
+        ws.append(_init(k, (d_in, w)))
+        bs.append(jnp.zeros((w,), jnp.float32))
+        d_in = w
+    return {"w": ws, "b": bs}
+
+
+def _mlp_stack(p: Params, x: jnp.ndarray, final_act: bool = False):
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ------------------------------------------------------------------ DLRM
+
+
+def init_dlrm(key, cfg: RecsysConfig) -> Params:
+    kt, kb, ktop = jax.random.split(key, 3)
+    F, V, D = cfg.n_sparse, cfg.vocab, cfg.embed_dim
+    n_vec = F + 1
+    n_inter = n_vec * (n_vec - 1) // 2
+    top_in = n_inter + cfg.bot_mlp[-1]
+    return {
+        "tables": _init(kt, (F, V, D), scale=0.01),
+        "bot": _init_mlp_stack(kb, cfg.n_dense, cfg.bot_mlp),
+        "top": _init_mlp_stack(ktop, top_in, cfg.top_mlp),
+    }
+
+
+def dlrm_forward(p: Params, cfg: RecsysConfig, dense: jnp.ndarray,
+                 sparse: jnp.ndarray) -> jnp.ndarray:
+    """dense (B, n_dense), sparse (B, F) ids → logits (B,)."""
+    B = dense.shape[0]
+    x_d = _mlp_stack(p["bot"], dense, final_act=True)  # (B, D)
+    x_s = multi_field_lookup(p["tables"], sparse)  # (B, F, D)
+    vecs = jnp.concatenate([x_d[:, None, :], x_s], axis=1)  # (B, F+1, D)
+    # dot interaction: upper triangle of the gram matrix
+    gram = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    F1 = vecs.shape[1]
+    iu = jnp.triu_indices(F1, k=1)
+    inter = gram[:, iu[0], iu[1]]  # (B, F1*(F1-1)/2)
+    top_in = jnp.concatenate([x_d, inter], axis=1)
+    return _mlp_stack(p["top"], top_in)[:, 0]
+
+
+# ------------------------------------------------------------------- DIN
+
+
+def init_din(key, cfg: RecsysConfig) -> Params:
+    kt, ka, km = jax.random.split(key, 3)
+    D = cfg.embed_dim
+    # attention MLP input: [hist, target, hist-target, hist*target]
+    return {
+        "item_table": _init(kt, (cfg.vocab, D), scale=0.01),
+        "attn": _init_mlp_stack(ka, 4 * D, cfg.attn_mlp + (1,)),
+        "mlp": _init_mlp_stack(km, 2 * D, cfg.top_mlp[:-1] + (1,)),
+    }
+
+
+def din_forward(p: Params, cfg: RecsysConfig, hist: jnp.ndarray,
+                target: jnp.ndarray) -> jnp.ndarray:
+    """hist (B, S) item ids (-1 pad), target (B,) → logits (B,)."""
+    T = p["item_table"]
+    h = T[jnp.clip(hist, 0, T.shape[0] - 1)]  # (B, S, D)
+    t = T[jnp.clip(target, 0, T.shape[0] - 1)]  # (B, D)
+    tb = jnp.broadcast_to(t[:, None, :], h.shape)
+    a_in = jnp.concatenate([h, tb, h - tb, h * tb], axis=-1)
+    scores = _mlp_stack(p["attn"], a_in)[..., 0]  # (B, S)
+    mask = hist >= 0
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1) * mask  # target attention
+    pooled = jnp.einsum("bs,bsd->bd", w, h)
+    return _mlp_stack(p["mlp"], jnp.concatenate([pooled, t], -1))[:, 0]
+
+
+# --------------------------------------------------------------- AutoInt
+
+
+def _init_autoint_layer(key, d_in: int, n_heads: int, d_attn: int) -> Params:
+    kq, kk, kv, kr = jax.random.split(key, 4)
+    W = n_heads * d_attn
+    return {
+        "wq": _init(kq, (d_in, W)), "wk": _init(kk, (d_in, W)),
+        "wv": _init(kv, (d_in, W)), "wres": _init(kr, (d_in, W)),
+    }
+
+
+def init_autoint(key, cfg: RecsysConfig) -> Params:
+    kt, k0, kl, ko = jax.random.split(key, 4)
+    F, V, D = cfg.n_sparse, cfg.vocab, cfg.embed_dim
+    H, Da = cfg.n_heads, cfg.d_attn
+    W = H * Da
+    # layer 0 projects D → W; deeper layers are W → W (stackable)
+    p = {
+        "tables": _init(kt, (F, V, D), scale=0.01),
+        "layer0": _init_autoint_layer(k0, D, H, Da),
+        "out": _init(ko, (F * W, 1)),
+    }
+    if cfg.n_attn_layers > 1:
+        p["layers"] = jax.vmap(
+            lambda k: _init_autoint_layer(k, W, H, Da)
+        )(jax.random.split(kl, cfg.n_attn_layers - 1))
+    return p
+
+
+def autoint_forward(p: Params, cfg: RecsysConfig,
+                    sparse: jnp.ndarray) -> jnp.ndarray:
+    """sparse (B, F) ids → logits (B,). Self-attention over fields."""
+    H, Da = cfg.n_heads, cfg.d_attn
+    x = multi_field_lookup(p["tables"], sparse)  # (B, F, D)
+    B, F, _ = x.shape
+
+    def apply_layer(x, lp):
+        q = (x @ lp["wq"]).reshape(B, F, H, Da)
+        k = (x @ lp["wk"]).reshape(B, F, H, Da)
+        v = (x @ lp["wv"]).reshape(B, F, H, Da)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k) / jnp.sqrt(Da)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(B, F, H * Da)
+        res = x @ lp["wres"]
+        return jax.nn.relu(o + res)
+
+    x = apply_layer(x, p["layer0"])
+    if "layers" in p:
+        def body(x, lp):
+            return apply_layer(x, lp), None
+        x, _ = jax.lax.scan(body, x, p["layers"])
+    return (x.reshape(B, -1) @ p["out"])[:, 0]
+
+
+# ------------------------------------------------------------------- BST
+
+
+def init_bst(key, cfg: RecsysConfig) -> Params:
+    kt, kp, kb, km = jax.random.split(key, 4)
+    D = cfg.embed_dim
+    H = cfg.n_heads
+
+    def block(k):
+        kq, kk, kv, ko, k1, k2 = jax.random.split(k, 6)
+        return {
+            "wq": _init(kq, (D, D)), "wk": _init(kk, (D, D)),
+            "wv": _init(kv, (D, D)), "wo": _init(ko, (D, D)),
+            "ff1": _init(k1, (D, 4 * D)), "ff2": _init(k2, (4 * D, D)),
+        }
+
+    blocks = jax.vmap(block)(jax.random.split(kb, cfg.n_blocks))
+    S1 = cfg.seq_len + 1  # history + target item
+    return {
+        "item_table": _init(kt, (cfg.vocab, D), scale=0.01),
+        "pos_embed": _init(kp, (S1, D), scale=0.01),
+        "blocks": blocks,
+        "mlp": _init_mlp_stack(km, S1 * D, cfg.top_mlp[:-1] + (1,)),
+    }
+
+
+def bst_forward(p: Params, cfg: RecsysConfig, hist: jnp.ndarray,
+                target: jnp.ndarray) -> jnp.ndarray:
+    """Behavior Sequence Transformer: hist (B,S), target (B,) → logit."""
+    T = p["item_table"]
+    D, H = cfg.embed_dim, cfg.n_heads
+    seq = jnp.concatenate([hist, target[:, None]], axis=1)  # (B, S+1)
+    x = T[jnp.clip(seq, 0, T.shape[0] - 1)] + p["pos_embed"][None]
+    mask = (seq >= 0)[:, None, None, :]  # (B,1,1,S+1)
+    B, S1, _ = x.shape
+    hd = D // H
+
+    def apply_block(x, bp):
+        q = (x @ bp["wq"]).reshape(B, S1, H, hd)
+        k = (x @ bp["wk"]).reshape(B, S1, H, hd)
+        v = (x @ bp["wv"]).reshape(B, S1, H, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(hd)
+        s = jnp.where(mask, s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S1, D)
+        x = x + o @ bp["wo"]
+        h = jax.nn.relu(x @ bp["ff1"]) @ bp["ff2"]
+        return x + h
+
+    for i in range(cfg.n_blocks):
+        bp = jax.tree_util.tree_map(lambda a: a[i], p["blocks"])
+        x = apply_block(x, bp)
+    return _mlp_stack(p["mlp"], x.reshape(B, -1))[:, 0]
+
+
+# -------------------------------------------------------------- retrieval
+
+
+def retrieval_score(
+    query_vec: jnp.ndarray,  # (B, D)
+    candidates: jnp.ndarray,  # (N, D)
+    k: int = 100,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Score B queries against N candidates, return top-k (ip metric).
+
+    The batched-dot + split-K top-k path (Pallas kernels on TPU). For the
+    ANNS-indexed variant see repro.core.engine / examples.
+    """
+    return kops.distance_topk(query_vec, candidates, k, metric="ip")
+
+
+# ------------------------------------------------------------ entry point
+
+
+def recsys_forward(p: Params, cfg: RecsysConfig, batch: Dict) -> jnp.ndarray:
+    if cfg.model == "dlrm":
+        return dlrm_forward(p, cfg, batch["dense"], batch["sparse"])
+    if cfg.model == "din":
+        return din_forward(p, cfg, batch["hist"], batch["target"])
+    if cfg.model == "autoint":
+        return autoint_forward(p, cfg, batch["sparse"])
+    if cfg.model == "bst":
+        return bst_forward(p, cfg, batch["hist"], batch["target"])
+    raise ValueError(cfg.model)
+
+
+def init_recsys(key, cfg: RecsysConfig) -> Params:
+    return {
+        "dlrm": init_dlrm, "din": init_din,
+        "autoint": init_autoint, "bst": init_bst,
+    }[cfg.model](key, cfg)
+
+
+def recsys_loss(p: Params, cfg: RecsysConfig, batch: Dict) -> jnp.ndarray:
+    logits = recsys_forward(p, cfg, batch)
+    labels = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,309 @@
+"""Decoder-only LM: dense or MoE FFN, GQA attention, scanned layers.
+
+One model definition covers all five assigned LM archs (see
+``repro/configs``): dense (stablelm, qwen2.5, mistral-large) and MoE
+(deepseek-moe, phi3.5-moe) differ only in the FFN block. Layers are
+scanned with stacked params; activation checkpointing (remat) is a config
+flag — both are required to keep the 88-layer/123B dry-run compilable and
+memory-sane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models.layers import (
+    Params,
+    cross_entropy_loss,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    kv_heads: int = 2
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # MoE (n_experts == 0 → dense)
+    n_experts: int = 0
+    top_k: int = 2
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    # execution
+    dtype: str = "float32"
+    remat: bool = False
+    # MoE expert-parallel sharding hints (mesh axis names); None = let
+    # SPMD decide (baseline). Set by the optimized dry-run variant.
+    ep_axis: "Optional[str]" = None
+    dp_axes: "Optional[tuple]" = None
+    # 'dispatch' = capacity scatter under auto-SPMD (baseline);
+    # 'a2a' = explicit shard_map all-to-all EP (requires set_active_mesh)
+    moe_impl: str = "dispatch"
+    # flash-style chunked attention for long prefill (0 = off/baseline)
+    q_chunk: int = 0
+    # analysis-only: partial unroll factor for the layer scan (0 = follow
+    # `unroll`); the cost-correction fit lowers at 1 and 2 (cheap) and
+    # extrapolates affinely instead of fully unrolling 88 layers
+    layer_unroll: int = 0
+    unroll: bool = False  # analysis mode: unroll scans so HLO cost
+    # analysis counts every layer (see launch/dryrun.py)
+    aux_loss_weight: float = 0.01
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        """Total parameters (for MODEL_FLOPS = 6·N·D roofline terms)."""
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.kv_heads * hd \
+            + self.n_heads * hd * d
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * ff + d * self.n_experts \
+                + (3 * d * ff * self.n_shared if self.n_shared else 0)
+        else:
+            ffn = 3 * d * ff
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: 6·N_active·D convention)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        hd = self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.kv_heads * hd \
+            + self.n_heads * hd * d
+        ffn = self.top_k * 3 * d * ff + d * self.n_experts \
+            + 3 * d * ff * self.n_shared
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + self.vocab * d + d
+
+
+def _dtype(cfg: LMConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.dtype]
+
+
+def init_layer(key, cfg: LMConfig) -> Params:
+    ka, kf, kn1, kn2 = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {
+        "attn": A.init_attention(
+            ka, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim,
+            cfg.qkv_bias, dtype=dt,
+        ),
+        "ln1": init_rmsnorm(cfg.d_model),
+        "ln2": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.is_moe:
+        p["moe"] = M.init_moe(
+            kf, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.n_shared, dtype=dt
+        )
+    else:
+        p["mlp"] = init_mlp(kf, cfg.d_model, cfg.d_ff, dtype=dt)
+    return p
+
+
+def init_lm(key, cfg: LMConfig) -> Params:
+    ke, kl, kn = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    # stacked layer params: vmap init over the layer axis
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model, dtype=_dtype(cfg)),
+        "layers": layers,
+        "ln_f": init_rmsnorm(cfg.d_model),
+    }
+
+
+def _layer_fwd(cfg: LMConfig, lp: Params, x: jnp.ndarray):
+    if cfg.q_chunk:
+        h = A.attention_train_chunked(
+            lp["attn"], rmsnorm(lp["ln1"], x), cfg.n_heads, cfg.kv_heads,
+            cfg.head_dim, cfg.rope_theta, q_chunk=cfg.q_chunk,
+        )
+    else:
+        h = A.attention_train(
+            lp["attn"], rmsnorm(lp["ln1"], x), cfg.n_heads, cfg.kv_heads,
+            cfg.head_dim, cfg.rope_theta,
+        )
+    x = x + h
+    if cfg.is_moe:
+        if cfg.moe_impl == "a2a" and M.get_active_mesh() is not None:
+            f, aux = M.moe_ffn_a2a(
+                lp["moe"], rmsnorm(lp["ln2"], x), cfg.top_k,
+                M.get_active_mesh(), ep_axis=cfg.ep_axis or "model",
+                dp_axes=cfg.dp_axes or ("data",),
+                capacity_factor=cfg.capacity_factor,
+            )
+        else:
+            f, aux = M.moe_ffn(
+                lp["moe"], rmsnorm(lp["ln2"], x), cfg.top_k,
+                cfg.capacity_factor, ep_axis=cfg.ep_axis,
+                dp_axes=cfg.dp_axes,
+            )
+    else:
+        f, aux = mlp(lp["mlp"], rmsnorm(lp["ln2"], x)), jnp.float32(0)
+    return x + f, aux
+
+
+def forward_hidden(
+    params: Params, tokens: jnp.ndarray, cfg: LMConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) → (hidden (B, S, D) post-final-norm, aux_loss ())."""
+    x = embed(params["embed"], tokens).astype(_dtype(cfg))
+
+    def body(x, lp):
+        y, aux = _layer_fwd(cfg, lp, x)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    lu = cfg.layer_unroll or (cfg.n_layers if cfg.unroll else 1)
+    x, auxs = jax.lax.scan(body, x, params["layers"], unroll=lu)
+    return rmsnorm(params["ln_f"], x), jnp.sum(auxs)
+
+
+def forward(
+    params: Params, tokens: jnp.ndarray, cfg: LMConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) → (logits (B, S, V), aux_loss ()). Scan over layers."""
+    x, aux = forward_hidden(params, tokens, cfg)
+    return unembed(params["embed"], x), aux
+
+
+def chunked_cross_entropy(
+    x: jnp.ndarray,  # (B, S, D) final hidden states
+    table: jnp.ndarray,  # (V, D) embedding table (tied unembed)
+    labels: jnp.ndarray,  # (B, S)
+    chunk: int = 512,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """CE without materializing (B, S, V): scan over sequence chunks.
+
+    Peak live logits = (B, chunk, V) — the memory fix that makes the
+    train_4k cells of the 100k+-vocab archs fit (DESIGN/EXPERIMENTS).
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xc = x.reshape(B, n, chunk, D).swapaxes(0, 1)  # (n, B, chunk, D)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        xi, li = inp
+        logits = (xi @ table.T).astype(jnp.float32)  # (B, chunk, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0), (xc, lc),
+                            unroll=n if unroll else 1)
+    return total / (B * S)
+
+
+def lm_loss(
+    params: Params, tokens: jnp.ndarray, labels: jnp.ndarray, cfg: LMConfig,
+    loss_chunk: int = 512,
+) -> jnp.ndarray:
+    x, aux = forward_hidden(params, tokens, cfg)
+    ce = chunked_cross_entropy(
+        x, params["embed"]["table"], labels, chunk=loss_chunk,
+        unroll=cfg.unroll,
+    )
+    return ce + cfg.aux_loss_weight * aux
+
+
+def last_token_logits(
+    params: Params, tokens: jnp.ndarray, cfg: LMConfig
+) -> jnp.ndarray:
+    """Prefill: logits at the final position only (no (B,S,V) tensor)."""
+    x, _ = forward_hidden(params, tokens, cfg)
+    return unembed(params["embed"], x[:, -1])
+
+
+# ----------------------------------------------------------------- decode
+
+
+def init_decode_state(
+    cfg: LMConfig, batch: int, max_len: int
+) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    return {
+        "k": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.kv_heads, cfg.hd), dt
+        ),
+        "v": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.kv_heads, cfg.hd), dt
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(
+    params: Params,
+    state: Dict[str, Any],
+    tokens: jnp.ndarray,  # (B, 1) — new token per sequence
+    cfg: LMConfig,
+    kv_chunk: int = 2048,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One token of autoregressive decode against the KV cache.
+
+    The per-layer scan carries (x, pos) and scans over (layer_params,
+    cache_k, cache_v), returning updated caches — KV updates stay inside
+    the scan so the whole step is one fused program.
+    """
+    x = embed(params["embed"], tokens).astype(_dtype(cfg))
+    pos = state["pos"]
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        h, ck, cv = A.attention_decode(
+            lp["attn"], rmsnorm(lp["ln1"], x), ck, cv, pos,
+            cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.rope_theta,
+            kv_chunk=kv_chunk,
+        )
+        x = x + h
+        if cfg.is_moe:
+            f, _ = M.moe_ffn(
+                lp["moe"], rmsnorm(lp["ln2"], x), cfg.top_k,
+                cfg.capacity_factor, ep_axis=cfg.ep_axis,
+                dp_axes=cfg.dp_axes,
+            )
+        else:
+            f = mlp(lp["mlp"], rmsnorm(lp["ln2"], x))
+        return x + f, (ck, cv)
+
+    lu = cfg.layer_unroll or (cfg.n_layers if cfg.unroll else 1)
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], state["k"], state["v"]), unroll=lu,
+    )
+    x = rmsnorm(params["ln_f"], x)
+    logits = unembed(params["embed"], x)  # (B, 1, V)
+    new_state = {"k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_state

@@ -1,0 +1,107 @@
+"""RAG pipeline: WebANNS retrieval → LM generation (the integration the
+paper targets — in-browser ANNS feeding LLM web apps, §1).
+
+The retrieval stage is the WebANNS engine (tiered store + lazy loading);
+the generation stage is any LM arch from the zoo. The HBM budget split
+between the ANNS cache and the KV cache is decided by the paper's
+cache-size optimizer: ``budget_retrieval`` runs Algorithm 2 with θ set so
+retrieval stays under its latency share, then hands the remaining bytes
+to the serving KV allocation — the paper's "don't disrupt other browser
+functionality" objective, TPU-translated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cache_opt import (
+    QueryTestStats,
+    optimize_memory_size,
+)
+from repro.core.engine import WebANNSEngine
+
+
+@dataclasses.dataclass
+class RAGResult:
+    query: str
+    retrieved_ids: np.ndarray
+    retrieved_texts: List[Optional[str]]
+    prompt_tokens: np.ndarray
+    generated: Optional[np.ndarray] = None
+    retrieval_stats: Optional[object] = None
+
+
+class RAGPipeline:
+    def __init__(
+        self,
+        engine: WebANNSEngine,
+        embed_fn: Callable[[str], np.ndarray],
+        tokenize_fn: Callable[[str, List[str]], np.ndarray],
+        generate_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        k: int = 4,
+        ef: int = 64,
+    ):
+        self.engine = engine
+        self.embed_fn = embed_fn
+        self.tokenize_fn = tokenize_fn
+        self.generate_fn = generate_fn
+        self.k = k
+        self.ef = ef
+
+    def retrieve(self, query: str) -> Tuple[np.ndarray, List, object]:
+        qv = self.embed_fn(query)
+        ids, _, stats = self.engine.query(qv, k=self.k, ef=self.ef)
+        texts = self.engine.get_texts(ids)
+        return ids, texts, stats
+
+    def __call__(self, query: str) -> RAGResult:
+        ids, texts, stats = self.retrieve(query)
+        prompt = self.tokenize_fn(query, [t or "" for t in texts])
+        out = RAGResult(
+            query=query, retrieved_ids=ids, retrieved_texts=texts,
+            prompt_tokens=prompt, retrieval_stats=stats,
+        )
+        if self.generate_fn is not None:
+            out.generated = self.generate_fn(prompt)
+        return out
+
+
+def budget_retrieval(
+    engine: WebANNSEngine,
+    probe_queries: np.ndarray,
+    hbm_budget_bytes: int,
+    p: float = 0.8,
+    t_theta: float = 0.1,
+    ef: int = 64,
+) -> Tuple[int, int]:
+    """Split an HBM budget between the ANNS cache and the KV cache.
+
+    Runs Algorithm 2 to find the smallest ANNS cache that keeps retrieval
+    latency in budget; everything left goes to serving. Returns
+    (anns_cache_items, kv_budget_bytes).
+    """
+    bytes_per_item = engine.dim * 4
+    c0 = min(engine.n, hbm_budget_bytes // bytes_per_item)
+
+    def query_test(c):
+        engine.resize_cache(c)
+        engine.warm_cache()
+        agg = []
+        for q in probe_queries:
+            _, _, s = engine.query(q, k=4, ef=ef)
+            agg.append(s)
+        n_db = float(np.mean([s.n_db for s in agg]))
+        n_q = float(np.mean([s.n_visited for s in agg]))
+        t_q = float(np.mean([s.t_query for s in agg]))
+        t_db = engine.external.access_cost(ef)
+        return QueryTestStats(n_db=n_db, n_q=n_q, t_query=t_q, t_db=t_db)
+
+    res = optimize_memory_size(query_test, c0=c0, p=p, t_theta=t_theta,
+                               max_iters=6)
+    engine.resize_cache(res.c_best)
+    engine.warm_cache()
+    kv_budget = hbm_budget_bytes - res.c_best * bytes_per_item
+    return res.c_best, kv_budget

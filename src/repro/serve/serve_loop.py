@@ -1,0 +1,64 @@
+"""Serving steps: prefill + decode factories (the inference-shape cells).
+
+``serve_step`` semantics per the assignment: decode shapes lower ONE new
+token against a populated KV cache of ``seq_len`` (not a train_step).
+Prefill shapes lower the full-sequence forward that populates the cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+def make_prefill_step(cfg: T.LMConfig):
+    """(params, tokens (B,S)) → (logits last position, kv caches)."""
+
+    def prefill(params, tokens):
+        # last-position logits only — never materializes (B, S, V)
+        return T.last_token_logits(params, tokens, cfg)
+
+    return prefill
+
+
+def make_decode_step(cfg: T.LMConfig, kv_chunk: int = 2048):
+    """One-token decode against the KV cache (the decode_* dry-run cell)."""
+
+    def decode(params, state, tokens):
+        return T.decode_step(params, state, tokens, cfg, kv_chunk=kv_chunk)
+
+    return decode
+
+
+def greedy_generate(
+    params, cfg: T.LMConfig, prompt: jnp.ndarray, n_new: int,
+    max_len: Optional[int] = None, kv_chunk: int = 256,
+):
+    """Host loop: prefill the prompt token-by-token, then greedy decode.
+
+    (Reference implementation for the examples/tests; the batched
+    continuous-batching path lives in scheduler.py.)
+    """
+    B, S = prompt.shape
+    max_len = max_len or (S + n_new)
+    state = T.init_decode_state(cfg, B, max_len)
+    step = jax.jit(functools.partial(
+        T.decode_step, cfg=cfg, kv_chunk=kv_chunk
+    ))
+    logits = None
+    for s in range(S):  # prefill via decode steps (cache fill)
+        logits, state = step(params, state, prompt[:, s : s + 1])
+    out = [prompt]
+    tok = None
+    for _ in range(n_new):
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(
+            jnp.int32
+        )
+        out.append(tok)
+        logits, state = step(params, state, tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,68 @@
+"""Gradient compression with error feedback (cross-pod DP traffic saver).
+
+int8 uniform quantization per leaf with an error-feedback residual
+(1-bit-Adam / EF-SGD lineage): the all-reduced payload shrinks 4x (fp32)
+or 2x (bf16) while the residual keeps the optimizer unbiased over time.
+Applied at the gradient-accumulation boundary in the train step, i.e.
+exactly where the cross-pod all-reduce happens in the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = True
+    bits: int = 8  # 8 → int8 payload
+    min_size: int = 1024  # leaves smaller than this skip compression
+
+
+def _quantize(g: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.max(jnp.abs(g)) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf_ef(
+    cfg: CompressionConfig, g: jnp.ndarray, residual: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (decompressed_g, new_residual, abs_err)."""
+    if g.size < cfg.min_size:
+        return g.astype(jnp.float32), residual, jnp.float32(0)
+    gf = g.astype(jnp.float32) + residual
+    q, scale = _quantize(gf, cfg.bits)
+    deq = _dequantize(q, scale)
+    new_residual = gf - deq
+    err = jnp.mean(jnp.abs(new_residual))
+    return deq, new_residual, err
+
+
+def compress_tree_ef(
+    cfg: CompressionConfig, grads, ef_state
+) -> Tuple[Any, Any, jnp.ndarray]:
+    """Compress every leaf; ef_state is a congruent residual pytree."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef_state)
+    outs = [compress_leaf_ef(cfg, g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_r = treedef.unflatten([o[1] for o in outs])
+    err = sum(o[2] for o in outs) / max(len(outs), 1)
+    return new_g, new_r, err
+
+
+def init_ef_state(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )

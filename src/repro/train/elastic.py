@@ -1,0 +1,133 @@
+"""Elastic scaling + straggler mitigation (1000+-node posture).
+
+- :class:`ElasticMesh` — recover onto a *different* device count: restore
+  the latest complete checkpoint with new shardings (checkpoint.py's
+  re-shard path) and resume. Works because every state pytree (params,
+  optimizer, error-feedback) is mesh-agnostic host-side.
+- :class:`StragglerMonitor` — per-step deadline tracking with an EWMA of
+  step time; steps exceeding ``k·ewma`` are flagged, and the input
+  pipeline's redundant-dispatch hook can resubmit the slow shard's work
+  (on real fleets this is the backup-worker trick; here the policy layer
+  is implemented + unit-tested, the transport is the pipeline's).
+- :class:`FailureSimulator` — test hook that raises on chosen steps to
+  exercise the checkpoint/restart path end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import latest_step, restore_checkpoint
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    threshold: float
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker; flags and (optionally) acts on outliers."""
+
+    def __init__(self, factor: float = 3.0, alpha: float = 0.2,
+                 min_history: int = 3,
+                 on_straggler: Optional[Callable[[StragglerEvent], None]] = None):
+        self.factor = factor
+        self.alpha = alpha
+        self.min_history = min_history
+        self.on_straggler = on_straggler
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.events: List[StragglerEvent] = []
+        self._t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self, step: int) -> bool:
+        """Returns True if this step was a straggler."""
+        dt = time.perf_counter() - self._t0
+        self.n += 1
+        flagged = False
+        if self.ewma is not None and self.n > self.min_history:
+            thr = self.factor * self.ewma
+            if dt > thr:
+                ev = StragglerEvent(step, dt, thr)
+                self.events.append(ev)
+                if self.on_straggler:
+                    self.on_straggler(ev)
+                flagged = True
+        if not flagged:  # don't poison the EWMA with outliers
+            self.ewma = dt if self.ewma is None else (
+                (1 - self.alpha) * self.ewma + self.alpha * dt
+            )
+        return flagged
+
+    def observe(self, step: int, duration: float) -> bool:
+        """Deadline check with an externally measured duration (tests)."""
+        self._t0 = time.perf_counter() - duration
+        return self.end_step(step)
+
+
+class FailureSimulator:
+    """Deterministic failure injection for restart tests."""
+
+    def __init__(self, fail_at_steps):
+        self.fail_at = set(fail_at_steps)
+        self.failed = []
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.failed.append(step)
+            raise RuntimeError(f"simulated node failure at step {step}")
+
+
+class ElasticMesh:
+    """Checkpoint-based elastic re-scale: resume state on a new mesh."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+
+    def resume(self, like: Any, shardings: Any = None):
+        """Returns (step, state) from the latest complete checkpoint, or
+        (0, None) when starting fresh."""
+        s = latest_step(self.ckpt_dir)
+        if s is None:
+            return 0, None
+        return s, restore_checkpoint(self.ckpt_dir, s, like, shardings)
+
+
+def run_with_restarts(
+    make_state: Callable[[], Any],
+    run_steps: Callable[[Any, int, int], Any],
+    ckpt_dir: str,
+    total_steps: int,
+    ckpt_every: int,
+    max_restarts: int = 10,
+):
+    """Supervision loop: run → on failure, restore latest → continue.
+
+    ``run_steps(state, start, stop)`` must checkpoint every
+    ``ckpt_every`` steps and may raise at any point.
+    """
+    from repro.train.checkpoint import save_checkpoint
+
+    elastic = ElasticMesh(ckpt_dir)
+    restarts = 0
+    while True:
+        start, restored = elastic.resume(make_state())
+        state = restored if restored is not None else make_state()
+        try:
+            state = run_steps(state, start, total_steps)
+            return state, restarts
+        except RuntimeError:
+            restarts += 1
+            if restarts > max_restarts:
+                raise

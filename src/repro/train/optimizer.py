@@ -1,0 +1,107 @@
+"""AdamW + gradient clipping, pure JAX (no optax dependency).
+
+Optimizer state is a pytree congruent with params, so the ZeRO-style
+sharding rules in :mod:`repro.distributed.sharding` apply to it directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any  # first moment (pytree like params)
+    v: Any  # second moment
+    count: jnp.ndarray  # () int32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    max_grad_norm: Optional[float] = 1.0
+    warmup_steps: int = 0
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def _schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    lr = jnp.float32(cfg.lr)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+        lr = lr * warm
+    return lr
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads, state: AdamWState, params
+) -> Tuple[Any, AdamWState, jnp.ndarray]:
+    """Returns (new_params, new_state, grad_norm)."""
+    if cfg.max_grad_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+    count = state.count + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+    lr = _schedule(cfg, state.count)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mh = m / bc1
+        vh = v / bc2
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(new_m, new_v, count), gnorm
+
+
+# Convenience SGD (baseline / tests)
+
+
+def sgd_update(lr: float, grads, params):
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32))
+        .astype(p.dtype),
+        params, grads,
+    )

@@ -1,0 +1,35 @@
+"""Shared fixtures. NOTE: device count must stay 1 here (the dry-run sets
+XLA_FLAGS itself in its own process); do NOT set XLA_FLAGS globally."""
+
+import numpy as np
+import pytest
+
+from repro.core.hnsw import build_hnsw
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    rng = np.random.default_rng(7)
+    N, d = 800, 24
+    X = rng.standard_normal((N, d)).astype(np.float32)
+    Q = rng.standard_normal((12, d)).astype(np.float32)
+    return X, Q
+
+
+@pytest.fixture(scope="session")
+def small_graph(small_dataset):
+    X, _ = small_dataset
+    return build_hnsw(X, M=8, ef_construction=60, seed=3)
+
+
+@pytest.fixture(scope="session")
+def clustered_dataset():
+    """Clustered data — the regime where HNSW shines and recall is high."""
+    rng = np.random.default_rng(11)
+    centers = rng.standard_normal((12, 24)).astype(np.float32) * 4.0
+    X = np.concatenate(
+        [c + 0.3 * rng.standard_normal((80, 24)).astype(np.float32)
+         for c in centers]
+    )
+    Q = centers[:6] + 0.3 * rng.standard_normal((6, 24)).astype(np.float32)
+    return X.astype(np.float32), Q.astype(np.float32)

@@ -1,0 +1,107 @@
+"""Data generators, input pipeline, GNN neighbor sampler."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import PrefetchPipeline
+from repro.data.synthetic import (
+    corpus_embeddings,
+    molecular_graphs,
+    powerlaw_graph,
+    token_batches,
+)
+from repro.models.sampler import CSRGraph, sample_fanout, sample_subgraph
+
+
+def test_corpus_embeddings_deterministic():
+    a = corpus_embeddings(100, 16, seed=3)
+    b = corpus_embeddings(100, 16, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (100, 16) and a.dtype == np.float32
+
+
+def test_token_batches_shapes_and_range():
+    b = next(token_batches(100, 4, 8, 1))
+    assert b["tokens"].shape == (4, 8)
+    assert b["labels"].shape == (4, 8)
+    assert b["tokens"].max() < 100 and b["tokens"].min() >= 0
+    # next-token alignment
+    full = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    np.testing.assert_array_equal(full[:, 1:], b["labels"])
+
+
+def test_molecular_graphs_edges_within_cutoff():
+    d = molecular_graphs(3, 10, cutoff=2.0, e_per_graph=20)
+    pos = d["positions"]
+    m = d["edge_mask"]
+    dist = np.linalg.norm(pos[d["edge_src"][m]] - pos[d["edge_dst"][m]],
+                          axis=1)
+    assert (dist < 2.0).all()
+    # edges never cross graphs
+    assert (d["graph_ids"][d["edge_src"][m]]
+            == d["graph_ids"][d["edge_dst"][m]]).all()
+
+
+def test_prefetch_pipeline_order_and_replay():
+    src = iter([{"x": np.array([i])} for i in range(5)])
+    pipe = PrefetchPipeline(src, depth=2)
+    seen = [int(b["x"][0]) for b in pipe]
+    assert seen == list(range(5))
+    assert int(pipe.replay_last()["x"][0]) == 4
+
+
+def test_csr_graph_neighbors():
+    src = np.array([0, 1, 2, 0]);  dst = np.array([1, 2, 0, 2])
+    g = CSRGraph.from_edge_index(src, dst, 3)
+    assert set(g.neighbors(2).tolist()) == {1, 0}
+    assert g.degree(1) == 1
+
+
+def test_sample_fanout_respects_limits():
+    rng = np.random.default_rng(0)
+    src, dst = powerlaw_graph(300, 3000, seed=1)
+    g = CSRGraph.from_edge_index(src, dst, 300)
+    blocks = sample_fanout(g, np.arange(16), [5, 3], rng)
+    assert len(blocks) == 2
+    b0 = blocks[0]
+    # per-seed fanout bound
+    assert b0.edge_mask.sum() <= 16 * 5
+    # local indices in range
+    assert b0.edge_src[b0.edge_mask].max() < b0.node_mask.sum()
+
+
+def test_sample_subgraph_padded_static_shapes():
+    rng = np.random.default_rng(0)
+    src, dst = powerlaw_graph(500, 5000, seed=2)
+    g = CSRGraph.from_edge_index(src, dst, 500)
+    blk = sample_subgraph(g, np.arange(32), [15, 10], rng,
+                          e_max=2048, n_max=1024)
+    assert blk.edge_src.shape == (2048,)
+    assert blk.nodes.shape == (1024,)
+    ne = int(blk.edge_mask.sum())
+    assert 0 < ne <= 2048
+    # edges reference valid local nodes
+    nn = int(blk.node_mask.sum())
+    assert blk.edge_src[blk.edge_mask].max() < nn
+    assert blk.edge_dst[blk.edge_mask].max() < nn
+    # seeds come first
+    np.testing.assert_array_equal(blk.nodes[:32], np.arange(32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_seeds=st.integers(1, 20), f1=st.integers(1, 8),
+       f2=st.integers(1, 8), seed=st.integers(0, 100))
+def test_property_sampler_never_exceeds_caps(n_seeds, f1, f2, seed):
+    rng = np.random.default_rng(seed)
+    src, dst = powerlaw_graph(200, 1500, seed=seed)
+    g = CSRGraph.from_edge_index(src, dst, 200)
+    e_max, n_max = 256, 256
+    blk = sample_subgraph(g, np.arange(n_seeds), [f1, f2], rng,
+                          e_max=e_max, n_max=n_max)
+    assert blk.edge_src.shape == (e_max,)
+    assert blk.node_mask.sum() <= n_max
+    m = blk.edge_mask
+    if m.any():
+        nn = int(blk.node_mask.sum())
+        assert blk.edge_src[m].max() < nn

@@ -1,0 +1,82 @@
+"""Distributed ANNS on a simulated multi-device mesh.
+
+Runs in a subprocess so XLA_FLAGS (device count) never leaks into the
+main test process (smoke tests must see 1 device).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import (build_sharded_index,
+                                    make_distributed_search,
+                                    distributed_brute_force)
+from repro.core.hnsw import exact_search
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rng = np.random.default_rng(0)
+N, d, B = 1200, 24, 8
+X = rng.standard_normal((N, d)).astype(np.float32)
+idx = build_sharded_index(X, 4, M=8, ef_construction=60)
+Q = rng.standard_normal((B, d)).astype(np.float32)
+out = {}
+with mesh:
+    search = make_distributed_search(mesh, k=10, ef=64)
+    dd, ii = search(jnp.asarray(Q), idx)
+    flat = distributed_brute_force(mesh, k=10)
+    fd, fi = flat(jnp.asarray(Q), idx)
+    lowered = jax.jit(
+        make_distributed_search(mesh, k=10, ef=64, jit=False)
+    ).lower(jnp.asarray(Q), idx)
+    hlo = lowered.compile().as_text()
+rec = rec_f = 0
+for b in range(B):
+    ex, _ = exact_search(X, Q[b], 10)
+    rec += len(set(np.asarray(ii[b]).tolist()) & set(ex.tolist()))
+    rec_f += len(set(np.asarray(fi[b]).tolist()) & set(ex.tolist()))
+out["recall_hnsw"] = rec / (10 * B)
+out["recall_flat"] = rec_f / (10 * B)
+out["has_allgather"] = "all-gather" in hlo
+out["sorted_ok"] = bool((np.diff(np.asarray(dd), axis=1) >= -1e-5).all())
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_result():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, timeout=600, cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    return json.loads(line[0][len("RESULT:"):])
+
+
+def test_distributed_flat_is_exact(dist_result):
+    assert dist_result["recall_flat"] == 1.0
+
+
+def test_distributed_hnsw_recall(dist_result):
+    assert dist_result["recall_hnsw"] > 0.9
+
+
+def test_distributed_uses_collectives(dist_result):
+    assert dist_result["has_allgather"]
+
+
+def test_distributed_results_sorted(dist_result):
+    assert dist_result["sorted_ok"]

@@ -1,0 +1,97 @@
+"""Dry-run machinery unit tests (no 512-device init — pure functions)."""
+
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import parse_collective_bytes
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def test_parse_collective_bytes_sums_outputs():
+    hlo = """
+  %ag = f32[8,4]{1,0} all-gather(%p0), channel_id=1, dimensions={0}
+  %ar = bf16[16]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[2,2]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = u8[100]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = f32[4]{0} all-to-all(%w), dimensions={0}
+  %noise = f32[999]{0} add(%a, %b)
+"""
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 4 * 4
+    assert out["all-reduce"] == 16 * 2
+    assert out["reduce-scatter"] == 4 * 4
+    assert out["collective-permute"] == 100
+    assert out["all-to-all"] == 16
+    assert "add" not in out
+
+
+def test_parse_collective_bytes_empty():
+    assert parse_collective_bytes("%x = f32[2] add(%a, %b)") == {}
+
+
+def test_parse_collective_scalar_shape():
+    out = parse_collective_bytes("%r = f32[] all-reduce(%a)")
+    assert out["all-reduce"] == 4.0
+
+
+def test_hw_constants_sane():
+    assert PEAK_FLOPS_BF16 == 197e12
+    assert HBM_BW == 819e9
+    assert ICI_BW == 50e9
+
+
+def test_model_flops_lm_train():
+    from repro.configs.base import ShapeSpec
+    from repro.launch.dryrun import model_flops
+    from repro import configs
+
+    spec = configs.get("stablelm-12b")
+    cfg = spec.make_config()
+    shape = spec.shapes["train_4k"]
+    mf = model_flops(spec, shape, cfg)
+    toks = 256 * 4096
+    assert mf > 6.0 * cfg.param_count() * toks  # 6ND + attention term
+    assert mf < 8.0 * cfg.param_count() * toks  # attention is a correction
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro.launch.dryrun import model_flops
+    from repro import configs
+
+    spec = configs.get("deepseek-moe-16b")
+    cfg = spec.make_config()
+    assert cfg.active_param_count() < cfg.param_count() / 3
+    shape = spec.shapes["train_4k"]
+    mf = model_flops(spec, shape, cfg)
+    toks = 256 * 4096
+    assert mf < 6.0 * cfg.param_count() * toks / 3
+
+
+def test_decode_state_specs_divisibility():
+    """KV sharding rules must always produce divisible specs."""
+    import os
+    if len(__import__("jax").devices()) != 1:
+        pytest.skip("mesh test runs in dryrun process")
+    # pure-logic check of the chooser using a fake mesh-shape dict
+    from repro.models.transformer import LMConfig
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    from repro.distributed.sharding import lm_decode_state_specs
+
+    def norm(entry):  # PartitionSpec may canonicalize 1-tuples to str
+        if entry is None:
+            return ()
+        return (entry,) if isinstance(entry, str) else tuple(entry)
+
+    cfg = LMConfig(kv_heads=8)  # not divisible by 16
+    spec = lm_decode_state_specs(cfg, FakeMesh(), batch=128, seq=32768)
+    kv = spec["k"]
+    assert norm(kv[3]) == ()  # heads NOT sharded
+    assert norm(kv[2]) == ("model",)  # seq takes the model axis
+    spec = lm_decode_state_specs(cfg, FakeMesh(), batch=1, seq=524288)
+    kv = spec["k"]
+    assert norm(kv[1]) == ()  # batch replicated
+    assert {"data", "model"} <= set(norm(kv[2]))  # seq over both

@@ -1,0 +1,58 @@
+"""Fused (single-program) lazy search == host-driven engine, exactly."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.hnsw import build_hnsw
+
+
+@pytest.mark.parametrize("ratio", [0.1, 0.3, 1.0])
+def test_fused_matches_host_driver(small_dataset, small_graph, ratio):
+    X, Q = small_dataset
+    cap = max(16, int(len(X) * ratio))
+    host = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=cap))
+    fused = WebANNSEngine(
+        X, small_graph, EngineConfig(cache_capacity=cap, fused=True)
+    )
+    for q in Q[:5]:
+        ih, dh, sh = host.query(q, k=10, ef=64)
+        iff, df, sf = fused.query(q, k=10, ef=64)
+        np.testing.assert_array_equal(ih, iff)
+        np.testing.assert_allclose(dh, df, rtol=1e-5)
+        assert sh.n_db == sf.n_db  # identical access pattern
+
+
+def test_fused_counts_accesses(small_dataset, small_graph):
+    X, Q = small_dataset
+    eng = WebANNSEngine(
+        X, small_graph,
+        EngineConfig(cache_capacity=len(X) // 10, fused=True),
+    )
+    _, _, s = eng.query(Q[0], k=10, ef=64)
+    assert s.n_db > 0 and s.items_fetched > 0
+    assert s.t_db > 0  # cost model applied
+    # repeated query hits the (retained) cache
+    _, _, s2 = eng.query(Q[0], k=10, ef=64)
+    assert s2.n_db <= s.n_db
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.integers(100, 300),
+    cap_frac=st.floats(0.1, 0.9),
+    seed=st.integers(0, 500),
+)
+def test_property_fused_equals_host(n, cap_frac, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, 12)).astype(np.float32)
+    g = build_hnsw(X, M=6, ef_construction=40, seed=seed)
+    q = rng.standard_normal(12).astype(np.float32)
+    cap = max(4, int(n * cap_frac))
+    host = WebANNSEngine(X, g, EngineConfig(cache_capacity=cap))
+    fused = WebANNSEngine(X, g, EngineConfig(cache_capacity=cap, fused=True))
+    ih, _, sh = host.query(q, k=5, ef=32)
+    iff, _, sf = fused.query(q, k=5, ef=32)
+    np.testing.assert_array_equal(ih, iff)
+    assert sh.n_db == sf.n_db

@@ -1,0 +1,109 @@
+"""HNSW construction + reference search: structure, recall, io."""
+
+import numpy as np
+import pytest
+
+from repro.core.graph import PAD, HNSWGraph
+from repro.core.hnsw import (
+    build_hnsw,
+    exact_search,
+    knn_search_np,
+    pairwise_distance,
+    recall_at_k,
+    search_layer_np,
+    select_neighbors_heuristic,
+    select_neighbors_simple,
+)
+
+
+def test_graph_structure_valid(small_graph):
+    small_graph.validate()
+
+
+def test_degrees_bounded(small_graph):
+    g = small_graph
+    for l in range(g.n_layers):
+        m_max = 2 * g.M if l == 0 else g.M
+        deg = (g.neighbors[l] != PAD).sum(axis=1)
+        assert deg.max() <= m_max
+
+
+def test_links_are_mostly_bidirectional(small_graph):
+    """HNSW inserts links bidirectionally; pruning may drop some backlinks
+    but the graph should stay overwhelmingly symmetric."""
+    g = small_graph
+    nb0 = g.neighbors[0]
+    n_links = n_sym = 0
+    for i in range(nb0.shape[0]):
+        for j in nb0[i][nb0[i] != PAD]:
+            n_links += 1
+            if i in nb0[j]:
+                n_sym += 1
+    assert n_sym / n_links > 0.6
+
+
+def test_recall_random_data(small_dataset, small_graph):
+    X, Q = small_dataset
+    r = recall_at_k(X, small_graph, Q, k=10, ef=64)
+    assert r > 0.85, f"recall {r}"
+
+
+def test_recall_clustered_data(clustered_dataset):
+    X, Q = clustered_dataset
+    g = build_hnsw(X, M=8, ef_construction=60, seed=0)
+    r = recall_at_k(X, g, Q, k=10, ef=64)
+    assert r > 0.9, f"recall {r}"
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_metrics_build_and_query(metric):
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((300, 16)).astype(np.float32)
+    g = build_hnsw(X, M=8, ef_construction=50, metric=metric, seed=0)
+    q = rng.standard_normal(16).astype(np.float32)
+    ids, dists = knn_search_np(X, g, q, k=5, ef=32)
+    ex, _ = exact_search(X, q, 5, metric)
+    assert len(set(ids.tolist()) & set(ex.tolist())) >= 3
+    assert (np.diff(dists) >= -1e-6).all()  # sorted ascending
+
+
+def test_save_load_roundtrip(tmp_path, small_graph):
+    small_graph.save(str(tmp_path / "g"))
+    g2 = HNSWGraph.load(str(tmp_path / "g"))
+    np.testing.assert_array_equal(small_graph.neighbors, g2.neighbors)
+    np.testing.assert_array_equal(small_graph.levels, g2.levels)
+    assert g2.entry_point == small_graph.entry_point
+    assert g2.M == small_graph.M
+
+
+def test_select_neighbors_heuristic_diversity():
+    """Heuristic must prefer a diverse set over the M absolute closest."""
+    X = np.array(
+        [[0.0, 0.0], [0.1, 0.0], [0.12, 0.0], [0.11, 0.01], [0.0, 1.0]],
+        np.float32,
+    )
+    q = X[0]
+    cand = [(float(pairwise_distance(X[i], q, "l2")[0]), i) for i in (1, 2, 3, 4)]
+    sel = select_neighbors_heuristic(X, q, cand, M=2, metric="l2")
+    assert 1 in sel and 4 in sel  # closest + the diverse far one
+
+
+def test_select_neighbors_simple_order():
+    cand = [(3.0, 3), (1.0, 1), (2.0, 2)]
+    assert select_neighbors_simple(cand, 2) == [1, 2]
+
+
+def test_search_layer_returns_sorted(small_dataset, small_graph):
+    X, Q = small_dataset
+    W = search_layer_np(X, small_graph.neighbors[0], Q[0],
+                        [small_graph.entry_point], 32, "l2")
+    d = [w[0] for w in W]
+    assert d == sorted(d)
+    assert len(W) <= 32
+
+
+def test_singleton_dataset():
+    X = np.ones((1, 8), np.float32)
+    g = build_hnsw(X, M=4, ef_construction=10, seed=0)
+    ids, _ = knn_search_np(X, g, X[0], k=1, ef=4)
+    assert ids[0] == 0

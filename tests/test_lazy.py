@@ -1,0 +1,134 @@
+"""Phased lazy loading (Algorithm 1): correctness + access economics.
+
+The paper's central correctness claim: lazy loading with phase boundaries
+returns the SAME results as the fully-in-memory search (correct entry
+points per layer, no incorrect query paths). We assert exact equality.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.hnsw import build_hnsw, exact_search
+
+
+@pytest.fixture(scope="module")
+def engines(small_dataset, small_graph):
+    X, Q = small_dataset
+    g = small_graph
+    full = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X)))
+    full.warm_cache()
+    return X, Q, g, full
+
+
+@pytest.mark.parametrize("ratio", [0.05, 0.2, 0.5, 0.9])
+def test_lazy_equals_full_memory(engines, ratio):
+    """Exact result equality at any memory-data ratio (paper §3.3)."""
+    X, Q, g, full = engines
+    lazy = WebANNSEngine(
+        X, g, EngineConfig(cache_capacity=max(8, int(len(X) * ratio)))
+    )
+    for q in Q[:6]:
+        i_f, d_f, _ = full.query(q, k=10, ef=64)
+        i_l, d_l, _ = lazy.query(q, k=10, ef=64)
+        np.testing.assert_array_equal(i_f, i_l)
+        np.testing.assert_allclose(d_f, d_l, rtol=1e-5)
+
+
+def test_zero_redundancy(engines):
+    """Every vector fetched by lazy loading is demanded (R = 0, Eq. 1)."""
+    X, Q, g, _ = engines
+    lazy = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X) // 10))
+    for q in Q[:4]:
+        lazy.query(q, k=10, ef=64)
+    assert lazy.external.stats.redundancy() == 0.0
+
+
+def test_lazy_fewer_accesses_than_eager(engines):
+    """Phase batching must cut n_db vs per-miss eager fetching."""
+    X, Q, g, _ = engines
+    cap = len(X) // 10
+    lazy = WebANNSEngine(X, g, EngineConfig(mode="webanns", cache_capacity=cap))
+    eager = WebANNSEngine(
+        X, g, EngineConfig(mode="webanns-base", cache_capacity=cap)
+    )
+    n_lazy = n_eager = 0
+    for q in Q[:4]:
+        _, _, s_l = lazy.query(q, k=10, ef=64)
+        _, _, s_e = eager.query(q, k=10, ef=64)
+        n_lazy += s_l.n_db
+        n_eager += s_e.n_db
+    assert n_lazy < n_eager / 2, (n_lazy, n_eager)
+
+
+def test_full_memory_no_db_access(engines):
+    X, Q, g, full = engines
+    before = full.external.stats.n_db
+    full.query(Q[0], k=10, ef=64)
+    assert full.external.stats.n_db == before
+
+
+def test_miss_list_bounded_by_trigger(engines):
+    """Intra-layer trigger: |L| at each load is < ef + max_degree."""
+    X, Q, g, _ = engines
+    lazy = WebANNSEngine(X, g, EngineConfig(cache_capacity=16))
+    _, _, s = lazy.query(Q[0], k=10, ef=32)
+    bound = 32 + g.max_degree
+    # items per access can never exceed the trigger bound
+    assert s.items_fetched <= s.n_db * bound
+
+
+def test_warm_cache_reduces_accesses(engines):
+    X, Q, g, _ = engines
+    cold = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X) // 2))
+    warm = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X) // 2))
+    warm.warm_cache()
+    _, _, s_c = cold.query(Q[0], k=10, ef=64)
+    _, _, s_w = warm.query(Q[0], k=10, ef=64)
+    assert s_w.n_db <= s_c.n_db
+
+
+def test_repeated_queries_hit_cache(engines):
+    """Second identical query touches only cached vectors (locality)."""
+    X, Q, g, _ = engines
+    eng = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X)))
+    _, _, s1 = eng.query(Q[0], k=10, ef=64)
+    _, _, s2 = eng.query(Q[0], k=10, ef=64)
+    assert s1.n_db > 0 and s2.n_db == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(100, 400),
+    cap_frac=st.floats(0.05, 0.9),
+    ef=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 1000),
+)
+def test_property_lazy_equals_full(n, cap_frac, ef, seed):
+    """Hypothesis: lazy == full-memory for arbitrary (N, cache, ef)."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, 12)).astype(np.float32)
+    g = build_hnsw(X, M=6, ef_construction=40, seed=seed)
+    q = rng.standard_normal(12).astype(np.float32)
+    full = WebANNSEngine(X, g, EngineConfig(cache_capacity=n))
+    full.warm_cache()
+    lazy = WebANNSEngine(
+        X, g, EngineConfig(cache_capacity=max(4, int(n * cap_frac)))
+    )
+    i_f, _, _ = full.query(q, k=5, ef=ef)
+    i_l, _, s = lazy.query(q, k=5, ef=ef)
+    np.testing.assert_array_equal(i_f, i_l)
+    assert s.n_db >= 1
+
+
+def test_results_match_exact_search_quality(engines):
+    """End-to-end: lazy engine recall vs brute force stays HNSW-grade."""
+    X, Q, g, _ = engines
+    lazy = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X) // 5))
+    hits = 0
+    for q in Q:
+        ids, _, _ = lazy.query(q, k=10, ef=64)
+        ex, _ = exact_search(X, q, 10)
+        hits += len(set(ids.tolist()) & set(ex.tolist()))
+    assert hits / (10 * len(Q)) > 0.85

@@ -1,0 +1,70 @@
+"""Mememo baseline: correctness parity + the measured pathologies the
+paper attributes to it (redundancy, access counts)."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.hnsw import exact_search
+from repro.core.mememo import MememoEngine, _dist_interpreted, _dist_numpy
+
+
+def test_interpreted_distance_matches_numpy():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(32).astype(np.float32)
+    b = rng.standard_normal(32).astype(np.float32)
+    for metric in ("l2", "ip", "cos"):
+        x = _dist_interpreted(a, b, metric)
+        y = _dist_numpy(a, b, metric)
+        assert abs(x - y) < 1e-4
+
+
+def test_mememo_recall_parity(small_dataset, small_graph):
+    """Mememo is slow, not wrong — recall must match the graph's."""
+    X, Q = small_dataset
+    mem = MememoEngine(X, small_graph, cache_capacity=len(X))
+    hits = 0
+    for q in Q[:6]:
+        ids, _, _ = mem.query(q, k=10, ef=64)
+        ex, _ = exact_search(X, q, 10)
+        hits += len(set(ids.tolist()) & set(ex.tolist()))
+    assert hits / 60 > 0.85
+
+
+def test_mememo_redundancy_exceeds_webanns(small_dataset, small_graph):
+    """Fig. 3a: heuristic prefetch wastes most fetched vectors; lazy
+    loading fetches only what it needs."""
+    X, Q = small_dataset
+    cap = len(X) // 5
+    mem = MememoEngine(X, small_graph, cache_capacity=cap, prefetch_size=64)
+    web = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=cap))
+    for q in Q[:5]:
+        mem.query(q, k=10, ef=64)
+        web.query(q, k=10, ef=64)
+    r_mem = mem.external.stats.redundancy()
+    r_web = web.external.stats.redundancy()
+    assert r_mem > 0.5  # paper: >50% redundant under memory pressure
+    assert r_web == 0.0
+
+
+def test_mememo_more_db_accesses_than_webanns(small_dataset, small_graph):
+    X, Q = small_dataset
+    cap = len(X) // 5
+    mem = MememoEngine(X, small_graph, cache_capacity=cap, prefetch_size=64)
+    web = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=cap))
+    n_mem = n_web = 0
+    for q in Q[:5]:
+        _, _, sm = mem.query(q, k=10, ef=64)
+        _, _, sw = web.query(q, k=10, ef=64)
+        n_mem += sm.n_db
+        n_web += sw.n_db
+    assert n_web < n_mem
+
+
+def test_mememo_full_memory_no_access_after_warm(small_dataset, small_graph):
+    X, Q = small_dataset
+    mem = MememoEngine(X, small_graph, cache_capacity=len(X))
+    mem.query(Q[0], k=10, ef=64)  # warm-up (paper protocol)
+    n0 = mem.external.stats.n_db
+    mem.query(Q[0], k=10, ef=64)
+    assert mem.external.stats.n_db == n0

@@ -1,0 +1,86 @@
+"""MoE dispatch: equivalence with the dense reference + capacity drops."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import init_moe, moe_ffn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def dense_moe_reference(p, x, top_k):
+    """Compute every expert for every token, combine by top-k gates —
+    the O(E·T·ff) oracle the capacity dispatch must match when no token
+    is dropped."""
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    xt = x.reshape(-1, D)
+    probs = jax.nn.softmax(xt.astype(jnp.float32) @ p["router"], axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # all experts on all tokens
+    h = jax.nn.silu(jnp.einsum("td,edf->etf", xt, p["w_gate"]))
+    h = h * jnp.einsum("td,edf->etf", xt, p["w_in"])
+    y_all = jnp.einsum("etf,efd->etd", h, p["w_out"])  # (E, T, D)
+    onehot = jax.nn.one_hot(ids, E)  # (T, k, E)
+    w = jnp.einsum("tke,tk->te", onehot, gates)  # (T, E)
+    out = jnp.einsum("te,etd->td", w, y_all)
+    if "shared_in" in p:
+        hs = jax.nn.silu(xt @ p["shared_gate"]) * (xt @ p["shared_in"])
+        out = out + hs @ p["shared_out"]
+    return out.reshape(B, S, D)
+
+
+@pytest.mark.parametrize("n_shared", [0, 1])
+def test_dispatch_matches_dense_reference(n_shared):
+    p = init_moe(KEY, d_model=16, d_ff=32, n_experts=4, n_shared=n_shared)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 16))
+    out, aux = moe_ffn(p, x, top_k=2, capacity=64)  # ample capacity
+    want = dense_moe_reference(p, x, top_k=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+    assert float(aux) > 0
+
+
+def test_capacity_drops_degrade_gracefully():
+    p = init_moe(KEY, d_model=16, d_ff=32, n_experts=4)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 16))
+    full, _ = moe_ffn(p, x, top_k=2, capacity=64)
+    tight, _ = moe_ffn(p, x, top_k=2, capacity=2)  # forces drops
+    # dropped tokens fall through (partial output), but nothing NaNs
+    assert not bool(jnp.isnan(tight).any())
+    diff = float(jnp.abs(full - tight).max())
+    assert diff > 0  # drops actually happened
+
+
+def test_aux_loss_balanced_at_uniform_routing():
+    """With a zero router every expert is hit uniformly → aux ≈ 1."""
+    p = init_moe(KEY, d_model=8, d_ff=16, n_experts=4)
+    p = dict(p)
+    p["router"] = jnp.zeros_like(p["router"])
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 64, 8))
+    _, aux = moe_ffn(p, x, top_k=2)
+    assert 0.9 < float(aux) < 1.3
+
+
+def test_grad_flows_through_dispatch():
+    p = init_moe(KEY, d_model=16, d_ff=32, n_experts=4, n_shared=1)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 16))
+
+    def loss(p):
+        out, aux = moe_ffn(p, x, top_k=2)
+        return jnp.sum(out ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    for name in ("router", "w_gate", "w_in", "w_out", "shared_in"):
+        assert float(jnp.abs(g[name]).sum()) > 0, name
+
+
+def test_ep_constraints_are_noop_on_single_device():
+    p = init_moe(KEY, d_model=16, d_ff=32, n_experts=4)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 6, 16))
+    a, _ = moe_ffn(p, x, top_k=2)
+    b, _ = moe_ffn(p, x, top_k=2, ep_axis="model", dp_axes=("data",))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

@@ -1,0 +1,115 @@
+"""Serving: generation, continuous batching, RAG pipeline, HBM budgeting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.hnsw import build_hnsw
+from repro.data.synthetic import corpus_embeddings, corpus_texts
+from repro.models import transformer as T
+from repro.serve.rag import RAGPipeline, budget_retrieval
+from repro.serve.scheduler import ContinuousBatcher, Request
+from repro.serve.serve_loop import greedy_generate, make_prefill_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = configs.get("stablelm-12b").make_smoke_config()
+    return cfg, T.init_lm(KEY, cfg)
+
+
+def test_greedy_generate_shapes(tiny_lm):
+    cfg, params = tiny_lm
+    prompt = jax.random.randint(KEY, (2, 4), 0, cfg.vocab)
+    out = greedy_generate(params, cfg, prompt, n_new=5)
+    assert out.shape == (2, 9)
+    np.testing.assert_array_equal(np.asarray(out[:, :4]), np.asarray(prompt))
+
+
+def test_greedy_generate_deterministic(tiny_lm):
+    cfg, params = tiny_lm
+    prompt = jax.random.randint(KEY, (1, 4), 0, cfg.vocab)
+    a = greedy_generate(params, cfg, prompt, n_new=6)
+    b = greedy_generate(params, cfg, prompt, n_new=6)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prefill_step_last_logits(tiny_lm):
+    cfg, params = tiny_lm
+    prefill = jax.jit(make_prefill_step(cfg))
+    toks = jax.random.randint(KEY, (3, 8), 0, cfg.vocab)
+    out = prefill(params, toks)
+    assert out.shape == (3, cfg.vocab)
+    full, _ = T.forward(params, toks, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_continuous_batcher_completes_requests(tiny_lm):
+    cfg, params = tiny_lm
+    rng = np.random.default_rng(0)
+    batcher = ContinuousBatcher(
+        decode_fn=jax.jit(
+            lambda p, s, t: T.decode_step(p, s, t, cfg, kv_chunk=8)
+        ),
+        init_state_fn=lambda b, l: T.init_decode_state(cfg, b, l),
+        params=params,
+        max_batch=4,
+        max_len=64,
+    )
+    for rid in range(6):  # more requests than slots → queueing
+        batcher.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, 3).astype(np.int32),
+            max_new=4,
+        ))
+    done = batcher.run_until_done()
+    assert sorted(done) == list(range(6))
+    for r in done.values():
+        assert len(r.generated) == 4
+
+
+# ------------------------------------------------------------------- RAG
+
+
+@pytest.fixture(scope="module")
+def rag_setup():
+    X = corpus_embeddings(400, 24, n_clusters=8, seed=2)
+    texts = corpus_texts(400, seed=2)
+    g = build_hnsw(X, M=8, ef_construction=50, seed=0)
+    eng = WebANNSEngine(X, g, EngineConfig(cache_capacity=400), texts=texts)
+    eng.warm_cache()
+    return X, texts, eng
+
+
+def test_rag_pipeline_retrieves_relevant(rag_setup):
+    X, texts, eng = rag_setup
+
+    def embed(q):  # query == a known doc's embedding → must retrieve it
+        return X[int(q)]
+
+    def tok(q, docs):
+        return np.arange(4, dtype=np.int32)[None]
+
+    rag = RAGPipeline(eng, embed, tok, k=4)
+    out = rag("17")
+    assert 17 in out.retrieved_ids.tolist()
+    assert out.retrieved_texts[0] is not None
+    assert out.prompt_tokens.shape == (1, 4)
+
+
+def test_budget_retrieval_splits_hbm(rag_setup):
+    X, _, eng = rag_setup
+    probes = X[:4] + 0.01
+    budget = X.shape[0] * X.shape[1] * 4  # enough for the whole table
+    cache_items, kv_bytes = budget_retrieval(
+        eng, probes, hbm_budget_bytes=budget, p=0.8, t_theta=0.05
+    )
+    assert 1 <= cache_items <= X.shape[0]
+    assert kv_bytes == budget - cache_items * X.shape[1] * 4
+    assert kv_bytes > 0  # optimizer freed memory for the KV cache

@@ -1,0 +1,160 @@
+"""Three-tier store: cache semantics (model-based), counters, cost model."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.store import (
+    EVICT_FIFO,
+    EVICT_LRU,
+    CacheState,
+    ExternalStore,
+    TieredStore,
+    cache_init,
+    cache_insert,
+    cache_lookup,
+    cache_touch,
+)
+
+
+def _vec(i, d=4):
+    return np.full((d,), float(i), np.float32)
+
+
+def test_insert_then_lookup():
+    c = cache_init(100, 8, 4)
+    ids = jnp.array([3, 7, 11], jnp.int32)
+    vecs = jnp.stack([jnp.asarray(_vec(i)) for i in (3, 7, 11)])
+    c = cache_insert(c, ids, vecs)
+    present, out = cache_lookup(c, jnp.array([3, 7, 11, 5], jnp.int32))
+    assert np.asarray(present).tolist() == [True, True, True, False]
+    np.testing.assert_allclose(np.asarray(out[0]), _vec(3))
+
+
+def test_padding_ids_ignored():
+    c = cache_init(100, 8, 4)
+    c = cache_insert(c, jnp.array([-1, 5, -1], jnp.int32),
+                     jnp.stack([jnp.asarray(_vec(i)) for i in (0, 5, 0)]))
+    present, _ = cache_lookup(c, jnp.array([5, -1], jnp.int32))
+    assert np.asarray(present).tolist() == [True, False]
+    assert int((np.asarray(c.id_of) >= 0).sum()) == 1
+
+
+def test_fifo_eviction_order():
+    c = cache_init(100, 3, 4)
+    for i in (1, 2, 3):
+        c = cache_insert(c, jnp.array([i], jnp.int32),
+                         jnp.asarray(_vec(i))[None])
+    c = cache_insert(c, jnp.array([4], jnp.int32), jnp.asarray(_vec(4))[None])
+    present, _ = cache_lookup(c, jnp.array([1, 2, 3, 4], jnp.int32))
+    assert np.asarray(present).tolist() == [False, True, True, True]
+
+
+def test_lru_eviction_respects_touch():
+    c = cache_init(100, 3, 4)
+    for i in (1, 2, 3):
+        c = cache_insert(c, jnp.array([i], jnp.int32),
+                         jnp.asarray(_vec(i))[None], policy=EVICT_LRU)
+    c = cache_touch(c, jnp.array([1], jnp.int32))  # 1 becomes most recent
+    c = cache_insert(c, jnp.array([4], jnp.int32),
+                     jnp.asarray(_vec(4))[None], policy=EVICT_LRU)
+    present, _ = cache_lookup(c, jnp.array([1, 2, 3, 4], jnp.int32))
+    p = np.asarray(present).tolist()
+    assert p[0] and p[3]  # 1 was touched, 4 was inserted — both present
+    assert not all(p[1:3])  # one of the stale entries was evicted
+
+
+def test_reinsert_is_noop():
+    c = cache_init(100, 4, 4)
+    c = cache_insert(c, jnp.array([5], jnp.int32), jnp.asarray(_vec(5))[None])
+    clock0 = int(c.clock)
+    c = cache_insert(c, jnp.array([5], jnp.int32), jnp.asarray(_vec(9))[None])
+    assert int(c.clock) == clock0  # no new slot consumed
+    _, out = cache_lookup(c, jnp.array([5], jnp.int32))
+    np.testing.assert_allclose(np.asarray(out[0]), _vec(5))  # kept original
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cap=st.integers(1, 12),
+    ops=st.lists(st.integers(0, 29), min_size=1, max_size=60),
+)
+def test_property_fifo_matches_model(cap, ops):
+    """Model-based: the jitted FIFO cache must agree with a reference
+    python OrderedDict FIFO for any insert sequence."""
+    from collections import OrderedDict
+
+    c = cache_init(30, cap, 2)
+    model: OrderedDict = OrderedDict()
+    for i in ops:
+        pres, _ = cache_lookup(c, jnp.array([i], jnp.int32))
+        if not bool(pres[0]):
+            c = cache_insert(c, jnp.array([i], jnp.int32),
+                             jnp.asarray(_vec(i, 2))[None])
+            if i not in model:
+                while len(model) >= cap:
+                    model.popitem(last=False)
+                model[i] = True
+    for i in range(30):
+        pres, out = cache_lookup(c, jnp.array([i], jnp.int32))
+        assert bool(pres[0]) == (i in model), f"id {i}"
+        if i in model:
+            np.testing.assert_allclose(np.asarray(out[0]), _vec(i, 2))
+
+
+def test_external_store_counters_and_cost():
+    X = np.arange(40, dtype=np.float32).reshape(10, 4)
+    ext = ExternalStore(X, t_setup=1e-3, t_per_item=1e-5)
+    out = ext.fetch(np.array([2, 5]))
+    np.testing.assert_allclose(out, X[[2, 5]])
+    assert ext.stats.n_db == 1
+    assert ext.stats.items_fetched == 2
+    assert abs(ext.stats.modeled_time - (1e-3 + 2e-5)) < 1e-9
+
+
+def test_allinone_cheaper_than_sequential():
+    """Paper Fig. 3b: one n-item access beats n 1-item accesses."""
+    X = np.zeros((100, 4), np.float32)
+    a = ExternalStore(X)
+    b = ExternalStore(X)
+    ids = np.arange(50)
+    a.fetch(ids)
+    b.fetch_sequential(ids)
+    assert a.stats.modeled_time < b.stats.modeled_time / 10
+    assert a.stats.n_db == 1 and b.stats.n_db == 50
+
+
+def test_tiered_store_gather_one_access():
+    X = np.arange(80, dtype=np.float32).reshape(20, 4)
+    ts = TieredStore(ExternalStore(X), capacity=8)
+    out = ts.gather(np.array([1, 3, 5], np.int32))
+    np.testing.assert_allclose(out, X[[1, 3, 5]])
+    assert ts.external.stats.n_db == 1
+    out2 = ts.gather(np.array([1, 3, 5], np.int32))  # all hits now
+    np.testing.assert_allclose(out2, X[[1, 3, 5]])
+    assert ts.external.stats.n_db == 1
+
+
+def test_tiered_store_resize_resets():
+    X = np.zeros((20, 4), np.float32)
+    ts = TieredStore(ExternalStore(X), capacity=8)
+    ts.gather(np.array([1, 2, 3], np.int32))
+    ts.resize(4)
+    assert ts.capacity == 4
+    present, _ = ts.lookup(jnp.array([1], jnp.int32))
+    assert not bool(present[0])
+
+
+def test_cache_wrap_consistency():
+    """Inserting a batch larger than capacity must leave a consistent map
+    (stale ids read as absent — the id_of cross-check)."""
+    c = cache_init(50, 4, 2)
+    ids = jnp.arange(10, dtype=jnp.int32)
+    vecs = jnp.stack([jnp.asarray(_vec(i, 2)) for i in range(10)])
+    c = cache_insert(c, ids, vecs)
+    present, out = cache_lookup(c, ids)
+    for i in range(10):
+        if bool(present[i]):
+            np.testing.assert_allclose(np.asarray(out[i]), _vec(i, 2))
+    assert int(np.asarray(present).sum()) <= 4
