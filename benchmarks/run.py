@@ -25,7 +25,7 @@ def main() -> None:
     from benchmarks.bench_cacheopt import bench_table3
     from benchmarks.bench_compute import bench_compute
     from benchmarks.bench_eviction import bench_eviction
-    from benchmarks.bench_query import bench_table1
+    from benchmarks.bench_query import bench_batch, bench_table1
     from benchmarks.bench_storage import bench_loading, bench_redundancy
 
     suites = {
@@ -44,6 +44,11 @@ def main() -> None:
         # beyond-paper: eviction-policy ablation (paper §4.1 pluggable)
         "eviction": lambda: bench_eviction(
             n_rounds=6 if not args.full else 12),
+        # beyond-paper: cross-query fetch amortization (DESIGN.md §5)
+        "batch": lambda: bench_batch(
+            batch_sizes=(1, 4, 16) if not args.full
+            else (1, 2, 4, 8, 16, 32),
+            n_queries=16 if not args.full else 32),
     }
     print("name,us_per_call,derived")
     failures = 0

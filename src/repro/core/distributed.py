@@ -40,6 +40,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# shard_map moved (experimental → jax.shard_map) and renamed its
+# replication-check kwarg (check_rep → check_vma) across JAX releases;
+# resolve whichever this installation provides.
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
 from repro.core import search as S
 from repro.core.distances import distance_matrix
 from repro.core.graph import HNSWGraph
@@ -253,12 +263,12 @@ def make_distributed_search(
         )
 
     ispec = P(data_axes)
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         local_program,
         mesh=mesh,
         in_specs=(qspec, ispec, ispec, ispec, ispec, ispec, ispec, ispec),
         out_specs=(qspec, qspec),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
 
     def search_fn(Q, index: ShardedIndex):

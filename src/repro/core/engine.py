@@ -61,6 +61,32 @@ class QueryStats:
 
 
 @dataclasses.dataclass
+class BatchStats:
+    """Whole-batch accounting for the batched query driver (DESIGN.md §5).
+
+    ``n_db`` counts actual tier-3 transactions for the batch — ONE per
+    phase with any miss, regardless of batch size. Summing the per-query
+    ``QueryStats.n_db`` instead would re-count shared fetches; the gap
+    between that sum and this field IS the fetch amortization.
+    """
+
+    batch_size: int = 0
+    n_db: int = 0  # tier-3 accesses for the WHOLE batch
+    items_fetched: int = 0  # deduplicated items pulled from tier 3
+    n_phases: int = 0  # load phases driven (across layers)
+    t_in_mem: float = 0.0
+    t_db: float = 0.0
+
+    @property
+    def n_db_per_query(self) -> float:
+        return self.n_db / max(1, self.batch_size)
+
+    @property
+    def t_batch(self) -> float:
+        return self.t_in_mem + self.t_db
+
+
+@dataclasses.dataclass
 class EngineConfig:
     mode: str = "webanns"  # 'webanns' | 'webanns-base'
     metric: str = "l2"
@@ -112,6 +138,40 @@ def _load_cached(q, state: S.SearchState, loaded_ids, loaded_vecs,
     return S.load_phase(q, state, loaded_ids, loaded_vecs, metric)
 
 
+# ------------------------------------------------------ jit batched phases
+# vmapped counterparts used by the batched driver (DESIGN.md §5). The
+# cache is an explicit broadcast argument: all B queries probe the same
+# tier-2 snapshot within a phase, so misses are comparable and unionable.
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ef", "miss_cap", "metric")
+)
+def _batch_seed_cached(Q, entry_ids, cache: CacheState, ef: int,
+                       miss_cap: int, metric: str):
+    n = cache.slot_of.shape[0]
+    lookup = lambda ids: cache_lookup(cache, ids)
+    states = S.batch_make_state(Q.shape[0], ef, miss_cap, n)
+    return S.batch_seed_state(states, Q, entry_ids, lookup, metric)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "ef_trigger")
+)
+def _batch_phase_cached(Q, neighbors_l, states: S.SearchState,
+                        cache: CacheState, metric: str, ef_trigger: int):
+    lookup = lambda ids: cache_lookup(cache, ids)
+    return S.batch_search_phase(
+        Q, neighbors_l, states, lookup, metric, ef_trigger=ef_trigger
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _batch_load_cached(Q, states: S.SearchState, loaded_ids, loaded_vecs,
+                       metric: str):
+    return S.batch_load_phase(Q, states, loaded_ids, loaded_vecs, metric)
+
+
 class WebANNSEngine:
     """Build / load / query API over the three-tier store."""
 
@@ -139,6 +199,8 @@ class WebANNSEngine:
         # id-indexed store, never loaded during queries.
         self.doc_store = DocStore(texts) if texts is not None else None
         self._miss_cap = self.config.ef_search + graph.max_degree + 1
+        # whole-batch accounting of the last query_batch call (DESIGN.md §5)
+        self.last_batch_stats: Optional[BatchStats] = None
 
     # ----------------------------------------------------------- factory
 
@@ -226,6 +288,65 @@ class WebANNSEngine:
             stats.t_in_mem += time.perf_counter() - t0
         return state
 
+    def _batched_lazy_layer(
+        self, Q: jnp.ndarray, layer: int, entry_ids: np.ndarray, ef: int,
+        per_stats: List[QueryStats], bstats: BatchStats, eager: bool,
+    ) -> S.SearchState:
+        """One layer of the batched phased-lazy driver (DESIGN.md §5).
+
+        All B queries advance one in-memory phase together (vmapped
+        against the same tier-2 snapshot); their miss lists are unioned,
+        deduplicated, and satisfied by ONE tier-3 access per phase for
+        the whole batch; the bulk load is scattered back per query.
+        """
+        cfg = self.config
+        miss_cap = ef + self.graph.max_degree + 1
+        trigger = 1 if eager else ef
+        from repro.core.store import EVICT_LRU, cache_touch
+
+        t0 = time.perf_counter()
+        states = _batch_seed_cached(
+            Q, jnp.asarray(entry_ids), self.store.cache, ef, miss_cap,
+            cfg.metric,
+        )
+        bstats.t_in_mem += time.perf_counter() - t0
+        for _ in range(cfg.max_phases):
+            t0 = time.perf_counter()
+            states = _batch_phase_cached(
+                Q, self.neighbors[layer], states, self.store.cache,
+                cfg.metric, trigger,
+            )
+            mc = np.asarray(states.miss_count)
+            if self.store.eviction == EVICT_LRU:
+                self.store.cache = cache_touch(
+                    self.store.cache, states.beam.ids.reshape(-1)
+                )
+            bstats.t_in_mem += time.perf_counter() - t0
+            if int(mc.sum()) == 0:
+                break
+            miss_np = np.asarray(states.miss_ids)
+            # ONE tier-3 access for the union of all B miss lists
+            db0 = self.external.stats.n_db
+            fetched0 = self.external.stats.items_fetched
+            vecs = self.store.gather_batch(miss_np)
+            bstats.n_db += self.external.stats.n_db - db0
+            bstats.items_fetched += (
+                self.external.stats.items_fetched - fetched0
+            )
+            bstats.n_phases += 1
+            # per-query demand: which queries needed this shared access
+            for b in np.nonzero(mc > 0)[0]:
+                per_stats[b].n_db += 1
+                per_stats[b].items_fetched += int(mc[b])
+            t0 = time.perf_counter()
+            # states.miss_ids is already device-resident and fixed-shape;
+            # only the fetched vectors need the host→device hop
+            states = _batch_load_cached(
+                Q, states, states.miss_ids, jnp.asarray(vecs), cfg.metric
+            )
+            bstats.t_in_mem += time.perf_counter() - t0
+        return states
+
     def _query_fused(
         self, q: np.ndarray, k: int, ef: int
     ) -> Tuple[np.ndarray, np.ndarray, QueryStats]:
@@ -286,15 +407,86 @@ class WebANNSEngine:
         return ids, dists, stats
 
     def query_batch(
-        self, Q: np.ndarray, k: int = 10, ef: Optional[int] = None
+        self, Q: np.ndarray, k: int = 10, ef: Optional[int] = None,
+        batch_mode: str = "batched",
     ) -> Tuple[np.ndarray, np.ndarray, List[QueryStats]]:
-        out_i, out_d, out_s = [], [], []
-        for q in Q:
-            i, d, s = self.query(q, k, ef)
-            out_i.append(i)
-            out_d.append(d)
-            out_s.append(s)
-        return np.stack(out_i), np.stack(out_d), out_s
+        """Top-k for a (B, d) query batch. Returns (ids, dists, stats).
+
+        ``batch_mode="batched"`` (default) runs the cross-query amortized
+        driver: one jit dispatch per phase for the whole batch and one
+        tier-3 access per phase for the union of all queries' misses
+        (DESIGN.md §5). ``batch_mode="loop"`` is the sequential
+        one-query-at-a-time fallback kept for parity testing; both modes
+        return identical (ids, dists). Whole-batch accounting (the
+        amortized tier-3 access count) lands in ``self.last_batch_stats``;
+        the per-query ``QueryStats.n_db`` records each query's *demand*
+        (phases in which it missed), so summing it across a batch
+        over-counts the shared fetches — by design.
+        """
+        cfg = self.config
+        ef = ef or cfg.ef_search
+        Q = np.asarray(Q, dtype=np.float32)
+        B = len(Q)
+        # fused engines run the whole query as one program (_query_fused);
+        # the batched host driver would silently reroute them, so honor
+        # cfg.fused via the sequential path until a fused batch exists
+        if cfg.fused and cfg.mode == "webanns" and batch_mode == "batched":
+            batch_mode = "loop"
+        if batch_mode == "loop":
+            out_i, out_d, out_s = [], [], []
+            for q in Q:
+                i, d, s = self.query(q, k, ef)
+                out_i.append(i)
+                out_d.append(d)
+                out_s.append(s)
+            self.last_batch_stats = BatchStats(
+                batch_size=B,
+                n_db=sum(s.n_db for s in out_s),
+                items_fetched=sum(s.items_fetched for s in out_s),
+                t_in_mem=sum(s.t_in_mem for s in out_s),
+                t_db=sum(s.t_db for s in out_s),
+            )
+            return np.stack(out_i), np.stack(out_d), out_s
+        if batch_mode != "batched":
+            raise ValueError(
+                f"batch_mode must be 'batched' or 'loop', got {batch_mode!r}"
+            )
+        eager = cfg.mode == "webanns-base"
+        bstats = BatchStats(batch_size=B)
+        per_stats = [QueryStats() for _ in range(B)]
+        Qj = jnp.asarray(Q)
+        t_db0 = self.external.stats.modeled_time
+        entry = np.full((B, 1), self.graph.entry_point, np.int32)
+        for lc in range(self.graph.max_level, 0, -1):
+            st = self._batched_lazy_layer(
+                Qj, lc, entry, cfg.ef_upper, per_stats, bstats, eager
+            )
+            best = np.asarray(st.beam.ids[:, : cfg.ef_upper])
+            hops = np.asarray(st.n_hops)
+            ndist = np.asarray(st.n_dist)
+            for b in range(B):
+                row = best[b][best[b] >= 0]
+                if len(row):
+                    entry[b, 0] = row[0]
+                per_stats[b].n_hops += int(hops[b])
+                per_stats[b].n_dist += int(ndist[b])
+        st = self._batched_lazy_layer(
+            Qj, 0, entry, max(ef, k), per_stats, bstats, eager
+        )
+        hops = np.asarray(st.n_hops)
+        ndist = np.asarray(st.n_dist)
+        bstats.t_db = self.external.stats.modeled_time - t_db0
+        for b in range(B):
+            per_stats[b].n_hops += int(hops[b])
+            per_stats[b].n_dist += int(ndist[b])
+            per_stats[b].n_visited = per_stats[b].n_dist
+            # amortized per-query share of the batch's wall/model time
+            per_stats[b].t_in_mem = bstats.t_in_mem / B
+            per_stats[b].t_db = bstats.t_db / B
+        self.last_batch_stats = bstats
+        ids = np.asarray(st.beam.ids[:, :k])
+        dists = np.asarray(st.beam.dists[:, :k])
+        return ids, dists, per_stats
 
     def get_texts(self, ids: np.ndarray) -> List[Optional[str]]:
         if self.doc_store is None:

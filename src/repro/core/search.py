@@ -22,11 +22,16 @@ Lazy loading (the paper's contribution) appears as *phases*:
   unexplored candidates (lines 24–31). The ids were already marked visited
   when first encountered, exactly as in the paper.
 
-The *driver* alternates phases until ``L`` drains. Two drivers exist:
+The *driver* alternates phases until ``L`` drains. Three drivers exist:
 
 - :class:`repro.core.engine.WebANNSEngine` — host-driven, mirrors the
   paper's Wasm(sync compute)/JS(async fetch) split: the phase function is
   jitted, the fetch is a host call.
+- the **batched driver** (``WebANNSEngine.query_batch``) — the phase
+  primitives vmapped over a (B, d) query batch (see the ``batch_*``
+  functions below); the B miss lists are unioned, deduplicated, and
+  satisfied by ONE tier-3 access per phase for the whole batch
+  (DESIGN.md §5).
 - :mod:`repro.core.distributed` — fully-jitted: tier 3 is a mesh-sharded
   array and the fetch is a collective gather inside ``lax.while_loop``
   (the multi-pod dry-run target).
@@ -248,6 +253,77 @@ def load_phase(
         miss_count=jnp.zeros_like(state.miss_count),
         n_dist=state.n_dist + jnp.sum(valid.astype(jnp.int32)),
     )
+
+
+# ----------------------------------------------------- batched phase ops
+#
+# The batched driver (engine.query_batch, DESIGN.md §5) vmaps the three
+# per-query phase primitives over a (B, d) query batch. The per-query
+# semantics are unchanged — vmap of the `lax.while_loop` in search_phase
+# masks finished queries, so each query sees exactly the phase boundaries
+# it would see alone — while the *driver* unions the B miss lists and
+# issues ONE tier-3 fetch per phase for the whole batch.
+
+
+def batch_make_state(batch: int, ef: int, miss_cap: int, n: int) -> SearchState:
+    """SearchState with a leading batch axis on every leaf."""
+    return SearchState(
+        beam=Beam(
+            ids=jnp.full((batch, ef), -1, jnp.int32),
+            dists=jnp.full((batch, ef), INF),
+            explored=jnp.zeros((batch, ef), bool),
+        ),
+        visited=jnp.zeros((batch, n), bool),
+        miss_ids=jnp.full((batch, miss_cap), -1, jnp.int32),
+        miss_count=jnp.zeros((batch,), jnp.int32),
+        n_hops=jnp.zeros((batch,), jnp.int32),
+        n_dist=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def batch_seed_state(
+    states: SearchState,
+    Q: jnp.ndarray,  # (B, d)
+    entry_ids: jnp.ndarray,  # (B, k) int32, -1 padded
+    lookup: Callable,
+    metric: str,
+) -> SearchState:
+    """vmapped :func:`seed_state`; tier-2 lookup shared across queries."""
+    return jax.vmap(
+        lambda s, q, e: seed_state(s, q, e, lookup, metric)
+    )(states, Q, entry_ids)
+
+
+def batch_search_phase(
+    Q: jnp.ndarray,  # (B, d)
+    neighbors_l: jnp.ndarray,  # (N, deg) — shared
+    states: SearchState,  # batched
+    lookup: Callable,
+    metric: str,
+    ef_trigger: Optional[int] = None,
+    max_hops: int = 100000,
+) -> SearchState:
+    """vmapped :func:`search_phase` — one in-memory phase for B queries."""
+    return jax.vmap(
+        lambda q, s: search_phase(
+            q, neighbors_l, s, lookup, metric,
+            ef_trigger=ef_trigger, max_hops=max_hops,
+        )
+    )(Q, states)
+
+
+def batch_load_phase(
+    Q: jnp.ndarray,  # (B, d)
+    states: SearchState,  # batched
+    loaded_ids: jnp.ndarray,  # (B, miss_cap) int32, -1 padded
+    loaded_vecs: jnp.ndarray,  # (B, miss_cap, d)
+    metric: str,
+) -> SearchState:
+    """vmapped :func:`load_phase` — merge each query's slice of the bulk
+    load back into its beam. Rows a query did not miss are -1/no-ops."""
+    return jax.vmap(
+        lambda q, s, li, lv: load_phase(q, s, li, lv, metric)
+    )(Q, states, loaded_ids, loaded_vecs)
 
 
 # ------------------------------------------------------ fused lazy search

@@ -80,6 +80,39 @@ def cache_lookup(
     return present, vecs
 
 
+def cache_lookup_batch(
+    cache: CacheState, ids: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched membership + gather for a (B, k) id matrix (-1 padded).
+
+    Returns (present (B, k) bool, vectors (B, k, d)). All ops in
+    :func:`cache_lookup` are elementwise gathers, so the 2-D form is the
+    same computation — this wrapper exists so the batched driver's
+    contract (DESIGN.md §5) is an explicit, tested API.
+    """
+    return cache_lookup(cache, ids)
+
+
+def cache_insert_batch(
+    cache: CacheState,
+    ids: jnp.ndarray,  # (B, k) int32, -1 padded
+    vecs: jnp.ndarray,  # (B, k, d) float32
+    policy: int = EVICT_FIFO,
+) -> CacheState:
+    """Insert a (B, k) fetched batch by flattening to one (B*k,) insert.
+
+    Duplicate ids across rows cost a wasted slot each (one slot_of write
+    wins arbitrarily; the id_of cross-check in lookup keeps the winner
+    consistent) — the batched driver avoids this by deduplicating the
+    miss union host-side before fetching (DESIGN.md §5), so flatten-insert
+    here only ever sees unique ids on the hot path.
+    """
+    B, k = ids.shape
+    return cache_insert(
+        cache, ids.reshape(B * k), vecs.reshape(B * k, -1), policy=policy
+    )
+
+
 def cache_touch(cache: CacheState, ids: jnp.ndarray) -> CacheState:
     """LRU bookkeeping for a batch of accessed ids (no-op rows for -1)."""
     safe_ids = jnp.clip(ids, 0, cache.slot_of.shape[0] - 1)
@@ -324,6 +357,27 @@ class TieredStore:
         if self.eviction == EVICT_LRU:
             self.cache = cache_touch(self.cache, jnp.asarray(padded))
         return vecs
+
+    def gather_batch(self, ids: np.ndarray) -> np.ndarray:
+        """Cross-query amortized bulk gather (DESIGN.md §5).
+
+        ``ids`` is a (B, k) matrix of -1-padded per-query miss lists. The
+        rows are unioned and deduplicated host-side, the union's tier-2
+        misses are fetched from tier 3 in ONE access via :meth:`gather`
+        (so an id missed by many queries is fetched exactly once), and
+        the result is scattered back to per-row (B, k, d) vectors.
+        Padded (-1) rows come back zero.
+        """
+        ids = np.asarray(ids, dtype=np.int32)
+        B, k = ids.shape
+        out = np.zeros((B, k, self.external.dim), np.float32)
+        valid = ids >= 0
+        if not valid.any():
+            return out
+        union = np.unique(ids[valid])  # sorted — searchsorted below
+        union_vecs = self.gather(union)
+        out[valid] = union_vecs[np.searchsorted(union, ids[valid])]
+        return out
 
     def warm(self, ids: np.ndarray) -> None:
         """Pre-populate tier 2 (initialization-stage index loading)."""

@@ -76,3 +76,72 @@ def gather_distance_pallas(
         interpret=interpret,
     )(raw_ids, q[None, :], table)
     return jnp.where(ids >= 0, out, jnp.inf)
+
+
+# ----------------------------------------------------------- batched form
+
+
+def _gd_batch_kernel(ids_ref, q_ref, row_ref, o_ref, *, metric: str):
+    """Grid = (B, K). row_ref holds table[ids[b, i]] (1, d); q_ref holds
+    Q[b] (1, d) — both selected by their index_maps."""
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    x = row_ref[...].astype(jnp.float32)  # (1, d)
+    q = q_ref[...].astype(jnp.float32)  # (1, d)
+    if metric == "l2":
+        diff = x - q
+        d = jnp.sum(diff * diff)
+    else:  # 'ip' ('cos' pre-normalized by wrapper)
+        d = -jnp.sum(x * q)
+    valid = ids_ref[b, i] >= 0
+    o_ref[0, 0] = jnp.where(valid, d, jnp.inf)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "interpret")
+)
+def gather_distance_batch_pallas(
+    table: jnp.ndarray,  # (N, d) — stays in HBM; rows DMA'd on demand
+    ids: jnp.ndarray,  # (B, K) int32, -1 padded — per-query miss lists
+    Q: jnp.ndarray,  # (B, d) — one query per id row
+    metric: str = "l2",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched fused gather + distance: (B, K) ids × (B, d) queries →
+    (B, K) distances, +inf for padded ids.
+
+    The TPU-native compute path for the batched load phase's distance
+    work (DESIGN.md §5), dispatched via ``ops.gather_distance_batch``
+    (the host-driven engine computes load-phase distances from the
+    already-fetched vectors instead): the (B, K) id matrix is
+    scalar-prefetched, the grid walks (query, slot), and each step DMAs
+    exactly one table row — the same indirection as the single-query
+    kernel with the query block also selected per grid row, so nothing
+    is materialized at (B, K, d).
+    """
+    N, d = table.shape
+    B, K = ids.shape
+    if metric == "cos":
+        table = table / (jnp.linalg.norm(table, axis=-1, keepdims=True) + 1e-30)
+        Q = Q / (jnp.linalg.norm(Q, axis=-1, keepdims=True) + 1e-30)
+        metric = "ip"
+    raw_ids = ids.astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, i, ids_ref: (b, 0)),  # Q[b]
+            pl.BlockSpec(
+                (1, d),
+                lambda b, i, ids_ref: (jnp.maximum(ids_ref[b, i], 0), 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, i, ids_ref: (b, i)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_gd_batch_kernel, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
+        interpret=interpret,
+    )(raw_ids, Q, table)
+    return jnp.where(ids >= 0, out, jnp.inf)

@@ -22,7 +22,10 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.distance import distance_matrix_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
-from repro.kernels.gather_distance import gather_distance_pallas
+from repro.kernels.gather_distance import (
+    gather_distance_batch_pallas,
+    gather_distance_pallas,
+)
 from repro.kernels.topk import topk_pallas
 
 
@@ -66,6 +69,15 @@ def gather_distance(table, ids, q, metric: str = "l2"):
         return gather_distance_pallas(table, ids, q, metric=metric,
                                       interpret=interp)
     return ref.gather_distance_ref(table, ids, q, metric)
+
+
+def gather_distance_batch(table, ids, Q, metric: str = "l2"):
+    """(B, K) ids × (B, d) queries → (B, K) distances (batched lazy load)."""
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return gather_distance_batch_pallas(table, ids, Q, metric=metric,
+                                            interpret=interp)
+    return ref.gather_distance_batch_ref(table, ids, Q, metric)
 
 
 def embedding_bag(table, idx, weights=None, combiner: str = "sum"):

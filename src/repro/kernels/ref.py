@@ -68,6 +68,18 @@ def gather_distance_ref(
     return jnp.where(ids >= 0, d, jnp.inf)
 
 
+def gather_distance_batch_ref(
+    table: jnp.ndarray,  # (N, d)
+    ids: jnp.ndarray,  # (B, K) int32, -1 padded
+    Q: jnp.ndarray,  # (B, d)
+    metric: str = "l2",
+) -> jnp.ndarray:
+    """Batched fused gather + distance (one query per id row)."""
+    return jax.vmap(
+        lambda i, q: gather_distance_ref(table, i, q, metric)
+    )(ids, Q)
+
+
 def embedding_bag_ref(
     table: jnp.ndarray,  # (V, d)
     idx: jnp.ndarray,  # (B, S) int32, -1 padded

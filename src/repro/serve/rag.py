@@ -57,16 +57,53 @@ class RAGPipeline:
         texts = self.engine.get_texts(ids)
         return ids, texts, stats
 
+    def retrieve_batch(
+        self, queries: List[str]
+    ) -> List[Tuple[np.ndarray, List, object]]:
+        """Batched retrieval for many concurrent requests: ONE call into
+        the engine's amortized driver (tier-3 misses shared across the
+        whole batch — DESIGN.md §5) instead of one query per request."""
+        if not queries:
+            return []
+        Q = np.stack([self.embed_fn(q) for q in queries])
+        ids, _, stats = self.engine.query_batch(Q, k=self.k, ef=self.ef)
+        return [
+            (ids[b], self.engine.get_texts(ids[b]), stats[b])
+            for b in range(len(queries))
+        ]
+
     def __call__(self, query: str) -> RAGResult:
-        ids, texts, stats = self.retrieve(query)
-        prompt = self.tokenize_fn(query, [t or "" for t in texts])
-        out = RAGResult(
-            query=query, retrieved_ids=ids, retrieved_texts=texts,
-            prompt_tokens=prompt, retrieval_stats=stats,
-        )
-        if self.generate_fn is not None:
-            out.generated = self.generate_fn(prompt)
+        return self.batch([query])[0]
+
+    def batch(self, queries: List[str]) -> List[RAGResult]:
+        """Serve a batch of RAG requests through batched retrieval."""
+        out: List[RAGResult] = []
+        for query, (ids, texts, stats) in zip(
+            queries, self.retrieve_batch(queries)
+        ):
+            prompt = self.tokenize_fn(query, [t or "" for t in texts])
+            res = RAGResult(
+                query=query, retrieved_ids=ids, retrieved_texts=texts,
+                prompt_tokens=prompt, retrieval_stats=stats,
+            )
+            if self.generate_fn is not None:
+                res.generated = self.generate_fn(prompt)
+            out.append(res)
         return out
+
+
+def make_batched_retriever(
+    engine: WebANNSEngine, k: int = 4, ef: int = 64
+) -> Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]]:
+    """Adapter for the serving scheduler: (B, d) query matrix → (ids
+    (B, k), dists (B, k)) through the engine's batched driver. This is
+    the function ContinuousBatcher calls ONCE per admission wave."""
+
+    def retrieve(Q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        ids, dists, _ = engine.query_batch(np.asarray(Q), k=k, ef=ef)
+        return ids, dists
+
+    return retrieve
 
 
 def budget_retrieval(

@@ -25,6 +25,12 @@ class Request:
     max_new: int = 16
     generated: Optional[List[int]] = None
     done: bool = False
+    # RAG requests: an embedded query to retrieve context for. Retrieval
+    # runs ONCE per admission wave through the engine's batched driver
+    # (all newly admitted requests' queries in one amortized call).
+    query_vec: Optional[np.ndarray] = None  # (d,) float32
+    retrieved_ids: Optional[np.ndarray] = None  # (k,) int32
+    retrieved_dists: Optional[np.ndarray] = None  # (k,) float32
 
 
 class ContinuousBatcher:
@@ -38,12 +44,22 @@ class ContinuousBatcher:
         max_batch: int = 8,
         max_len: int = 512,
         eos_id: int = -1,  # -1 → only stop on budget
+        retrieve_fn: Optional[Callable] = None,  # (B, d) → (ids, dists)
+        augment_fn: Optional[Callable] = None,  # Request → new prompt
     ):
         self.decode_fn = decode_fn
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
+        # batched retrieval hook (rag.make_batched_retriever): called once
+        # per admission wave with every admitted request's query vector.
+        self.retrieve_fn = retrieve_fn
+        # prompt-rebuild hook: called per request after retrieval with
+        # retrieved_ids attached, returning the grounded prompt tokens —
+        # this is what makes retrieve-before-prefill ordering matter.
+        self.augment_fn = augment_fn
+        self.n_retrieval_calls = 0
         self.state = init_state_fn(max_batch, max_len)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int64)
@@ -57,18 +73,45 @@ class ContinuousBatcher:
         self.pending.append(req)
 
     def _admit(self):
+        admitted: List[tuple] = []
         for slot in range(self.max_batch):
             if self.slots[slot] is None and self.pending:
                 req = self.pending.popleft()
                 self.slots[slot] = req
-                # prefill: feed prompt tokens through the shared decode
-                # program one at a time into this slot's cache region.
-                for t in req.prompt:
-                    self._next_token[slot, 0] = t
-                # simplified single-slot prefill: the shared-position cache
-                # advances globally; per-slot positions tracked host-side.
-                self.slot_remaining[slot] = req.max_new
-                self._next_token[slot, 0] = req.prompt[-1]
+                admitted.append((slot, req))
+        # retrieval BEFORE prefill: augment_fn rebuilds each prompt
+        # around the retrieved context before any token enters the cache
+        self._retrieve_for([r for _, r in admitted])
+        for slot, req in admitted:
+            # prefill: feed prompt tokens through the shared decode
+            # program one at a time into this slot's cache region.
+            for t in req.prompt:
+                self._next_token[slot, 0] = t
+            # simplified single-slot prefill: the shared-position cache
+            # advances globally; per-slot positions tracked host-side.
+            self.slot_remaining[slot] = req.max_new
+            self._next_token[slot, 0] = req.prompt[-1]
+
+    def _retrieve_for(self, admitted: List[Request]) -> None:
+        """Batched retrieval for an admission wave: every admitted RAG
+        request's query goes through ONE engine.query_batch call, so
+        tier-3 misses are shared across the wave (DESIGN.md §5)."""
+        if self.retrieve_fn is None:
+            return
+        rag = [r for r in admitted
+               if r.query_vec is not None and r.retrieved_ids is None]
+        if not rag:
+            return
+        Q = np.stack([r.query_vec for r in rag]).astype(np.float32)
+        ids, dists = self.retrieve_fn(Q)
+        self.n_retrieval_calls += 1
+        for b, req in enumerate(rag):
+            req.retrieved_ids = np.asarray(ids[b])
+            req.retrieved_dists = np.asarray(dists[b])
+            if self.augment_fn is not None:
+                req.prompt = np.asarray(
+                    self.augment_fn(req), np.int32
+                )
 
     def step(self) -> int:
         """One decode step for all active slots. Returns #active."""

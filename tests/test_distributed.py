@@ -21,8 +21,10 @@ from repro.core.distributed import (build_sharded_index,
                                     distributed_brute_force)
 from repro.core.hnsw import exact_search
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# AxisType exists only on newer JAX; older make_mesh has no axis_types kwarg
+_axis_type = getattr(jax.sharding, "AxisType", None)
+_mesh_kw = {"axis_types": (_axis_type.Auto,) * 2} if _axis_type else {}
+mesh = jax.make_mesh((4, 2), ("data", "model"), **_mesh_kw)
 rng = np.random.default_rng(0)
 N, d, B = 1200, 24, 8
 X = rng.standard_normal((N, d)).astype(np.float32)

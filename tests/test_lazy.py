@@ -7,6 +7,8 @@ points per layer, no incorrect query paths). We assert exact equality.
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import EngineConfig, WebANNSEngine

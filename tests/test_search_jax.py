@@ -3,6 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hnsw import build_hnsw, exact_search, knn_search_np
