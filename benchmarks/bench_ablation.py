@@ -13,7 +13,7 @@ from typing import List
 
 from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, csv_row,
                                get_index, queries_for, run_queries)
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.mememo import MememoEngine
 
 RATIOS = (0.2, 0.9, 0.96, 0.98, 1.0)
@@ -49,9 +49,12 @@ def bench_table2(dataset: str = "wiki-small", n_queries: int = 10,
             web.warm_cache()
             fused.warm_cache()
         m = run_queries(lambda q: mem.query(q, k=10, ef=64), Q)
-        b = run_queries(lambda q: base.query(q, k=10, ef=64), Q)
-        w = run_queries(lambda q: web.query(q, k=10, ef=64), Q)
-        f = run_queries(lambda q: fused.query(q, k=10, ef=64), Q)
+        b = run_queries(
+            lambda q: base.search(SearchRequest(query=q, k=10, ef=64)), Q)
+        w = run_queries(
+            lambda q: web.search(SearchRequest(query=q, k=10, ef=64)), Q)
+        f = run_queries(
+            lambda q: fused.search(SearchRequest(query=q, k=10, ef=64)), Q)
         rows.append(csv_row(
             f"table2_{tag}_mememo", m["p99_ms"] * 1e3,
             f"ndb={m.get('mean_ndb', 0):.1f}"))

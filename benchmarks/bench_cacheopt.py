@@ -15,7 +15,7 @@ import numpy as np
 from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, csv_row,
                                get_index, queries_for, run_queries)
 from repro.core.cache_opt import QueryTestStats, optimize_memory_size
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 
 
 def bench_table3(dataset: str = "wiki-small", n_probe: int = 6,
@@ -32,8 +32,7 @@ def bench_table3(dataset: str = "wiki-small", n_probe: int = 6,
         eng.warm_cache()
         agg = []
         for q in Q:
-            _, _, s = eng.query(q, k=10, ef=64)
-            agg.append(s)
+            agg.append(eng.search(SearchRequest(query=q, k=10, ef=64)).stats)
         return QueryTestStats(
             n_db=float(np.mean([s.n_db for s in agg])),
             n_q=float(np.mean([s.n_visited for s in agg])),
@@ -44,7 +43,8 @@ def bench_table3(dataset: str = "wiki-small", n_probe: int = 6,
     res = optimize_memory_size(query_test, c0=len(X), p=p, t_theta=t_theta)
     eng.resize_cache(res.c_best)
     eng.warm_cache()
-    after = run_queries(lambda q: eng.query(q, k=10, ef=64), Q)
+    after = run_queries(
+        lambda q: eng.search(SearchRequest(query=q, k=10, ef=64)), Q)
     init_mb = len(X) * bytes_per_item / 1e6
     opt_mb = res.c_best * bytes_per_item / 1e6
     return [

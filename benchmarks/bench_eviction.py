@@ -19,7 +19,7 @@ import numpy as np
 
 from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, csv_row,
                                get_index)
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 
 
 def bench_eviction(dataset: str = "wiki-small", n_rounds: int = 10,
@@ -38,12 +38,12 @@ def bench_eviction(dataset: str = "wiki-small", n_rounds: int = 10,
             cache_capacity=cap, eviction=policy,
             t_setup=IDB_T_SETUP, t_per_item=IDB_T_PER_ITEM,
         ))
-        eng.query(hot_queries[0], k=10, ef=64)  # warm the hot region
+        eng.search(SearchRequest(query=hot_queries[0], k=10, ef=64))  # warm the hot region
         hot_db = hot_fetched = 0
         for r in range(n_rounds):
             for cq in cold_queries[r]:  # cache pollution
-                eng.query(cq, k=10, ef=64)
-            _, _, s = eng.query(hot_queries[r], k=10, ef=64)
+                eng.search(SearchRequest(query=cq, k=10, ef=64))
+            s = eng.search(SearchRequest(query=hot_queries[r], k=10, ef=64)).stats
             hot_db += s.n_db
             hot_fetched += s.items_fetched
         rows.append(csv_row(

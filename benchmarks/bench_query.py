@@ -11,15 +11,19 @@ bench_compute.py — multiply for the paper's full gap).
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, csv_row,
                                get_index, queries_for, run_queries)
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.mememo import MememoEngine
+
+BENCH_JSON = os.path.join("reports", "BENCH_query.json")
 
 
 def bench_table1(datasets=("arxiv-1k", "wiki-small"),
@@ -48,8 +52,10 @@ def bench_table1(datasets=("arxiv-1k", "wiki-small"),
         web.warm_cache()
         fused.warm_cache()
         m = run_queries(lambda q: mem.query(q, k=10, ef=64), Q)
-        w = run_queries(lambda q: web.query(q, k=10, ef=64), Q)
-        f = run_queries(lambda q: fused.query(q, k=10, ef=64), Q)
+        w = run_queries(
+            lambda q: web.search(SearchRequest(query=q, k=10, ef=64)), Q)
+        f = run_queries(
+            lambda q: fused.search(SearchRequest(query=q, k=10, ef=64)), Q)
         boost = m["p99_ms"] / max(w["p99_ms"], 1e-9)
         boost_f = m["p99_ms"] / max(f["p99_ms"], 1e-9)
         rows.append(csv_row(f"table1_{ds}_mememo_{compute}",
@@ -67,17 +73,22 @@ def bench_batch(
     n_queries: int = 32,
     cache_ratio: float = 0.25,
     ef: int = 64,
+    json_path: Optional[str] = None,
 ) -> List[str]:
     """Batch-throughput mode: fetch amortization of the batched driver.
 
     For each batch size, a COLD-cache engine serves the same query set in
-    batches through ``query_batch(batch_mode=...)``; we report
-    queries/sec (wall) and tier-3 accesses per query. The headline curve:
-    the batched driver's n_db/query falls as batch size grows (shared
-    misses fetched once per phase — DESIGN.md §5) while the loop driver's
-    stays flat.
+    batches through the typed ``search`` API; we report queries/sec
+    (wall) and tier-3 accesses per query. The headline curve: the batched
+    driver's n_db/query falls as batch size grows (shared misses fetched
+    once per phase — DESIGN.md §5) while the loop driver's stays flat.
+
+    With ``json_path`` set, the same numbers (plus per-batch-call p50/p99
+    latency) are written as machine-readable JSON so the perf trajectory
+    is tracked across PRs (``reports/BENCH_query.json``).
     """
     rows: List[str] = []
+    entries: List[dict] = []
     for ds in datasets:
         X, g = get_index(ds)
         Q = queries_for(X, n_queries)
@@ -87,20 +98,31 @@ def bench_batch(
                 rows.append(f"# batch_{ds}_bs{bs} skipped: "
                             f"batch size > n_queries={len(Q)}")
                 continue
+            starts = list(range(0, len(Q) - bs + 1, bs))
+            # enough passes that the percentiles rest on >= 8 batch
+            # calls even at the largest batch sizes (one pass at bs=32
+            # is a single call — a meaningless "p99"); each pass re-runs
+            # the cold-cache protocol, so stats stay comparable
+            passes = max(1, -(-8 // len(starts)))
             for mode in ("loop", "batched"):
                 eng = WebANNSEngine(X, g, EngineConfig(
                     cache_capacity=cap, t_setup=IDB_T_SETUP,
                     t_per_item=IDB_T_PER_ITEM))
-                eng.query_batch(Q[:bs], k=10, ef=ef, batch_mode=mode)  # warm jit
-                eng.store.resize(cap)  # re-cold the cache, keep jit warm
-                eng.external.stats.reset()
-                t0 = time.perf_counter()
-                n_served = 0
-                for lo in range(0, len(Q) - bs + 1, bs):
-                    eng.query_batch(Q[lo:lo + bs], k=10, ef=ef,
+                req = SearchRequest(query=Q[:bs], k=10, ef=ef,
                                     batch_mode=mode)
-                    n_served += bs
-                wall = time.perf_counter() - t0
+                eng.search(req)  # warm jit
+                eng.external.stats.reset()
+                lat: List[float] = []  # per batch call, seconds
+                n_served = 0
+                for _ in range(passes):
+                    eng.store.resize(cap)  # re-cold the cache, keep jit warm
+                    for lo in starts:
+                        t0 = time.perf_counter()
+                        eng.search(SearchRequest(query=Q[lo:lo + bs], k=10,
+                                                 ef=ef, batch_mode=mode))
+                        lat.append(time.perf_counter() - t0)
+                        n_served += bs
+                wall = sum(lat)
                 s = eng.external.stats
                 qps = n_served / max(wall, 1e-9)
                 ndb_q = s.n_db / max(n_served, 1)
@@ -110,6 +132,22 @@ def bench_batch(
                     wall / max(n_served, 1) * 1e6,
                     f"qps={qps:.1f},ndb_per_q={ndb_q:.2f},"
                     f"items_per_q={fetch_q:.1f}"))
+                entries.append({
+                    "dataset": ds, "mode": mode, "batch_size": bs,
+                    "ef": ef, "cache_items": cap, "n_served": n_served,
+                    "n_calls": len(lat),
+                    "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+                    "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+                    "qps": qps,
+                    "n_db_per_query": ndb_q,
+                    "items_per_query": fetch_q,
+                })
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump({"benchmark": "bench_query_batch",
+                       "entries": entries}, f, indent=1)
+        rows.append(f"# wrote {json_path} ({len(entries)} entries)")
     return rows
 
 
@@ -120,10 +158,14 @@ if __name__ == "__main__":
     ap.add_argument("--datasets", nargs="*", default=None)
     ap.add_argument("--batch-sizes", type=int, nargs="*",
                     default=(1, 2, 4, 8, 16, 32))
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help="machine-readable output path for --batch mode "
+                         "('' to disable)")
     args = ap.parse_args()
     if args.batch:
         for r in bench_batch(datasets=args.datasets or ("arxiv-1k",),
-                             batch_sizes=tuple(args.batch_sizes)):
+                             batch_sizes=tuple(args.batch_sizes),
+                             json_path=args.json or None):
             print(r)
     else:
         for r in bench_table1(*([] if args.datasets is None

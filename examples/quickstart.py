@@ -1,19 +1,23 @@
 """Quickstart: build a WebANNS index, query it through the tiered store,
-optimize the cache size with Algorithm 2, and verify recall.
+persist it, reopen it from disk shards, optimize the cache size with
+Algorithm 2, and verify recall.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import tempfile
+
 import numpy as np
 
 from repro.core.cache_opt import QueryTestStats, optimize_memory_size
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.hnsw import exact_search
 from repro.data.synthetic import corpus_embeddings, corpus_texts
 
 
 def main():
-    # 1. a personalized corpus: 3000 docs, 64-d embeddings (+ texts,
+    # 1. a personalized corpus: 1200 docs, 64-d embeddings (+ texts,
     #    stored separately — the paper's text-embedding separation)
     X = corpus_embeddings(1200, 64, seed=0)
     texts = corpus_texts(1200, seed=0)
@@ -28,7 +32,8 @@ def main():
     # 3. online queries through the three-tier store with lazy loading
     rng = np.random.default_rng(1)
     q = X[42] + 0.05 * rng.standard_normal(64).astype(np.float32)
-    ids, dists, stats = eng.query(q, k=5, ef=64)
+    res = eng.search(SearchRequest(query=q, k=5, ef=64))
+    ids, stats = res.ids, res.stats
     print(f"top-5 ids: {ids.tolist()}")
     print(f"  visited |Q|={stats.n_visited}, external accesses "
           f"n_db={stats.n_db}, items fetched={stats.items_fetched}")
@@ -37,12 +42,30 @@ def main():
     print(f"  recall@5 vs brute force: "
           f"{len(set(ids.tolist()) & set(ex.tolist()))}/5")
 
-    # 4. heuristic cache-size optimization (Algorithm 2, p=0.8, Tθ=100ms)
+    # 4. persistence lifecycle: save → reopen from disk shards → query.
+    #    The reopened session serves tier-3 fetches from mmap-backed
+    #    .npy shards (no HNSW rebuild) and returns identical results.
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "index")
+        eng.save(path)
+        reopened = WebANNSEngine.open(
+            path, config=EngineConfig(cache_capacity=len(X) // 4))
+        res2 = reopened.search(SearchRequest(query=q, k=5, ef=64))
+        assert np.array_equal(res.ids, res2.ids)
+        assert np.array_equal(res.dists, res2.dists)
+        backend = reopened.external.base_backend
+        print(f"saved → reopened from {len(os.listdir(path))} files; "
+              f"identical top-5; tier-3 served from disk "
+              f"(n_db={reopened.external.stats.n_db}, "
+              f"shard_reads={backend.shard_reads})")
+
+    # 5. heuristic cache-size optimization (Algorithm 2, p=0.8, Tθ=100ms)
     probes = X[rng.choice(len(X), 4)] + 0.05
     def query_test(c):
         eng.resize_cache(c)
         eng.warm_cache()
-        agg = [eng.query(p, k=5, ef=64)[2] for p in probes]
+        agg = [eng.search(SearchRequest(query=p, k=5, ef=64)).stats
+               for p in probes]
         return QueryTestStats(
             n_db=float(np.mean([s.n_db for s in agg])),
             n_q=float(np.mean([s.n_visited for s in agg])),

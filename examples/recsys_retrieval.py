@@ -12,7 +12,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.data.synthetic import corpus_embeddings
 from repro.models.recsys import retrieval_score
 
@@ -37,9 +37,11 @@ def main():
         cands, M=10, ef_construction=60,
         config=EngineConfig(metric="ip", cache_capacity=n_cand // 5),
     )
-    eng.query(user, k=k, ef=96)  # warm-up (compile; paper protocol)
+    req = SearchRequest(query=user, k=k, ef=96)
+    eng.search(req)  # warm-up (compile; paper protocol)
     t0 = time.perf_counter()
-    ids, _, stats = eng.query(user, k=k, ef=96)
+    res = eng.search(req)
+    ids, stats = res.ids, res.stats
     t_ann = time.perf_counter() - t0
     overlap = len(set(ids.tolist()) & set(i_bf.tolist()))
     print(f"webanns: top-{k} in {t_ann*1e3:.1f} ms — visited only "

@@ -1,3 +1,16 @@
-"""WebANNS core: the paper's contribution as a composable JAX module."""
+"""WebANNS core: the paper's contribution as a composable JAX module.
+
+Layering (DESIGN.md §6): **Storage** (`storage.py` backends behind the
+`StorageBackend` protocol, composed by the tiered store in `store.py`),
+**Index** (`index.py` — the persistable graph+vectors artifact), and
+**Session** (`engine.py` — `WebANNSEngine.open/save/search`).
+"""
 
 from repro.core.graph import HNSWGraph, PAD  # noqa: F401
+from repro.core.index import Index  # noqa: F401
+from repro.core.storage import (  # noqa: F401
+    InMemoryBackend,
+    LatencyModel,
+    ShardedFileBackend,
+    StorageBackend,
+)

@@ -8,17 +8,26 @@ the paper's execution-model coordination, except the signal/event-loop
 dance is unnecessary on the host — the JAX dispatch boundary plays that
 role.
 
-Engine modes (paper §4.2 baselines):
+The session API (DESIGN.md §6) is Index/Storage/Session layered:
+``WebANNSEngine.open(path)`` reopens a saved :class:`repro.core.index.
+Index` (initialization-stage bulk load, one access per shard) over any
+:class:`repro.core.storage.StorageBackend`; ``engine.save(path)``
+persists the artifact; :meth:`WebANNSEngine.search` takes a typed
+:class:`SearchRequest` and returns a :class:`SearchResult`. The bare
+tuple-returning ``query`` / ``query_batch`` remain as thin deprecation
+shims over ``search``.
+
+Engine modes (paper §4.2 baselines), validated at config construction:
 
 - ``webanns``       — full system: phased lazy loading + heuristic cache
                       sizing hooks + compiled compute.
 - ``webanns-base``  — compiled compute + three-tier cache, but *eager*
                       fetches (every expansion's misses fetched
                       immediately, no lazy list) and no cache optimizer.
-- ``mememo``        — the SIGIR'24 baseline: heuristic neighbor prefetch
-                      (BFS over the current layer, up to ``prefetch_size``
-                      items per miss) + fixed cache; see
-                      :mod:`repro.core.mememo`.
+
+(The SIGIR'24 MeMemo baseline — heuristic BFS neighbor prefetch + fixed
+cache — is *not* an engine mode: it is its own engine class,
+:class:`repro.core.mememo.MememoEngine`.)
 """
 
 from __future__ import annotations
@@ -26,7 +35,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import List, Optional, Tuple
+import warnings
+from typing import List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +45,8 @@ import numpy as np
 from repro.core import search as S
 from repro.core.graph import PAD, HNSWGraph
 from repro.core.hnsw import build_hnsw
+from repro.core.index import Index
+from repro.core.storage import StorageBackend
 from repro.core.store import (
     CacheState,
     ExternalStore,
@@ -86,9 +98,12 @@ class BatchStats:
         return self.t_in_mem + self.t_db
 
 
+ENGINE_MODES = ("webanns", "webanns-base")
+
+
 @dataclasses.dataclass
 class EngineConfig:
-    mode: str = "webanns"  # 'webanns' | 'webanns-base'
+    mode: str = "webanns"  # one of ENGINE_MODES: 'webanns' | 'webanns-base'
     metric: str = "l2"
     ef_search: int = 64
     ef_upper: int = 1  # beam width on upper layers (HNSW standard: 1)
@@ -104,6 +119,48 @@ class EngineConfig:
     # the tier-3 payload device-resident — the TPU-native endpoint;
     # False = host-driven phase loop (the paper's Wasm/JS split).
     fused: bool = False
+
+    def __post_init__(self) -> None:
+        if self.mode not in ENGINE_MODES:
+            raise ValueError(
+                f"unknown engine mode {self.mode!r}: expected one of "
+                f"{ENGINE_MODES} (the MeMemo baseline is its own engine "
+                "class, repro.core.mememo.MememoEngine, not a mode)"
+            )
+
+
+# ----------------------------------------------------- typed session API
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One search call: a single ``(d,)`` query or a ``(B, d)`` batch.
+
+    ``ef=None`` falls back to ``EngineConfig.ef_search``. ``batch_mode``
+    applies to batched requests only: ``'batched'`` is the cross-query
+    amortized driver (DESIGN.md §5), ``'loop'`` the sequential fallback.
+    """
+
+    query: np.ndarray
+    k: int = 10
+    ef: Optional[int] = None
+    batch_mode: str = "batched"
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Typed result: ids/dists plus the latency decomposition.
+
+    For a single-query request ``stats`` is one :class:`QueryStats`; for
+    a batch it is a per-query list and ``batch_stats`` carries the
+    whole-batch tier-3 accounting (the amortization truth — see
+    :class:`BatchStats`).
+    """
+
+    ids: np.ndarray  # (k,) or (B, k)
+    dists: np.ndarray  # (k,) or (B, k)
+    stats: Union[QueryStats, List[QueryStats]]
+    batch_stats: Optional[BatchStats] = None
 
 
 # --------------------------------------------------------------- jit phases
@@ -173,26 +230,43 @@ def _batch_load_cached(Q, states: S.SearchState, loaded_ids, loaded_vecs,
 
 
 class WebANNSEngine:
-    """Build / load / query API over the three-tier store."""
+    """The query session: build / open / save / search over an index.
+
+    ``source`` may be a raw ``(N, d)`` vector array (wrapped in
+    :class:`InMemoryBackend` — the seed behavior), any
+    :class:`StorageBackend` (e.g. mmap-backed disk shards), or an
+    :class:`Index` (in which case ``graph`` must be omitted). The
+    session's tier-3 cost model comes from the config and is composed
+    onto the backend by :class:`ExternalStore`.
+    """
 
     def __init__(
         self,
-        vectors: np.ndarray,
-        graph: HNSWGraph,
+        source: Union[np.ndarray, StorageBackend, Index],
+        graph: Optional[HNSWGraph] = None,
         config: Optional[EngineConfig] = None,
         texts: Optional[List[str]] = None,
     ):
         self.config = config or EngineConfig()
-        vectors = np.asarray(vectors, dtype=np.float32)
+        if isinstance(source, Index):
+            if graph is not None:
+                raise ValueError(
+                    "pass either an Index or (vectors, graph), not both"
+                )
+            graph = source.graph
+            source = source.backend
+        if graph is None:
+            raise ValueError("an HNSWGraph is required (or pass an Index)")
         self.graph = graph
-        self.n, self.dim = vectors.shape
-        cap = self.config.cache_capacity or self.n
+        # ExternalStore owns the array/backend dispatch + latency wrapping
         self.external = ExternalStore(
-            vectors,
+            source,
             t_setup=self.config.t_setup,
             t_per_item=self.config.t_per_item,
             simulate_latency=self.config.simulate_latency,
         )
+        self.n, self.dim = self.external.n_items, self.external.dim
+        cap = self.config.cache_capacity or self.n
         self.store = TieredStore(self.external, cap, self.config.eviction)
         self.neighbors = jnp.asarray(graph.neighbors)
         # Text-embedding separation (paper §4.1): texts live in a separate
@@ -220,6 +294,43 @@ class WebANNSEngine:
             metric=config.metric, seed=seed,
         )
         return cls(vectors, g, config, texts)
+
+    @classmethod
+    def from_index(
+        cls,
+        index: Index,
+        config: Optional[EngineConfig] = None,
+        texts: Optional[List[str]] = None,
+    ) -> "WebANNSEngine":
+        """Session over an existing index artifact. The index's metric is
+        authoritative — a differing ``config.metric`` is overridden."""
+        config = config or EngineConfig(metric=index.metric)
+        if config.metric != index.metric:
+            config = dataclasses.replace(config, metric=index.metric)
+        return cls(index, config=config, texts=texts)
+
+    @classmethod
+    def open(
+        cls,
+        path: str,
+        config: Optional[EngineConfig] = None,
+        texts: Optional[List[str]] = None,
+        mmap: bool = True,
+    ) -> "WebANNSEngine":
+        """Reopen a saved index: the paper's initialization-stage bulk
+        load (one access per shard), graph materialized, vector payload
+        left on disk behind :class:`ShardedFileBackend`. No HNSW rebuild.
+        """
+        return cls.from_index(Index.load(path, mmap=mmap), config, texts)
+
+    def save(self, path: str, shard_bytes: int = 64 * 1024 * 1024) -> None:
+        """Persist this session's index (graph + vectors) to ``path``."""
+        self.index.save(path, shard_bytes=shard_bytes)
+
+    @property
+    def index(self) -> Index:
+        """The session's index artifact (graph + storage medium)."""
+        return Index(graph=self.graph, backend=self.external.base_backend)
 
     # ------------------------------------------------------------ sizing
 
@@ -376,14 +487,14 @@ class WebANNSEngine:
         stats.n_visited = stats.items_fetched  # lower bound (hits uncounted)
         return np.asarray(ids), np.asarray(dists), stats
 
-    def query(
-        self, q: np.ndarray, k: int = 10, ef: Optional[int] = None
+    def _search_one(
+        self, q: np.ndarray, k: int, ef: Optional[int]
     ) -> Tuple[np.ndarray, np.ndarray, QueryStats]:
-        """Top-k query through the tiered store. Returns (ids, dists, stats)."""
+        """Single-query driver body. Returns (ids, dists, stats)."""
         cfg = self.config
         ef = ef or cfg.ef_search
         if cfg.fused and cfg.mode == "webanns":
-            return self._query_fused(q, k, ef or cfg.ef_search)
+            return self._query_fused(q, k, ef)
         eager = cfg.mode == "webanns-base"
         stats = QueryStats()
         qj = jnp.asarray(q, jnp.float32)
@@ -403,14 +514,12 @@ class WebANNSEngine:
         stats.t_db = self.external.stats.modeled_time - t_db0
         ids = np.asarray(st.beam.ids[:k])
         dists = np.asarray(st.beam.dists[:k])
-        self.external.mark_used(0)  # no-op; counters already updated
         return ids, dists, stats
 
-    def query_batch(
-        self, Q: np.ndarray, k: int = 10, ef: Optional[int] = None,
-        batch_mode: str = "batched",
+    def _search_many(
+        self, Q: np.ndarray, k: int, ef: Optional[int], batch_mode: str
     ) -> Tuple[np.ndarray, np.ndarray, List[QueryStats]]:
-        """Top-k for a (B, d) query batch. Returns (ids, dists, stats).
+        """Batch driver body (DESIGN.md §5). Returns (ids, dists, stats).
 
         ``batch_mode="batched"`` (default) runs the cross-query amortized
         driver: one jit dispatch per phase for the whole batch and one
@@ -435,7 +544,7 @@ class WebANNSEngine:
         if batch_mode == "loop":
             out_i, out_d, out_s = [], [], []
             for q in Q:
-                i, d, s = self.query(q, k, ef)
+                i, d, s = self._search_one(q, k, ef)
                 out_i.append(i)
                 out_d.append(d)
                 out_s.append(s)
@@ -487,6 +596,68 @@ class WebANNSEngine:
         ids = np.asarray(st.beam.ids[:, :k])
         dists = np.asarray(st.beam.dists[:, :k])
         return ids, dists, per_stats
+
+    # ------------------------------------------------- typed session API
+
+    def search(self, request: SearchRequest) -> SearchResult:
+        """Serve one :class:`SearchRequest` — the canonical entry point.
+
+        A ``(d,)`` query runs the single-query driver; a ``(B, d)``
+        batch runs the driver selected by ``request.batch_mode`` and
+        also carries the whole-batch accounting in
+        ``SearchResult.batch_stats``.
+        """
+        q = np.asarray(request.query, dtype=np.float32)
+        if q.ndim == 1:
+            ids, dists, stats = self._search_one(q, request.k, request.ef)
+            return SearchResult(ids=ids, dists=dists, stats=stats)
+        if q.ndim != 2:
+            raise ValueError(
+                f"SearchRequest.query must be (d,) or (B, d), got {q.shape}"
+            )
+        ids, dists, stats = self._search_many(
+            q, request.k, request.ef, request.batch_mode
+        )
+        return SearchResult(
+            ids=ids, dists=dists, stats=stats,
+            batch_stats=self.last_batch_stats,
+        )
+
+    # ------------------------------------------- legacy tuple API (shims)
+
+    def query(
+        self, q: np.ndarray, k: int = 10, ef: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray, QueryStats]:
+        """Deprecated tuple shim: prefer ``search(SearchRequest(...))``.
+
+        Kept so pre-redesign callers (tests, benchmarks, serving) work
+        unmodified; returns the bare (ids, dists, stats) tuple.
+        """
+        warnings.warn(
+            "WebANNSEngine.query is deprecated; use "
+            "search(SearchRequest(query=q, k=k, ef=ef))",
+            DeprecationWarning, stacklevel=2,
+        )
+        res = self.search(SearchRequest(query=np.asarray(q), k=k, ef=ef))
+        return res.ids, res.dists, res.stats
+
+    def query_batch(
+        self, Q: np.ndarray, k: int = 10, ef: Optional[int] = None,
+        batch_mode: str = "batched",
+    ) -> Tuple[np.ndarray, np.ndarray, List[QueryStats]]:
+        """Deprecated tuple shim: prefer ``search(SearchRequest(...))``
+        with a ``(B, d)`` query (whole-batch accounting then rides on
+        ``SearchResult.batch_stats`` instead of ``last_batch_stats``)."""
+        warnings.warn(
+            "WebANNSEngine.query_batch is deprecated; use "
+            "search(SearchRequest(query=Q, k=k, ef=ef, batch_mode=...))",
+            DeprecationWarning, stacklevel=2,
+        )
+        res = self.search(SearchRequest(
+            query=np.asarray(Q, dtype=np.float32), k=k, ef=ef,
+            batch_mode=batch_mode,
+        ))
+        return res.ids, res.dists, res.stats
 
     def get_texts(self, ids: np.ndarray) -> List[Optional[str]]:
         if self.doc_store is None:

@@ -24,6 +24,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.storage import update_manifest
+
 PAD = -1  # sentinel for absent neighbor slots
 
 
@@ -108,8 +110,9 @@ class HNSWGraph:
                 layer_shards.append({"file": fn, "start": start, "stop": stop})
             manifest["shards"].append(layer_shards)
         np.save(os.path.join(path, "levels.npy"), self.levels)
-        with open(os.path.join(path, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        # merge, don't rewrite: an Index directory keeps its
+        # vector_shards section when the graph alone is re-persisted
+        update_manifest(path, manifest)
 
     @classmethod
     def load(cls, path: str) -> "HNSWGraph":

@@ -1,0 +1,113 @@
+"""The persistable index artifact (DESIGN.md §6).
+
+An :class:`Index` is everything a query session needs, bundled: the HNSW
+graph (levels + neighbor shards + metric/entry-point metadata) and the
+vector payload behind a :class:`~repro.core.storage.StorageBackend`. It
+is the unit of persistence the paper's initialization stage loads
+"all-in-one" (§3.2, Fig. 3b): ``save(path)`` writes one directory of
+chunked ``.npy`` shards plus a single ``manifest.json``; ``load(path)``
+performs one access per shard (graph shards materialized, vector shards
+mmap-opened) and never rebuilds HNSW.
+
+On-disk layout (one directory)::
+
+    manifest.json            graph metadata + graph shard list
+                             + dim / vector_dtype / vector_shards
+    neighbors_l{l}_s{s}.npy  graph neighbor shards (per layer)
+    levels.npy               per-node top layer
+    vectors_s{s}.npy         vector payload shards
+
+The manifest is a strict superset of the graph-only format already
+emitted under ``reports/bench_cache/`` — ``HNSWGraph.load`` keeps
+working on Index directories, and graph-only directories upgrade in
+place via :func:`repro.core.storage.save_vector_shards`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graph import HNSWGraph
+from repro.core.hnsw import build_hnsw
+from repro.core.storage import (
+    InMemoryBackend,
+    ShardedFileBackend,
+    StorageBackend,
+    save_vector_shards,
+)
+
+
+@dataclasses.dataclass
+class Index:
+    """Graph + vector payload: the saveable / reopenable artifact."""
+
+    graph: HNSWGraph
+    backend: StorageBackend
+    path: Optional[str] = None  # where this index was loaded from, if any
+
+    @property
+    def n_items(self) -> int:
+        return self.backend.n_items
+
+    @property
+    def dim(self) -> int:
+        return self.backend.dim
+
+    @property
+    def metric(self) -> str:
+        return self.graph.metric
+
+    # ----------------------------------------------------------- factory
+
+    @classmethod
+    def build(
+        cls,
+        vectors: np.ndarray,
+        M: int = 16,
+        ef_construction: int = 200,
+        metric: str = "l2",
+        seed: int = 0,
+        heuristic: bool = True,
+    ) -> "Index":
+        """Offline construction (the paper's service-worker stage)."""
+        vectors = np.asarray(vectors, dtype=np.float32)
+        graph = build_hnsw(
+            vectors, M=M, ef_construction=ef_construction,
+            metric=metric, seed=seed, heuristic=heuristic,
+        )
+        return cls(graph=graph, backend=InMemoryBackend(vectors))
+
+    # -------------------------------------------------------- persistence
+
+    def save(self, path: str, shard_bytes: int = 64 * 1024 * 1024) -> None:
+        """Persist graph + vectors as one shard directory + manifest.
+
+        Writing goes through the backend protocol, so an index opened
+        from disk can be re-saved elsewhere (the payload is materialized
+        once, the all-in-one load).
+        """
+        os.makedirs(path, exist_ok=True)
+        self.graph.save(path, shard_bytes=shard_bytes)
+        save_vector_shards(path, self.backend.vectors,
+                           shard_bytes=shard_bytes)
+
+    @classmethod
+    def load(cls, path: str, mmap: bool = True) -> "Index":
+        """Initialization-stage bulk load: one access per shard.
+
+        The graph is materialized (it is consulted every hop); the
+        vector payload stays on disk behind :class:`ShardedFileBackend`
+        (``mmap=True``) so tier-3 fetches during queries are actual
+        media reads — pass ``mmap=False`` to stage shards through RAM.
+        """
+        if not os.path.exists(os.path.join(path, "manifest.json")):
+            raise FileNotFoundError(
+                f"no manifest.json under {path!r} — not an index directory"
+            )
+        graph = HNSWGraph.load(path)
+        backend = ShardedFileBackend(path, mmap=mmap)
+        return cls(graph=graph, backend=backend, path=path)

@@ -27,7 +27,8 @@ The *driver* alternates phases until ``L`` drains. Three drivers exist:
 - :class:`repro.core.engine.WebANNSEngine` — host-driven, mirrors the
   paper's Wasm(sync compute)/JS(async fetch) split: the phase function is
   jitted, the fetch is a host call.
-- the **batched driver** (``WebANNSEngine.query_batch``) — the phase
+- the **batched driver** (``WebANNSEngine.search`` on a (B, d)
+  request) — the phase
   primitives vmapped over a (B, d) query batch (see the ``batch_*``
   functions below); the B miss lists are unioned, deduplicated, and
   satisfied by ONE tier-3 access per phase for the whole batch

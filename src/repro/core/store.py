@@ -10,14 +10,14 @@ with pluggable eviction (FIFO default, as in the paper's prototype §4.1;
 LRU and LFU-ish "clock" provided as beyond-paper options). All operations
 are jittable pure functions on the pytree.
 
-Tier 3 (paper: IndexedDB / here: external store) is
-:class:`ExternalStore` — the full vector payload living host-side (or on
-a remote shard), with a calibratable access-cost model
-
-    t_access = t_setup + n_items * t_per_item          (paper Fig. 3b)
-
-and exact access counters, so every experiment on n_db / redundancy /
-latency decomposition (Eq. 1, Eq. 2) is deterministic and reproducible.
+Tier 3 (paper: IndexedDB / here: pluggable storage backend) is
+:class:`ExternalStore` — an accounting shell (exact access counters +
+the calibratable cost model ``t_access = t_setup + n_items * t_per_item``,
+paper Fig. 3b) over a :class:`repro.core.storage.StorageBackend`:
+in-memory numpy (the seed behavior), mmap-backed ``.npy`` vector shards
+on disk, or any composition via :class:`repro.core.storage.LatencyModel`.
+The counters make every experiment on n_db / redundancy / latency
+decomposition (Eq. 1, Eq. 2) deterministic and reproducible.
 """
 
 from __future__ import annotations
@@ -25,11 +25,19 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.storage import (  # noqa: F401  (re-exported, DESIGN.md §6)
+    InMemoryBackend,
+    LatencyModel,
+    ShardedFileBackend,
+    StorageBackend,
+    unwrap_backend,
+)
 
 EVICT_FIFO = 0
 EVICT_LRU = 1
@@ -137,6 +145,14 @@ def cache_insert(
     FIFO: slots are a ring buffer advanced by the insert cursor (paper's
     prototype behavior). LRU: each insert claims the least-recently-used
     slot (computed per batch via top_k on stale timestamps).
+
+    Overflow contract (defined, tested): when one insert batch exceeds
+    capacity, both policies recycle slots, so several rows of the batch
+    target the same slot. All but the LAST such row are dropped
+    ("keep-newest"): the cache ends up holding exactly the final
+    ``capacity`` inserted ids, never a scatter-order-dependent mix.
+    Ids are assumed unique within a batch (callers dedup; duplicate ids
+    may still waste a slot each, as documented in cache_insert_batch).
     """
     k = ids.shape[0]
     cap = cache.capacity
@@ -148,15 +164,23 @@ def cache_insert(
         offsets = jnp.cumsum(need.astype(jnp.int32)) - 1
         slots = (cache.clock + jnp.where(need, offsets, 0)) % cap
         new_clock = cache.clock + jnp.sum(need.astype(jnp.int32))
-    else:  # LRU: pick the k stalest slots
+    else:  # LRU: pick the stalest slots, recycled cyclically if k > cap
+        m = min(k, cap)
         stale = -cache.last_used
-        _, lru_slots = jax.lax.top_k(stale, min(k, cap))
-        lru_slots = jnp.resize(lru_slots, (k,))
+        _, lru_slots = jax.lax.top_k(stale, m)
         offsets = jnp.cumsum(need.astype(jnp.int32)) - 1
-        slots = lru_slots[jnp.clip(offsets, 0, k - 1) % cap]
+        slots = lru_slots[jnp.clip(offsets, 0, k - 1) % m]
         new_clock = cache.clock + 1
 
     slots = jnp.where(need, slots, cap)  # out-of-range = dropped scatter
+    # keep-newest dedup: scatter with duplicate indices has no defined
+    # ordering, so drop every row except the last one targeting each slot
+    order = jnp.arange(k, dtype=jnp.int32)
+    winner = jnp.full((cap,), -1, jnp.int32).at[slots].max(
+        jnp.where(need, order, -1), mode="drop"
+    )
+    need = need & (winner[jnp.clip(slots, 0, cap - 1)] == order)
+    slots = jnp.where(need, slots, cap)
     n_items = cache.slot_of.shape[0]
     # 1) unmap evicted ids (inactive rows scatter out-of-range → dropped;
     # never to a real index, which would clobber it under duplicate-index
@@ -208,49 +232,82 @@ class AccessStats:
 
 
 class ExternalStore:
-    """Tier 3: the full vector payload + cost model + counters.
+    """Tier 3: accounting shell (counters + cost model) over a backend.
 
-    ``t_setup`` dominates per paper Fig. 3b ("all-in-one loading is ~45%
-    faster than sequential") — the default constants reproduce that ratio.
-    Set ``simulate_latency=True`` to actually sleep (end-to-end wall-clock
-    realism); by default latency is accounted analytically so tests stay
-    fast and deterministic.
+    ``source`` may be a raw ``(N, d)`` array (wrapped in
+    :class:`InMemoryBackend` — the seed behavior) or any
+    :class:`StorageBackend`. Unless the given backend already carries a
+    :class:`LatencyModel`, one is composed from ``t_setup`` /
+    ``t_per_item`` / ``simulate_latency``; ``t_setup`` dominates per
+    paper Fig. 3b ("all-in-one loading is ~45% faster than sequential")
+    and the default constants reproduce that ratio. With
+    ``simulate_latency=True`` fetches actually sleep (end-to-end
+    wall-clock realism); by default latency is accounted analytically so
+    tests stay fast and deterministic.
     """
 
     def __init__(
         self,
-        vectors: np.ndarray,
+        source: Union[np.ndarray, StorageBackend],
         t_setup: float = 1.0e-3,
         t_per_item: float = 2.0e-6,
         simulate_latency: bool = False,
     ):
-        self.vectors = np.asarray(vectors, dtype=np.float32)
-        self.t_setup = float(t_setup)
-        self.t_per_item = float(t_per_item)
-        self.simulate_latency = simulate_latency
+        if not hasattr(source, "fetch"):  # raw array (or array-like)
+            backend: StorageBackend = InMemoryBackend(source)
+        else:
+            backend = source
+        if not isinstance(backend, LatencyModel):
+            backend = LatencyModel(
+                backend, t_setup, t_per_item, simulate_latency
+            )
+        self.backend: StorageBackend = backend
         self.stats = AccessStats()
         self._pending: set = set()  # fetched ids not yet demanded
 
     @property
+    def base_backend(self) -> StorageBackend:
+        """The storage medium itself, LatencyModel wrappers stripped."""
+        return unwrap_backend(self.backend)
+
+    @property
+    def vectors(self) -> np.ndarray:
+        """Full payload, materialized (init-stage all-in-one load)."""
+        return self.backend.vectors
+
+    @property
+    def t_setup(self) -> float:
+        b = self.backend
+        return b.t_setup if isinstance(b, LatencyModel) else 0.0
+
+    @property
+    def t_per_item(self) -> float:
+        b = self.backend
+        return b.t_per_item if isinstance(b, LatencyModel) else 0.0
+
+    @property
+    def simulate_latency(self) -> bool:
+        b = self.backend
+        return b.simulate if isinstance(b, LatencyModel) else False
+
+    @property
     def n_items(self) -> int:
-        return int(self.vectors.shape[0])
+        return self.backend.n_items
 
     @property
     def dim(self) -> int:
-        return int(self.vectors.shape[1])
+        return self.backend.dim
 
     def access_cost(self, n: int) -> float:
-        return self.t_setup + n * self.t_per_item
+        return self.backend.access_cost(n)
 
     def fetch(self, ids: np.ndarray) -> np.ndarray:
         """ONE external access (one 'transaction') for a batch of ids."""
         t0 = time.perf_counter()
         ids = np.asarray(ids)
         ids = ids[ids >= 0]
-        out = self.vectors[ids]
+        out = self.backend.fetch(ids)
         cost = self.access_cost(len(ids))
-        if self.simulate_latency:
-            time.sleep(cost)
         self.stats.n_db += 1
         self.stats.items_fetched += len(ids)
         self.stats.modeled_time += cost
@@ -380,11 +437,18 @@ class TieredStore:
         return out
 
     def warm(self, ids: np.ndarray) -> None:
-        """Pre-populate tier 2 (initialization-stage index loading)."""
+        """Pre-populate tier 2 (initialization-stage index loading).
+
+        Reads through the backend protocol (works for any medium, not
+        just in-memory arrays) but bypasses the AccessStats counters AND
+        the LatencyModel wrappers: init-stage loading is not a
+        query-time access in Eq. 1/Eq. 2, so it is neither counted nor
+        simulated.
+        """
         ids = np.asarray(ids, dtype=np.int32)
         padded = self._pad_pow2(ids)
         vecs = np.zeros((len(padded), self.external.dim), np.float32)
-        vecs[: len(ids)] = self.external.vectors[ids]
+        vecs[: len(ids)] = self.external.base_backend.fetch(ids)
         self.cache = cache_insert(
             self.cache, jnp.asarray(padded), jnp.asarray(vecs),
             policy=self.eviction,

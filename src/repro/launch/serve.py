@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.data.synthetic import corpus_embeddings
 from repro.models import transformer as T
 from repro.serve.scheduler import ContinuousBatcher, Request
@@ -53,8 +53,8 @@ def main():
     n_db_total = 0
     for rid in range(args.requests):
         qv = X[rng.integers(0, len(X))] + 0.05
-        ids, _, stats = retriever.query(qv, k=3, ef=48)
-        n_db_total += stats.n_db
+        res = retriever.search(SearchRequest(query=qv, k=3, ef=48))
+        n_db_total += res.stats.n_db
         prompt = rng.integers(0, cfg.vocab, 4).astype(np.int32)
         batcher.submit(Request(rid=rid, prompt=prompt,
                                max_new=args.max_new))

@@ -21,7 +21,7 @@ from repro.core.cache_opt import (
     QueryTestStats,
     optimize_memory_size,
 )
-from repro.core.engine import WebANNSEngine
+from repro.core.engine import SearchRequest, WebANNSEngine
 
 
 @dataclasses.dataclass
@@ -53,9 +53,11 @@ class RAGPipeline:
 
     def retrieve(self, query: str) -> Tuple[np.ndarray, List, object]:
         qv = self.embed_fn(query)
-        ids, _, stats = self.engine.query(qv, k=self.k, ef=self.ef)
-        texts = self.engine.get_texts(ids)
-        return ids, texts, stats
+        res = self.engine.search(
+            SearchRequest(query=qv, k=self.k, ef=self.ef)
+        )
+        texts = self.engine.get_texts(res.ids)
+        return res.ids, texts, res.stats
 
     def retrieve_batch(
         self, queries: List[str]
@@ -66,9 +68,9 @@ class RAGPipeline:
         if not queries:
             return []
         Q = np.stack([self.embed_fn(q) for q in queries])
-        ids, _, stats = self.engine.query_batch(Q, k=self.k, ef=self.ef)
+        res = self.engine.search(SearchRequest(query=Q, k=self.k, ef=self.ef))
         return [
-            (ids[b], self.engine.get_texts(ids[b]), stats[b])
+            (res.ids[b], self.engine.get_texts(res.ids[b]), res.stats[b])
             for b in range(len(queries))
         ]
 
@@ -100,8 +102,8 @@ def make_batched_retriever(
     the function ContinuousBatcher calls ONCE per admission wave."""
 
     def retrieve(Q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        ids, dists, _ = engine.query_batch(np.asarray(Q), k=k, ef=ef)
-        return ids, dists
+        res = engine.search(SearchRequest(query=np.asarray(Q), k=k, ef=ef))
+        return res.ids, res.dists
 
     return retrieve
 
@@ -128,8 +130,7 @@ def budget_retrieval(
         engine.warm_cache()
         agg = []
         for q in probe_queries:
-            _, _, s = engine.query(q, k=4, ef=ef)
-            agg.append(s)
+            agg.append(engine.search(SearchRequest(query=q, k=4, ef=ef)).stats)
         n_db = float(np.mean([s.n_db for s in agg]))
         n_q = float(np.mean([s.n_visited for s in agg]))
         t_q = float(np.mean([s.t_query for s in agg]))

@@ -94,8 +94,8 @@ class ContinuousBatcher:
 
     def _retrieve_for(self, admitted: List[Request]) -> None:
         """Batched retrieval for an admission wave: every admitted RAG
-        request's query goes through ONE engine.query_batch call, so
-        tier-3 misses are shared across the wave (DESIGN.md §5)."""
+        request's query goes through ONE batched engine.search call,
+        so tier-3 misses are shared across the wave (DESIGN.md §5)."""
         if self.retrieve_fn is None:
             return
         rag = [r for r in admitted

@@ -1,0 +1,178 @@
+"""Session-layer API (DESIGN.md §6): config validation, the typed
+SearchRequest/SearchResult surface, the legacy tuple shims, and the
+open/save acceptance contract — a reopened disk-backed engine must be
+bit-identical to the in-memory engine in all of loop/batched/fused
+modes while tier-3 fetches are actually served from shards."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    BatchStats,
+    EngineConfig,
+    QueryStats,
+    SearchRequest,
+    SearchResult,
+    WebANNSEngine,
+)
+from repro.core.index import Index
+from repro.core.storage import InMemoryBackend, ShardedFileBackend
+
+
+# ------------------------------------------------------ config validation
+
+
+def test_engine_config_valid_modes():
+    assert EngineConfig().mode == "webanns"
+    assert EngineConfig(mode="webanns-base").mode == "webanns-base"
+
+
+@pytest.mark.parametrize("bad", ["mememo", "webann", "", "WEBANNS"])
+def test_engine_config_rejects_unknown_mode(bad):
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        EngineConfig(mode=bad)
+
+
+def test_mememo_mode_error_points_to_baseline_engine():
+    with pytest.raises(ValueError, match="MememoEngine"):
+        EngineConfig(mode="mememo")
+
+
+# --------------------------------------------------------- constructors
+
+
+def test_ctor_rejects_index_plus_graph(small_dataset, small_graph):
+    X, _ = small_dataset
+    idx = Index(graph=small_graph, backend=InMemoryBackend(X))
+    with pytest.raises(ValueError, match="not both"):
+        WebANNSEngine(idx, graph=small_graph)
+
+
+def test_ctor_requires_graph_for_raw_vectors(small_dataset):
+    X, _ = small_dataset
+    with pytest.raises(ValueError, match="HNSWGraph"):
+        WebANNSEngine(X)
+
+
+def test_ctor_accepts_backend_source(small_dataset, small_graph):
+    X, Q = small_dataset
+    eng = WebANNSEngine(InMemoryBackend(X), small_graph)
+    res = eng.search(SearchRequest(query=Q[0], k=5))
+    assert res.ids.shape == (5,)
+
+
+def test_from_index_metric_is_authoritative(small_dataset, small_graph):
+    X, _ = small_dataset
+    idx = Index(graph=small_graph, backend=InMemoryBackend(X))  # l2 graph
+    eng = WebANNSEngine.from_index(idx, EngineConfig(metric="cos"))
+    assert eng.config.metric == "l2"
+
+
+# ----------------------------------------------------------- typed API
+
+
+@pytest.fixture(scope="module")
+def engine(small_dataset, small_graph):
+    X, _ = small_dataset
+    return WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=128))
+
+
+def test_search_single_query(engine, small_dataset):
+    _, Q = small_dataset
+    res = engine.search(SearchRequest(query=Q[0], k=7, ef=48))
+    assert isinstance(res, SearchResult)
+    assert res.ids.shape == (7,) and res.dists.shape == (7,)
+    assert isinstance(res.stats, QueryStats)
+    assert res.batch_stats is None
+
+
+def test_search_batch_carries_batch_stats(engine, small_dataset):
+    _, Q = small_dataset
+    res = engine.search(SearchRequest(query=Q[:5], k=6, ef=48))
+    assert res.ids.shape == (5, 6) and res.dists.shape == (5, 6)
+    assert isinstance(res.stats, list) and len(res.stats) == 5
+    assert isinstance(res.batch_stats, BatchStats)
+    assert res.batch_stats.batch_size == 5
+    assert res.batch_stats is engine.last_batch_stats
+
+
+def test_search_rejects_bad_rank(engine):
+    with pytest.raises(ValueError, match=r"\(d,\) or \(B, d\)"):
+        engine.search(SearchRequest(query=np.zeros((2, 3, 4), np.float32)))
+
+
+def test_search_rejects_bad_batch_mode(engine, small_dataset):
+    _, Q = small_dataset
+    with pytest.raises(ValueError, match="batch_mode"):
+        engine.search(SearchRequest(query=Q[:2], batch_mode="turbo"))
+
+
+# ------------------------------------------------------ legacy tuple shims
+
+
+def test_query_shim_matches_search(small_dataset, small_graph):
+    X, Q = small_dataset
+    eng = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=128))
+    res = eng.search(SearchRequest(query=Q[1], k=5, ef=48))
+    with pytest.deprecated_call():
+        ids, dists, stats = eng.query(Q[1], k=5, ef=48)
+    np.testing.assert_array_equal(ids, res.ids)
+    np.testing.assert_array_equal(dists, res.dists)
+    assert isinstance(stats, QueryStats)
+
+
+def test_query_batch_shim_matches_search(small_dataset, small_graph):
+    X, Q = small_dataset
+    eng = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=128))
+    res = eng.search(SearchRequest(query=Q[:4], k=5, ef=48))
+    with pytest.deprecated_call():
+        ids, dists, stats = eng.query_batch(Q[:4], k=5, ef=48)
+    np.testing.assert_array_equal(ids, res.ids)
+    np.testing.assert_array_equal(dists, res.dists)
+    assert len(stats) == 4
+
+
+# ------------------------------------------- open/save acceptance contract
+
+
+@pytest.mark.parametrize("mode", ["loop", "batched", "fused"])
+def test_open_is_bit_identical_and_disk_served(
+    tmp_path, small_dataset, small_graph, mode
+):
+    X, Q = small_dataset
+    path = str(tmp_path / "idx")
+    cfg = EngineConfig(cache_capacity=96, fused=(mode == "fused"))
+    mem = WebANNSEngine(X, small_graph, cfg)
+    mem.save(path, shard_bytes=1 << 14)
+    disk = WebANNSEngine.open(path, config=cfg)
+    assert isinstance(disk.external.base_backend, ShardedFileBackend)
+    if mode == "fused":
+        for q in Q[:4]:
+            a = mem.search(SearchRequest(query=q, k=6, ef=48))
+            b = disk.search(SearchRequest(query=q, k=6, ef=48))
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_array_equal(a.dists, b.dists)
+    else:
+        req = SearchRequest(query=Q[:6], k=6, ef=48, batch_mode=mode)
+        a, b = mem.search(req), disk.search(req)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+    # AccessStats + the backend witness: tier 3 was served from shards
+    assert disk.external.stats.n_db > 0
+    assert disk.external.stats.items_fetched > 0
+    assert disk.external.base_backend.shard_reads > 0
+
+
+def test_save_open_save_round_trip(tmp_path, small_dataset, small_graph):
+    X, Q = small_dataset
+    p1, p2 = str(tmp_path / "a"), str(tmp_path / "b")
+    cfg = EngineConfig(cache_capacity=96)
+    mem = WebANNSEngine(X, small_graph, cfg)
+    mem.save(p1)
+    disk = WebANNSEngine.open(p1, config=cfg)
+    disk.save(p2)  # re-save through the sharded backend
+    again = WebANNSEngine.open(p2, config=cfg)
+    req = SearchRequest(query=Q[:3], k=5, ef=48)
+    np.testing.assert_array_equal(
+        mem.search(req).ids, again.search(req).ids
+    )

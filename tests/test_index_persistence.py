@@ -1,0 +1,107 @@
+"""Index artifact (DESIGN.md §6): save → load round trips, manifest
+compatibility with the graph-only format, and bit-identical queries on
+both storage backends."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
+from repro.core.graph import HNSWGraph
+from repro.core.index import Index
+from repro.core.storage import InMemoryBackend, ShardedFileBackend
+
+
+@pytest.fixture(scope="module")
+def built(small_dataset):
+    X, _ = small_dataset
+    return X, Index.build(X, M=8, ef_construction=50, seed=3)
+
+
+def test_round_trip_graph_and_vectors(tmp_path, built):
+    X, idx = built
+    path = str(tmp_path / "idx")
+    idx.save(path, shard_bytes=1 << 14)  # force several shards each
+    idx2 = Index.load(path)
+    assert isinstance(idx2.backend, ShardedFileBackend)
+    np.testing.assert_array_equal(idx2.graph.neighbors, idx.graph.neighbors)
+    np.testing.assert_array_equal(idx2.graph.levels, idx.graph.levels)
+    assert idx2.graph.entry_point == idx.graph.entry_point
+    assert idx2.graph.max_level == idx.graph.max_level
+    assert (idx2.metric, idx2.n_items, idx2.dim) == ("l2", len(X), X.shape[1])
+    # vector payload bit-identical through the disk round trip
+    np.testing.assert_array_equal(
+        idx2.backend.fetch(np.arange(len(X))), X
+    )
+
+
+def test_manifest_is_graph_format_superset(tmp_path, built):
+    """HNSWGraph.load keeps working on an Index directory (the manifest
+    extends — never breaks — the graph-only bench_cache format)."""
+    X, idx = built
+    path = str(tmp_path / "idx")
+    idx.save(path)
+    g = HNSWGraph.load(path)
+    np.testing.assert_array_equal(g.neighbors, idx.graph.neighbors)
+    assert g.M == idx.graph.M and g.metric == idx.graph.metric
+
+
+def test_graph_resave_preserves_vector_shards(tmp_path, built):
+    """Re-persisting the graph alone into an Index directory must not
+    clobber the manifest's vector_shards section (merge, not rewrite)."""
+    X, idx = built
+    path = str(tmp_path / "idx")
+    idx.save(path)
+    reopened = Index.load(path)
+    reopened.graph.save(path)  # graph-only rewrite into the same dir
+    again = Index.load(path)  # would raise if vector_shards were lost
+    np.testing.assert_array_equal(
+        again.backend.fetch(np.arange(len(X))), X
+    )
+
+
+def test_resave_from_disk_backend(tmp_path, built):
+    X, idx = built
+    p1, p2 = str(tmp_path / "a"), str(tmp_path / "b")
+    idx.save(p1)
+    reopened = Index.load(p1)
+    reopened.save(p2)  # write path goes through the backend protocol
+    np.testing.assert_array_equal(
+        Index.load(p2).backend.fetch(np.arange(len(X))), X
+    )
+
+
+def test_load_missing_manifest_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="manifest.json"):
+        Index.load(str(tmp_path / "nope"))
+
+
+def test_save_load_query_bit_identical_on_both_backends(
+    tmp_path, built, small_dataset
+):
+    """The satellite contract: save → load → query returns bit-identical
+    (ids, dists) whether tier 3 is the in-memory array or disk shards."""
+    X, idx = built
+    _, Q = small_dataset
+    path = str(tmp_path / "idx")
+    idx.save(path, shard_bytes=1 << 14)
+    cfg = EngineConfig(cache_capacity=64)
+    engines = {
+        "in-memory": WebANNSEngine.from_index(idx, cfg),
+        "sharded": WebANNSEngine.open(path, config=cfg),
+        "sharded-no-mmap": WebANNSEngine.from_index(
+            Index.load(path, mmap=False), cfg
+        ),
+    }
+    results = {
+        name: eng.search(SearchRequest(query=Q[:4], k=8, ef=48))
+        for name, eng in engines.items()
+    }
+    base = results["in-memory"]
+    for name, res in results.items():
+        np.testing.assert_array_equal(base.ids, res.ids, err_msg=name)
+        np.testing.assert_array_equal(base.dists, res.dists, err_msg=name)
+    # and the disk engine really hit the shards
+    assert engines["sharded"].external.base_backend.shard_reads > 0
+    assert engines["sharded"].external.stats.n_db > 0

@@ -1,0 +1,117 @@
+"""Tier-3 storage backends (DESIGN.md §6): protocol conformance, the
+sharded-file medium, latency-model composition, and the ExternalStore
+accounting shell over each."""
+
+import numpy as np
+import pytest
+
+from repro.core.storage import (
+    InMemoryBackend,
+    LatencyModel,
+    ShardedFileBackend,
+    StorageBackend,
+    save_vector_shards,
+    unwrap_backend,
+    update_manifest,
+)
+from repro.core.store import ExternalStore, TieredStore
+
+
+@pytest.fixture()
+def payload():
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((50, 8)).astype(np.float32)
+
+
+@pytest.fixture()
+def sharded(tmp_path, payload):
+    # 8 floats * 4 bytes * 20 rows per shard → 3 shards for 50 rows
+    save_vector_shards(str(tmp_path), payload, shard_bytes=8 * 4 * 20)
+    return ShardedFileBackend(str(tmp_path))
+
+
+def test_in_memory_backend_protocol(payload):
+    b = InMemoryBackend(payload)
+    assert isinstance(b, StorageBackend)
+    assert b.n_items == 50 and b.dim == 8
+    assert b.access_cost(100) == 0.0
+    np.testing.assert_array_equal(b.fetch(np.array([3, 7])), payload[[3, 7]])
+    np.testing.assert_array_equal(b.vectors, payload)
+
+
+def test_sharded_backend_fetch_parity(payload, sharded):
+    assert isinstance(sharded, StorageBackend)
+    assert sharded.n_items == 50 and sharded.dim == 8
+    ids = np.array([0, 19, 20, 39, 40, 49, 5])  # spans all 3 shards
+    np.testing.assert_array_equal(sharded.fetch(ids), payload[ids])
+    assert sharded.shard_reads == 3  # one read per shard touched
+    sharded.fetch(np.array([1]))
+    assert sharded.shard_reads == 4
+    np.testing.assert_array_equal(sharded.vectors, payload)
+
+
+def test_sharded_backend_no_mmap(tmp_path, payload):
+    save_vector_shards(str(tmp_path), payload, shard_bytes=1 << 20)
+    b = ShardedFileBackend(str(tmp_path), mmap=False)
+    np.testing.assert_array_equal(b.fetch(np.arange(50)), payload)
+
+
+def test_sharded_backend_rejects_graph_only_dir(tmp_path):
+    update_manifest(str(tmp_path), {"N": 10, "shards": []})
+    with pytest.raises(ValueError, match="vector_shards"):
+        ShardedFileBackend(str(tmp_path))
+
+
+def test_latency_model_composes(payload):
+    base = InMemoryBackend(payload)
+    lm = LatencyModel(base, t_setup=1e-3, t_per_item=1e-5)
+    assert isinstance(lm, StorageBackend)
+    assert abs(lm.access_cost(10) - (1e-3 + 1e-4)) < 1e-12
+    # composable: a second wrapper stacks its model on the first
+    lm2 = LatencyModel(lm, t_setup=2e-3, t_per_item=0.0)
+    assert abs(lm2.access_cost(10) - (3e-3 + 1e-4)) < 1e-12
+    np.testing.assert_array_equal(lm2.fetch(np.array([4])), payload[[4]])
+    assert unwrap_backend(lm2) is base
+    assert lm2.n_items == 50 and lm2.dim == 8
+
+
+def test_external_store_array_back_compat(payload):
+    """The seed ctor signature keeps working: array + latency flags."""
+    ext = ExternalStore(payload, t_setup=1e-3, t_per_item=1e-5)
+    out = ext.fetch(np.array([2, 5]))
+    np.testing.assert_array_equal(out, payload[[2, 5]])
+    assert ext.stats.n_db == 1 and ext.stats.items_fetched == 2
+    assert abs(ext.stats.modeled_time - (1e-3 + 2e-5)) < 1e-9
+    assert ext.t_setup == 1e-3 and ext.t_per_item == 1e-5
+    assert not ext.simulate_latency
+    assert ext.n_items == 50 and ext.dim == 8
+    assert isinstance(ext.base_backend, InMemoryBackend)
+
+
+def test_external_store_over_sharded_backend(payload, sharded):
+    ext = ExternalStore(sharded, t_setup=2e-3, t_per_item=1e-6)
+    out = ext.fetch(np.array([0, 25, 49]))
+    np.testing.assert_array_equal(out, payload[[0, 25, 49]])
+    assert ext.stats.n_db == 1
+    assert abs(ext.access_cost(5) - (2e-3 + 5e-6)) < 1e-12
+    assert ext.base_backend is sharded
+    assert sharded.shard_reads > 0  # served from disk shards
+
+
+def test_external_store_pre_wrapped_latency_not_rewrapped(payload):
+    lm = LatencyModel(InMemoryBackend(payload), t_setup=5e-3)
+    ext = ExternalStore(lm, t_setup=1e-9)  # ctor flags must NOT re-wrap
+    assert ext.backend is lm
+    assert ext.t_setup == 5e-3
+
+
+def test_tiered_store_over_sharded_backend(payload, sharded):
+    ts = TieredStore(ExternalStore(sharded), capacity=16)
+    ids = np.array([1, 21, 41], np.int32)
+    np.testing.assert_array_equal(ts.gather(ids), payload[ids])
+    assert ts.external.stats.n_db == 1
+    # warm goes through the backend protocol (not external.vectors)
+    ts.warm(np.array([7, 8], np.int32))
+    present, _ = ts.lookup(np.array([7, 8], np.int32))
+    assert np.asarray(present).all()
+    assert ts.external.stats.n_db == 1  # init-stage load is uncounted

@@ -1,0 +1,112 @@
+"""Cache-insert overflow contract + gather_batch edge cases.
+
+Kept hypothesis-free (unlike test_store.py) so these regressions always
+run. The overflow contract is keep-newest: when one insert batch exceeds
+capacity, the cache ends up holding exactly the LAST ``capacity``
+inserted ids — never a scatter-order-dependent mix (the pre-fix LRU path
+recycled slots via ``jnp.resize`` and let later rows clobber earlier
+ones in undefined order)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.store import (
+    EVICT_FIFO,
+    EVICT_LRU,
+    ExternalStore,
+    TieredStore,
+    cache_init,
+    cache_insert,
+    cache_lookup,
+)
+
+
+def _vec(i, d=2):
+    return np.full((d,), float(i), np.float32)
+
+
+@pytest.mark.parametrize("policy", [EVICT_FIFO, EVICT_LRU])
+def test_overflowing_insert_keeps_newest(policy):
+    cap, k = 4, 11
+    c = cache_init(50, cap, 2)
+    ids = jnp.arange(k, dtype=jnp.int32)
+    vecs = jnp.stack([jnp.asarray(_vec(i)) for i in range(k)])
+    c = cache_insert(c, ids, vecs, policy=policy)
+    present, out = cache_lookup(c, ids)
+    present = np.asarray(present)
+    # exactly the LAST `cap` inserted ids survive, with their own vectors
+    assert present.tolist() == [False] * (k - cap) + [True] * cap
+    for i in range(k - cap, k):
+        np.testing.assert_allclose(np.asarray(out[i]), _vec(i))
+    # the id→slot map has no stale winners
+    assert int((np.asarray(c.id_of) >= 0).sum()) == cap
+
+
+@pytest.mark.parametrize("policy", [EVICT_FIFO, EVICT_LRU])
+def test_overflowing_insert_with_padding_rows(policy):
+    """-1 padding interleaved with an overflowing batch stays inert."""
+    cap = 3
+    c = cache_init(50, cap, 2)
+    ids_np = np.array([5, -1, 6, 7, -1, 8, 9], np.int32)
+    vecs = jnp.stack([jnp.asarray(_vec(max(i, 0))) for i in ids_np])
+    c = cache_insert(c, jnp.asarray(ids_np), vecs, policy=policy)
+    present, out = cache_lookup(c, jnp.array([5, 6, 7, 8, 9], jnp.int32))
+    assert np.asarray(present).tolist() == [False, False, True, True, True]
+    for j, i in enumerate((7, 8, 9)):
+        np.testing.assert_allclose(np.asarray(out[2 + j]), _vec(i))
+
+
+def test_non_overflowing_insert_unchanged():
+    """The keep-newest dedup must be a no-op when the batch fits."""
+    c = cache_init(50, 8, 2)
+    ids = jnp.array([3, 1, 4], jnp.int32)
+    vecs = jnp.stack([jnp.asarray(_vec(i)) for i in (3, 1, 4)])
+    c = cache_insert(c, ids, vecs, policy=EVICT_LRU)
+    present, out = cache_lookup(c, ids)
+    assert np.asarray(present).all()
+    for j, i in enumerate((3, 1, 4)):
+        np.testing.assert_allclose(np.asarray(out[j]), _vec(i))
+
+
+# ------------------------------------------------------- gather_batch
+
+
+def _store(n=30, d=4, cap=8):
+    X = np.arange(n * d, dtype=np.float32).reshape(n, d)
+    return X, TieredStore(ExternalStore(X), capacity=cap)
+
+
+def test_gather_batch_all_padded_rows():
+    X, ts = _store()
+    out = ts.gather_batch(np.full((3, 5), -1, np.int32))
+    np.testing.assert_array_equal(out, np.zeros((3, 5, 4), np.float32))
+    assert ts.external.stats.n_db == 0  # no tier-3 access at all
+
+
+def test_gather_batch_duplicates_across_rows_fetched_once():
+    X, ts = _store()
+    ids = np.array([[1, 2, 7, -1], [2, 1, 3, -1], [7, 3, 1, 2]], np.int32)
+    out = ts.gather_batch(ids)
+    for b in range(3):
+        for j in range(4):
+            if ids[b, j] >= 0:
+                np.testing.assert_array_equal(out[b, j], X[ids[b, j]])
+            else:
+                np.testing.assert_array_equal(out[b, j], np.zeros(4))
+    assert ts.external.stats.n_db == 1  # ONE access for the union
+    assert ts.external.stats.items_fetched == 4  # unique: {1, 2, 3, 7}
+
+
+def test_gather_batch_union_larger_than_capacity():
+    X, ts = _store(cap=4)
+    ids = np.arange(12, dtype=np.int32).reshape(3, 4)  # union of 12 > 4
+    out = ts.gather_batch(ids)
+    np.testing.assert_array_equal(out, X[ids])  # results exact regardless
+    assert ts.external.stats.n_db == 1
+    # the cache kept a consistent subset (keep-newest of the union)
+    present, vecs = ts.lookup(jnp.arange(12, dtype=jnp.int32))
+    present = np.asarray(present)
+    assert present.sum() == 4
+    for i in np.nonzero(present)[0]:
+        np.testing.assert_array_equal(np.asarray(vecs[i]), X[i])
