@@ -18,12 +18,33 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, csv_row,
-                               get_index, queries_for, run_queries)
+from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP,
+                               brute_force_topk, csv_row, get_index,
+                               queries_for, recall_at_k, run_queries)
+from repro.core import quant
 from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.mememo import MememoEngine
 
 BENCH_JSON = os.path.join("reports", "BENCH_query.json")
+
+
+def _merge_json(json_path: str, section: str, entries: List[dict]) -> None:
+    """Merge one section into BENCH_query.json, keeping the others (the
+    batch sweep and the precision sweep are run/committed independently)."""
+    doc = {"benchmark": "bench_query"}
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, dict):  # anything else: start fresh
+                doc = loaded
+                doc["benchmark"] = "bench_query"
+        except (json.JSONDecodeError, OSError):
+            pass
+    doc[section] = entries
+    os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=1)
 
 
 def bench_table1(datasets=("arxiv-1k", "wiki-small"),
@@ -84,14 +105,25 @@ def bench_batch(
     once per phase — DESIGN.md §5) while the loop driver's stays flat.
 
     With ``json_path`` set, the same numbers (plus per-batch-call p50/p99
-    latency) are written as machine-readable JSON so the perf trajectory
-    is tracked across PRs (``reports/BENCH_query.json``).
+    latency and recall@10 against the brute-force baseline) are written
+    as machine-readable JSON so the perf trajectory is tracked across
+    PRs (``reports/BENCH_query.json``).
+
+    **Warm-up protocol** (the bs=16 p99 outlier fix): before measuring,
+    every distinct batch window is driven through ONE full cold-cache
+    pass. The first traversal of a window can hit padded miss-union
+    shape buckets no other window compiled, and that one-off XLA
+    compile used to land in a single measured call (593 ms at bs=16 vs
+    ~57 ms at bs=8). With the warm-up pass owning all compiles (and
+    `TieredStore._pad_pow2` flooring the bucket set at PAD_FLOOR=64),
+    measured passes see only steady-state shapes.
     """
     rows: List[str] = []
     entries: List[dict] = []
     for ds in datasets:
         X, g = get_index(ds)
         Q = queries_for(X, n_queries)
+        truth = brute_force_topk(X, Q, 10)
         cap = max(16, int(len(X) * cache_ratio))
         for bs in batch_sizes:
             if bs > len(Q):  # nothing to measure — don't emit a fake row
@@ -108,9 +140,25 @@ def bench_batch(
                 eng = WebANNSEngine(X, g, EngineConfig(
                     cache_capacity=cap, t_setup=IDB_T_SETUP,
                     t_per_item=IDB_T_PER_ITEM))
-                req = SearchRequest(query=Q[:bs], k=10, ef=ef,
-                                    batch_mode=mode)
-                eng.search(req)  # warm jit
+                # compile-exclusion warm-up: one full cold-cache pass
+                # over EVERY window, so each padded-shape bucket any
+                # measured call can touch is already traced; predictions
+                # double as the recall sample (results are cache-state
+                # invariant, so the warm-up pass is as good as any)
+                preds = np.zeros((len(starts) * bs, 10), np.int64)
+                for w, lo in enumerate(starts):
+                    res = eng.search(SearchRequest(
+                        query=Q[lo:lo + bs], k=10, ef=ef, batch_mode=mode))
+                    preds[w * bs:(w + 1) * bs] = res.ids
+                rec = recall_at_k(
+                    preds, truth[: len(starts) * bs]) if starts else 0.0
+                # second warm-up pass mirrors the measured protocol
+                # (resize → cold cache → all windows) so the measured
+                # passes replay an already-executed trace sequence
+                eng.store.resize(cap)
+                for lo in starts:
+                    eng.search(SearchRequest(query=Q[lo:lo + bs], k=10,
+                                             ef=ef, batch_mode=mode))
                 eng.external.stats.reset()
                 lat: List[float] = []  # per batch call, seconds
                 n_served = 0
@@ -131,7 +179,7 @@ def bench_batch(
                     f"batch_{ds}_{mode}_bs{bs}",
                     wall / max(n_served, 1) * 1e6,
                     f"qps={qps:.1f},ndb_per_q={ndb_q:.2f},"
-                    f"items_per_q={fetch_q:.1f}"))
+                    f"items_per_q={fetch_q:.1f},recall10={rec:.3f}"))
                 entries.append({
                     "dataset": ds, "mode": mode, "batch_size": bs,
                     "ef": ef, "cache_items": cap, "n_served": n_served,
@@ -141,13 +189,113 @@ def bench_batch(
                     "qps": qps,
                     "n_db_per_query": ndb_q,
                     "items_per_query": fetch_q,
+                    "recall_at_10": rec,
                 })
     if json_path:
-        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
-        with open(json_path, "w") as f:
-            json.dump({"benchmark": "bench_query_batch",
-                       "entries": entries}, f, indent=1)
+        _merge_json(json_path, "entries", entries)
         rows.append(f"# wrote {json_path} ({len(entries)} entries)")
+    return rows
+
+
+def bench_precision(
+    datasets: Sequence[str] = ("arxiv-1k",),
+    precisions: Sequence[str] = ("float32", "float16", "int8"),
+    n_queries: int = 32,
+    batch_size: int = 8,
+    cache_ratio: float = 0.25,
+    ef: int = 64,
+    json_path: Optional[str] = None,
+    assert_parity: bool = False,
+) -> List[str]:
+    """Precision sweep at a FIXED tier-2 byte budget (DESIGN.md §7).
+
+    The budget is what a float32 cache of ``cache_ratio·N`` items costs;
+    each precision re-spends it via ``quant.capacity_for_budget`` (int8
+    holds ~4× the float32 items). Reported per precision: effective
+    capacity (and its ratio over float32), recall@10 against the
+    brute-force baseline, p50/p99 per batched call, and tier-3 accesses
+    per query. ``assert_parity`` turns the headline acceptance claims
+    into hard failures (CI smoke): int8 capacity ≥ 2× float32 AND int8
+    recall@10 ≥ 0.95× float32 recall@10.
+    """
+    rows: List[str] = []
+    entries: List[dict] = []
+    recalls: dict = {}
+    canon = [quant.canonical_precision(p) for p in precisions]
+    if assert_parity and not {"float32", "int8"} <= set(canon):
+        raise ValueError(
+            "assert_parity needs both 'float32' and 'int8' in the sweep "
+            f"(got {canon}) — the contract compares the two"
+        )
+    for ds in datasets:
+        X, g = get_index(ds)
+        Q = queries_for(X, n_queries)
+        truth = brute_force_topk(X, Q, 10)
+        dim = X.shape[1]
+        budget = max(16, int(len(X) * cache_ratio)) * dim * 4
+        starts = list(range(0, len(Q) - batch_size + 1, batch_size))
+        passes = max(1, -(-8 // max(1, len(starts))))
+        for prec in precisions:
+            prec = quant.canonical_precision(prec)
+            cap = quant.capacity_for_budget(budget, dim, prec)
+            eng = WebANNSEngine(X, g, EngineConfig(
+                cache_capacity=cap, precision=prec,
+                t_setup=IDB_T_SETUP, t_per_item=IDB_T_PER_ITEM))
+            preds = np.zeros((len(starts) * batch_size, 10), np.int64)
+            for w, lo in enumerate(starts):  # warm-up pass owns compiles
+                res = eng.search(SearchRequest(
+                    query=Q[lo:lo + batch_size], k=10, ef=ef))
+                preds[w * batch_size:(w + 1) * batch_size] = res.ids
+            rec = recall_at_k(preds, truth[: len(preds)])
+            recalls[(ds, prec)] = rec
+            eng.external.stats.reset()
+            lat: List[float] = []
+            n_served = 0
+            for _ in range(passes):
+                eng.store.resize(cap)
+                for lo in starts:
+                    t0 = time.perf_counter()
+                    eng.search(SearchRequest(
+                        query=Q[lo:lo + batch_size], k=10, ef=ef))
+                    lat.append(time.perf_counter() - t0)
+                    n_served += batch_size
+            s = eng.external.stats
+            cap32 = quant.capacity_for_budget(budget, dim, "float32")
+            entry = {
+                "dataset": ds, "precision": prec,
+                "budget_bytes": budget, "cache_items": cap,
+                "capacity_x_float32": cap / max(1, cap32),
+                "batch_size": batch_size, "ef": ef,
+                "n_served": n_served,
+                "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+                "qps": n_served / max(sum(lat), 1e-9),
+                "n_db_per_query": s.n_db / max(n_served, 1),
+                "items_per_query": s.items_fetched / max(n_served, 1),
+                "recall_at_10": rec,
+            }
+            entries.append(entry)
+            rows.append(csv_row(
+                f"precision_{ds}_{prec}",
+                sum(lat) / max(n_served, 1) * 1e6,
+                f"cache_items={cap},x_f32={entry['capacity_x_float32']:.2f},"
+                f"recall10={rec:.3f},"
+                f"ndb_per_q={entry['n_db_per_query']:.2f}"))
+        if assert_parity:
+            r32 = recalls[(ds, "float32")]
+            r8 = recalls[(ds, "int8")]
+            cap_x = [e for e in entries
+                     if e["dataset"] == ds and e["precision"] == "int8"
+                     ][0]["capacity_x_float32"]
+            assert cap_x >= 2.0, \
+                f"{ds}: int8 capacity only {cap_x:.2f}x float32 (< 2x)"
+            assert r8 >= 0.95 * r32, \
+                f"{ds}: int8 recall {r8:.3f} < 0.95 x float32 {r32:.3f}"
+            rows.append(f"# parity OK ({ds}): int8 {cap_x:.2f}x capacity, "
+                        f"recall {r8:.3f} vs f32 {r32:.3f}")
+    if json_path:
+        _merge_json(json_path, "precision_entries", entries)
+        rows.append(f"# wrote {json_path} ({len(entries)} precision entries)")
     return rows
 
 
@@ -155,17 +303,32 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--batch", action="store_true",
                     help="batch-throughput mode (fetch amortization sweep)")
+    ap.add_argument("--precision", action="store_true",
+                    help="precision sweep at a fixed tier-2 byte budget "
+                         "(float32 / float16 / int8 — DESIGN.md §7)")
+    ap.add_argument("--assert-parity", action="store_true",
+                    help="with --precision: fail unless int8 reaches >=2x "
+                         "float32 capacity AND >=0.95x its recall@10 "
+                         "(the CI smoke contract)")
     ap.add_argument("--datasets", nargs="*", default=None)
     ap.add_argument("--batch-sizes", type=int, nargs="*",
                     default=(1, 2, 4, 8, 16, 32))
+    ap.add_argument("--n-queries", type=int, default=32)
     ap.add_argument("--json", default=BENCH_JSON,
-                    help="machine-readable output path for --batch mode "
-                         "('' to disable)")
+                    help="machine-readable output path for --batch/"
+                         "--precision modes ('' to disable)")
     args = ap.parse_args()
     if args.batch:
         for r in bench_batch(datasets=args.datasets or ("arxiv-1k",),
                              batch_sizes=tuple(args.batch_sizes),
+                             n_queries=args.n_queries,
                              json_path=args.json or None):
+            print(r)
+    elif args.precision:
+        for r in bench_precision(datasets=args.datasets or ("arxiv-1k",),
+                                 n_queries=args.n_queries,
+                                 json_path=args.json or None,
+                                 assert_parity=args.assert_parity):
             print(r)
     else:
         for r in bench_table1(*([] if args.datasets is None

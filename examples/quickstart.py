@@ -79,6 +79,23 @@ def main():
           f"({res.saved_fraction()*100:.0f}% memory saved, "
           f"{len(res.steps)} probes)")
 
+    # 6. precision mode (DESIGN.md §7): an int8 tier-2 cache holds ~4x
+    #    the vectors per byte; the exact-rerank pass keeps recall at
+    #    parity with float32 — asserted here (the CI smoke contract).
+    eng32 = WebANNSEngine(X, eng.graph,
+                          EngineConfig(cache_capacity=len(X) // 4))
+    eng8 = WebANNSEngine(X, eng.graph, EngineConfig(
+        cache_capacity=len(X) // 4, precision="int8"))
+    ex10, _ = exact_search(X, q, 10)
+    r32 = eng32.search(SearchRequest(query=q, k=10, ef=64))
+    r8 = eng8.search(SearchRequest(query=q, k=10, ef=64))
+    rec32 = len(set(r32.ids.tolist()) & set(ex10.tolist())) / 10
+    rec8 = len(set(r8.ids.tolist()) & set(ex10.tolist())) / 10
+    assert rec8 >= 0.95 * rec32, (rec8, rec32)
+    print(f"int8 precision: cache {eng32.cache_bytes()} → "
+          f"{eng8.cache_bytes()} bytes at equal capacity; "
+          f"recall@10 {rec8:.2f} vs float32 {rec32:.2f} (parity OK)")
+
 
 if __name__ == "__main__":
     main()

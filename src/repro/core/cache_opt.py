@@ -50,6 +50,10 @@ class CacheOptResult:
     c_best: int
     c0: int
     steps: List[CacheOptStep]
+    # bytes one cached item occupies (set by the bytes-aware entry
+    # point): lets callers compare optimized RESIDENT FOOTPRINTS across
+    # precisions, not just item counts (DESIGN.md §7)
+    bytes_per_item: Optional[int] = None
 
     @property
     def ladder(self) -> List[Tuple[int, float]]:
@@ -58,6 +62,12 @@ class CacheOptResult:
 
     def saved_fraction(self) -> float:
         return 1.0 - self.c_best / max(self.c0, 1)
+
+    @property
+    def c_best_bytes(self) -> Optional[int]:
+        if self.bytes_per_item is None:
+            return None
+        return self.c_best * self.bytes_per_item
 
 
 def get_theta(
@@ -113,6 +123,37 @@ def optimize_memory_size(
                 break
         c_test = c_next
     return CacheOptResult(c_best=c_best, c0=c0, steps=steps)
+
+
+def optimize_memory_bytes(
+    query_test: Callable[[int], QueryTestStats],
+    budget_bytes: int,
+    dim: int,
+    precision: str = "float32",
+    p: float = 0.8,
+    t_theta: float = 0.1,
+    max_iters: int = 32,
+) -> CacheOptResult:
+    """Byte-budgeted Algorithm 2: precision is part of the cost model.
+
+    The paper's optimizer counts ITEMS; at a fixed byte budget the item
+    ceiling depends on bytes-per-vector, so quantization directly
+    multiplies the search space the optimizer can exploit: ``C0 =
+    budget_bytes / bytes_per_vector(dim, precision)`` (~4× more int8
+    candidates than float32 under the same budget). ``query_test``
+    still takes an item count — the returned result carries
+    ``bytes_per_item`` so ladders from different precisions compare in
+    bytes (``c_best_bytes``).
+    """
+    from repro.core import quant
+
+    bpi = quant.bytes_per_vector(dim, precision)
+    c0 = quant.capacity_for_budget(budget_bytes, dim, precision)
+    res = optimize_memory_size(
+        query_test, c0, p=p, t_theta=t_theta, max_iters=max_iters
+    )
+    res.bytes_per_item = bpi
+    return res
 
 
 class RollbackManager:

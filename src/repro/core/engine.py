@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
 from repro.core import search as S
 from repro.core.graph import PAD, HNSWGraph
 from repro.core.hnsw import build_hnsw
@@ -53,6 +54,25 @@ from repro.core.store import (
     TieredStore,
     cache_lookup,
 )
+
+
+def _np_point_distance(
+    X: np.ndarray, q: np.ndarray, metric: str
+) -> np.ndarray:
+    """Host-side exact distances for the rerank pass (numpy so the
+    varying candidate-pool shapes never trigger device recompiles)."""
+    X = np.asarray(X, np.float32)
+    q = np.asarray(q, np.float32)
+    if metric == "l2":
+        diff = X - q[None, :]
+        return np.sum(diff * diff, axis=-1)
+    if metric == "ip":
+        return -(X @ q)
+    if metric == "cos":
+        xn = np.linalg.norm(X, axis=-1) + 1e-30
+        qn = np.linalg.norm(q) + 1e-30
+        return -(X @ q) / (xn * qn)
+    raise ValueError(metric)
 
 
 @dataclasses.dataclass
@@ -119,6 +139,14 @@ class EngineConfig:
     # the tier-3 payload device-resident — the TPU-native endpoint;
     # False = host-driven phase loop (the paper's Wasm/JS split).
     fused: bool = False
+    # tier-2 slab precision (DESIGN.md §7): 'float32' | 'float16' |
+    # 'int8'. Quantized modes hold 2–4x more vectors per byte; search
+    # runs on dequantized values, then an exact-rerank pass re-scores
+    # the top k·α candidates against full-precision tier-3 vectors
+    # (ONE extra access) so recall@k is preserved. rerank_alpha <= 0
+    # disables the rerank (quantized distances returned as-is).
+    precision: str = "float32"
+    rerank_alpha: float = 2.0
 
     def __post_init__(self) -> None:
         if self.mode not in ENGINE_MODES:
@@ -127,6 +155,7 @@ class EngineConfig:
                 f"{ENGINE_MODES} (the MeMemo baseline is its own engine "
                 "class, repro.core.mememo.MememoEngine, not a mode)"
             )
+        self.precision = quant.canonical_precision(self.precision)
 
 
 # ----------------------------------------------------- typed session API
@@ -267,7 +296,8 @@ class WebANNSEngine:
         )
         self.n, self.dim = self.external.n_items, self.external.dim
         cap = self.config.cache_capacity or self.n
-        self.store = TieredStore(self.external, cap, self.config.eviction)
+        self.store = TieredStore(self.external, cap, self.config.eviction,
+                                 precision=self.config.precision)
         self.neighbors = jnp.asarray(graph.neighbors)
         # Text-embedding separation (paper §4.1): texts live in a separate
         # id-indexed store, never loaded during queries.
@@ -323,9 +353,24 @@ class WebANNSEngine:
         """
         return cls.from_index(Index.load(path, mmap=mmap), config, texts)
 
-    def save(self, path: str, shard_bytes: int = 64 * 1024 * 1024) -> None:
-        """Persist this session's index (graph + vectors) to ``path``."""
-        self.index.save(path, shard_bytes=shard_bytes)
+    def save(
+        self,
+        path: str,
+        shard_bytes: int = 64 * 1024 * 1024,
+        precision: Optional[str] = None,
+    ) -> None:
+        """Persist this session's index (graph + vectors) to ``path``.
+
+        ``precision=None`` follows the session's configured precision,
+        so an int8 session persists int8 shards end-to-end (~4× smaller
+        payload). Note the trade: a session reopened over int8 shards
+        serves DEQUANTIZED tier 3, so the exact-rerank pass is exact
+        only w.r.t. that lossy payload (see ``_rerank_exact``). Pass
+        ``"float32"`` explicitly to keep the payload full-precision on
+        disk regardless of the cache mode.
+        """
+        self.index.save(path, shard_bytes=shard_bytes,
+                        precision=precision or self.config.precision)
 
     @property
     def index(self) -> Index:
@@ -343,7 +388,78 @@ class WebANNSEngine:
         self.store.warm(ids)
 
     def cache_bytes(self) -> int:
-        return self.store.capacity * self.dim * 4
+        """Resident tier-2 bytes at the configured precision — the byte
+        budget the cache-size optimizer trades against capacity (§7)."""
+        return self.store.cache_bytes()
+
+    # -------------------------------------------------------- exact rerank
+
+    def _rerank_active(self) -> bool:
+        cfg = self.config
+        return cfg.precision != "float32" and cfg.rerank_alpha > 0
+
+    def _rerank_exact(
+        self, q: np.ndarray, ids: np.ndarray, dists: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact-rerank pass (DESIGN.md §7): re-score a candidate pool
+        against full-precision tier-3 vectors in ONE counted access.
+
+        The beam's distances were computed on dequantized tier-2 rows;
+        the pool (top k·α of the beam) is re-fetched from tier 3 —
+        bypassing the quantized cache — and exactly re-scored, so the
+        returned top-k order/distances match what a float32 cache would
+        have produced whenever the true k-th neighbor is inside the
+        pool. Quantized beam distances are kept only for invalid rows.
+
+        "Full precision" means tier 3's *stored* precision: if the index
+        itself was persisted with ``save(precision="int8")``, fetches
+        serve dequantized int8 and the rerank is exact w.r.t. that lossy
+        payload, not the original corpus (keep float32 shards —
+        ``save(precision="float32")`` — when tier-3 fidelity matters).
+        """
+        ids = np.asarray(ids)
+        dists = np.asarray(dists)
+        valid = ids >= 0
+        if not valid.any():
+            return ids[:k], dists[:k]
+        fetched = self.external.fetch(ids[valid])
+        self.external.mark_used_ids(ids[valid])
+        exact = np.full(ids.shape, np.inf, np.float32)
+        exact[valid] = _np_point_distance(fetched, q, self.config.metric)
+        order = np.argsort(exact, kind="stable")
+        return ids[order][:k], exact[order][:k]
+
+    def _rerank_exact_batch(
+        self, Q: np.ndarray, ids: np.ndarray, dists: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched exact-rerank: the B candidate pools are unioned and
+        deduplicated so the whole batch pays ONE tier-3 access (the same
+        amortization contract as the load phases, DESIGN.md §5)."""
+        ids = np.asarray(ids)
+        dists = np.asarray(dists)
+        B, m = ids.shape
+        valid = ids >= 0
+        if not valid.any():
+            return ids[:, :k], dists[:, :k]
+        union = np.unique(ids[valid])  # sorted — searchsorted below
+        fetched = self.external.fetch(union)
+        self.external.mark_used_ids(union)
+        exact = np.full((B, m), np.inf, np.float32)
+        # rows/qidx are in ids[valid]'s row-major order, so per-row
+        # distances scatter back through one flat buffer
+        rows = fetched[np.searchsorted(union, ids[valid])]
+        qidx = np.broadcast_to(np.arange(B)[:, None], (B, m))[valid]
+        flat = np.empty(rows.shape[0], np.float32)
+        for b in range(B):
+            sel = qidx == b
+            if sel.any():
+                flat[sel] = _np_point_distance(
+                    rows[sel], Q[b], self.config.metric
+                )
+        exact[valid] = flat
+        order = np.argsort(exact, axis=1, kind="stable")
+        return (np.take_along_axis(ids, order, 1)[:, :k],
+                np.take_along_axis(exact, order, 1)[:, :k])
 
     # ------------------------------------------------------------- query
 
@@ -464,13 +580,31 @@ class WebANNSEngine:
         cfg = self.config
         stats = QueryStats()
         if not hasattr(self, "_table_dev"):
-            self._table_dev = jnp.asarray(self.external.vectors)
+            # quantized modes keep the device-resident tier-3 payload
+            # QUANTIZED (~4x less device memory); the fused program
+            # dequantizes inside the bulk-load gather (DESIGN.md §7)
+            if cfg.precision != "float32":
+                payload, scales = quant.quantize_np(
+                    self.external.vectors, cfg.precision
+                )
+                self._table_dev = jnp.asarray(payload)
+                self._tscales_dev = (
+                    jnp.asarray(scales) if cfg.precision == "int8" else None
+                )
+            else:
+                self._table_dev = jnp.asarray(self.external.vectors)
+                self._tscales_dev = None
+        # quantized modes: run the fused program for the rerank POOL so
+        # the host-side exact pass has k·α candidates to re-score
+        k_run = k
+        if self._rerank_active():
+            k_run = min(max(ef, k), quant.rerank_pool(k, cfg.rerank_alpha))
         t0 = time.perf_counter()
         dists, ids, (n_db, n_fetch), cache = S.lazy_knn_search_fused(
             jnp.asarray(q, jnp.float32), self._table_dev, self.neighbors,
             jnp.asarray(self.graph.entry_point, jnp.int32),
-            self.store.cache, k=k, ef=ef, metric=cfg.metric,
-            eviction=self.store.eviction,
+            self.store.cache, k=k_run, ef=ef, metric=cfg.metric,
+            eviction=self.store.eviction, table_scales=self._tscales_dev,
         )
         ids.block_until_ready()
         stats.t_in_mem = time.perf_counter() - t0
@@ -485,6 +619,17 @@ class WebANNSEngine:
         self.external.stats.items_used += stats.items_fetched  # lazy: R=0
         self.external.stats.modeled_time += stats.t_db
         stats.n_visited = stats.items_fetched  # lower bound (hits uncounted)
+        if self._rerank_active():
+            db0 = self.external.stats.n_db
+            f0 = self.external.stats.items_fetched
+            m0 = self.external.stats.modeled_time
+            ids_np, dists_np = self._rerank_exact(
+                np.asarray(q), np.asarray(ids), np.asarray(dists), k
+            )
+            stats.n_db += self.external.stats.n_db - db0
+            stats.items_fetched += self.external.stats.items_fetched - f0
+            stats.t_db += self.external.stats.modeled_time - m0
+            return ids_np, dists_np, stats
         return np.asarray(ids), np.asarray(dists), stats
 
     def _search_one(
@@ -511,9 +656,20 @@ class WebANNSEngine:
         stats.n_hops += int(st.n_hops)
         stats.n_dist += int(st.n_dist)
         stats.n_visited = stats.n_dist  # every visited id gets a distance
+        if self._rerank_active():
+            pool = min(st.beam.ef, quant.rerank_pool(k, cfg.rerank_alpha))
+            db0, f0 = self.external.stats.n_db, \
+                self.external.stats.items_fetched
+            ids, dists = self._rerank_exact(
+                q, np.asarray(st.beam.ids[:pool]),
+                np.asarray(st.beam.dists[:pool]), k,
+            )
+            stats.n_db += self.external.stats.n_db - db0
+            stats.items_fetched += self.external.stats.items_fetched - f0
+        else:
+            ids = np.asarray(st.beam.ids[:k])
+            dists = np.asarray(st.beam.dists[:k])
         stats.t_db = self.external.stats.modeled_time - t_db0
-        ids = np.asarray(st.beam.ids[:k])
-        dists = np.asarray(st.beam.dists[:k])
         return ids, dists, stats
 
     def _search_many(
@@ -584,6 +740,25 @@ class WebANNSEngine:
         )
         hops = np.asarray(st.n_hops)
         ndist = np.asarray(st.n_dist)
+        if self._rerank_active():
+            # ONE shared tier-3 access reranks the whole batch (§5/§7)
+            pool = min(int(st.beam.ids.shape[1]),
+                       quant.rerank_pool(k, cfg.rerank_alpha))
+            db0 = self.external.stats.n_db
+            f0 = self.external.stats.items_fetched
+            ids, dists = self._rerank_exact_batch(
+                Q, np.asarray(st.beam.ids[:, :pool]),
+                np.asarray(st.beam.dists[:, :pool]), k,
+            )
+            bstats.n_db += self.external.stats.n_db - db0
+            bstats.items_fetched += (
+                self.external.stats.items_fetched - f0
+            )
+            for b in range(B):  # every query demanded the shared rerank
+                per_stats[b].n_db += 1
+        else:
+            ids = np.asarray(st.beam.ids[:, :k])
+            dists = np.asarray(st.beam.dists[:, :k])
         bstats.t_db = self.external.stats.modeled_time - t_db0
         for b in range(B):
             per_stats[b].n_hops += int(hops[b])
@@ -593,8 +768,6 @@ class WebANNSEngine:
             per_stats[b].t_in_mem = bstats.t_in_mem / B
             per_stats[b].t_db = bstats.t_db / B
         self.last_batch_stats = bstats
-        ids = np.asarray(st.beam.ids[:, :k])
-        dists = np.asarray(st.beam.dists[:, :k])
         return ids, dists, per_stats
 
     # ------------------------------------------------- typed session API

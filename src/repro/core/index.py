@@ -15,7 +15,8 @@ On-disk layout (one directory)::
                              + dim / vector_dtype / vector_shards
     neighbors_l{l}_s{s}.npy  graph neighbor shards (per layer)
     levels.npy               per-node top layer
-    vectors_s{s}.npy         vector payload shards
+    vectors_s{s}.npy         vector payload shards (f32 / f16 / int8)
+    vector_scales_s{s}.npy   per-row dequant scales (int8 codec only)
 
 The manifest is a strict superset of the graph-only format already
 emitted under ``reports/bench_cache/`` — ``HNSWGraph.load`` keeps
@@ -83,17 +84,26 @@ class Index:
 
     # -------------------------------------------------------- persistence
 
-    def save(self, path: str, shard_bytes: int = 64 * 1024 * 1024) -> None:
+    def save(
+        self,
+        path: str,
+        shard_bytes: int = 64 * 1024 * 1024,
+        precision: str = "float32",
+    ) -> None:
         """Persist graph + vectors as one shard directory + manifest.
 
         Writing goes through the backend protocol, so an index opened
         from disk can be re-saved elsewhere (the payload is materialized
-        once, the all-in-one load).
+        once, the all-in-one load). ``precision`` selects the on-disk
+        vector codec (float32 / float16 / int8 — DESIGN.md §7);
+        ``load`` reads the dtype (and, for int8, the per-row scales)
+        back from the manifest, so the round-trip needs no caller-side
+        bookkeeping.
         """
         os.makedirs(path, exist_ok=True)
         self.graph.save(path, shard_bytes=shard_bytes)
         save_vector_shards(path, self.backend.vectors,
-                           shard_bytes=shard_bytes)
+                           shard_bytes=shard_bytes, precision=precision)
 
     @classmethod
     def load(cls, path: str, mmap: bool = True) -> "Index":

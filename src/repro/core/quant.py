@@ -1,0 +1,175 @@
+"""Vector quantization codec for the tiered store (DESIGN.md §7).
+
+The paper's second headline result is memory: heuristic cache sizing cuts
+browser memory by up to 39% at ~10 ms latency (§3.5). AiSAQ (PAPERS.md)
+shows the complementary lever — quantized vectors shrink both the
+resident footprint and the bytes moved per distance evaluation. This
+module is the codec behind the ``precision`` knob: tier-2 slabs, tier-3
+shards, and the fused dequant–gather–distance kernels all share it.
+
+Precision modes (canonical names):
+
+- ``"float32"`` — identity (the seed behavior). 4·d bytes/vector.
+- ``"float16"`` — elementwise downcast (``"fp16"`` accepted as an
+  alias). 2·d bytes/vector; relative error ≤ 2^-11 per element.
+- ``"int8"``   — per-vector symmetric scale: ``s = max|x| / 127``,
+  ``q = round(x / s) ∈ [-127, 127]``, ``x ≈ q · s``. d + 4
+  bytes/vector (the f32 scale rides along). Absolute error ≤ s/2
+  = max|x| / 254 per element — the bound asserted in tests.
+
+The int8 codec is **re-quantization stable**: the row maximum maps to
+±127 exactly, so ``quantize(dequantize(q, s)) == (q, s)`` bit-for-bit.
+That property is what lets tier-3 serve dequantized float32 through the
+unchanged :class:`~repro.core.storage.StorageBackend` protocol while the
+tier-2 cache re-quantizes on insert without compounding error.
+
+Both jnp (jittable — the cache insert path) and numpy (host-side — the
+shard codec) implementations are provided and must agree bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+PRECISIONS = ("float32", "float16", "int8")
+
+_ALIASES = {
+    "float32": "float32", "fp32": "float32", "f32": "float32",
+    "float16": "float16", "fp16": "float16", "f16": "float16",
+    "int8": "int8", "i8": "int8",
+}
+
+# one f32 scale per vector rides along with int8 payloads
+SCALE_BYTES = 4
+
+
+def canonical_precision(precision: str) -> str:
+    """Normalize a precision name (``fp16`` → ``float16``, …)."""
+    try:
+        return _ALIASES[str(precision).lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {precision!r}: expected one of {PRECISIONS}"
+        ) from None
+
+
+def slab_dtype(precision: str):
+    """Storage dtype of a slab/shard at ``precision``."""
+    return {
+        "float32": jnp.float32,
+        "float16": jnp.float16,
+        "int8": jnp.int8,
+    }[canonical_precision(precision)]
+
+
+def bytes_per_vector(dim: int, precision: str) -> int:
+    """Resident bytes of ONE cached/persisted vector (incl. its scale)."""
+    p = canonical_precision(precision)
+    if p == "float32":
+        return 4 * dim
+    if p == "float16":
+        return 2 * dim
+    return dim + SCALE_BYTES  # int8 payload + f32 scale
+
+
+def capacity_for_budget(budget_bytes: int, dim: int, precision: str) -> int:
+    """How many vectors a byte budget holds at ``precision`` (≥ 1).
+
+    This is the lever :func:`repro.core.cache_opt.optimize_memory_bytes`
+    exploits: at a fixed budget, int8 holds ~4× the float32 capacity.
+    """
+    return max(1, int(budget_bytes) // bytes_per_vector(dim, precision))
+
+
+# ------------------------------------------------------------- jnp codec
+
+
+def quantize_jnp(
+    vecs: jnp.ndarray, precision: str
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize ``(..., d)`` float rows → (payload, per-row scales).
+
+    Jittable. Scales are all-ones for the float precisions so the
+    returned pair always has the same pytree structure.
+    """
+    p = canonical_precision(precision)
+    vecs = vecs.astype(jnp.float32)
+    ones = jnp.ones(vecs.shape[:-1], jnp.float32)
+    if p == "float32":
+        return vecs, ones
+    if p == "float16":
+        return vecs.astype(jnp.float16), ones
+    amax = jnp.max(jnp.abs(vecs), axis=-1)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(vecs / safe[..., None]), -127, 127)
+    return q.astype(jnp.int8), safe
+
+
+def dequantize_jnp(
+    payload: jnp.ndarray, scales: jnp.ndarray
+) -> jnp.ndarray:
+    """Inverse of :func:`quantize_jnp` → float32 rows. Jittable."""
+    if payload.dtype == jnp.int8:
+        return payload.astype(jnp.float32) * scales[..., None]
+    return payload.astype(jnp.float32)
+
+
+# ----------------------------------------------------------- numpy codec
+
+
+def quantize_np(
+    vecs: np.ndarray, precision: str
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side codec (shard persistence); bit-identical to the jnp one
+    (both round half-to-even via ``round``)."""
+    p = canonical_precision(precision)
+    vecs = np.asarray(vecs, np.float32)
+    ones = np.ones(vecs.shape[:-1], np.float32)
+    if p == "float32":
+        return vecs, ones
+    if p == "float16":
+        return vecs.astype(np.float16), ones
+    amax = np.max(np.abs(vecs), axis=-1)
+    scale = (amax / np.float32(127.0)).astype(np.float32)
+    safe = np.where(scale > 0, scale, np.float32(1.0)).astype(np.float32)
+    q = np.clip(np.round(vecs / safe[..., None]), -127, 127)
+    return q.astype(np.int8), safe
+
+
+def dequantize_np(payload: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    if payload.dtype == np.int8:
+        return payload.astype(np.float32) * np.asarray(scales)[..., None]
+    return np.asarray(payload, np.float32)
+
+
+# ------------------------------------------------------------ error bounds
+
+
+def max_abs_error(row_amax, precision: str = "int8"):
+    """Per-row worst-case elementwise reconstruction error.
+
+    ``row_amax`` is the per-row ``max|x|`` of the ORIGINAL rows — the
+    same quantity for every precision (NOT the codec scales; for int8
+    the codec scale is ``row_amax / 127``). int8: rounding to the
+    nearest code is off by ≤ half a step, so ``|x - q·s| ≤ s/2 =
+    max|x| / 254``. float16: one half ulp of the 10-bit mantissa,
+    ``max|x| · 2^-11``. float32: exactly 0.
+    """
+    p = canonical_precision(precision)
+    row_amax = np.asarray(row_amax, np.float32)
+    if p == "float32":
+        return np.zeros_like(row_amax)
+    if p == "float16":
+        return row_amax * np.float32(2.0 ** -11)
+    # match the codec's own float chain (scale = amax/127, bound = s/2)
+    return (row_amax / np.float32(127.0)) * np.float32(0.5)
+
+
+def rerank_pool(k: int, alpha: float) -> int:
+    """Exact-rerank candidate pool size: ``max(k, ceil(α·k))``."""
+    return max(int(k), int(math.ceil(float(alpha) * int(k))))

@@ -341,6 +341,7 @@ def search_layer_lazy_fused(
     trigger: Optional[int] = None,
     max_phases: int = 256,
     eviction: int = 0,
+    table_scales: Optional[jnp.ndarray] = None,  # (N,) — int8 payload
 ):
     """One layer of Algorithm 1 with the WHOLE phase loop in-graph.
 
@@ -351,6 +352,15 @@ def search_layer_lazy_fused(
     program (`lax.while_loop` over phases). Access accounting (n_db,
     items fetched) is carried in-graph; the t_db cost model is applied by
     the caller. Returns (state, cache, n_db, n_fetched).
+
+    With ``table_scales`` the device-resident payload is QUANTIZED
+    (int8 rows + per-row scales — DESIGN.md §7): the bulk load is a
+    dequantizing gather, whose TPU-native form is the fused
+    dequant–gather–distance kernel
+    (``kernels/dequant_gather_distance.py``, dispatched via
+    ``ops.dequant_gather_distance``); here the jnp oracle form keeps
+    the whole loop traceable off-TPU. Tier 3 then costs ~4× less
+    device memory and the bulk load moves ~4× fewer bytes.
 
     On real hardware ``table`` lives in host/remote memory
     (``memory_kind='pinned_host'`` or a remote shard — DESIGN.md §2);
@@ -381,11 +391,13 @@ def search_layer_lazy_fused(
         )
         mc = state.miss_count
         has_miss = mc > 0
-        # ONE bulk access for the whole miss list (no-op when empty)
+        # ONE bulk access for the whole miss list (no-op when empty);
+        # quantized payloads dequantize in-graph (the fused-kernel path)
         safe = jnp.clip(state.miss_ids, 0, n - 1)
-        vecs = jnp.where(
-            (state.miss_ids >= 0)[:, None], table[safe], 0.0
-        )
+        rows = table[safe].astype(jnp.float32)
+        if table_scales is not None:
+            rows = rows * table_scales[safe][:, None]
+        vecs = jnp.where((state.miss_ids >= 0)[:, None], rows, 0.0)
         cache = cache_insert(cache, state.miss_ids, vecs, policy=eviction)
         state = load_phase(q, state, state.miss_ids, vecs, metric)
         return (
@@ -408,7 +420,7 @@ def search_layer_lazy_fused(
 )
 def lazy_knn_search_fused(
     q: jnp.ndarray,
-    table: jnp.ndarray,  # (N, d) tier-3 payload
+    table: jnp.ndarray,  # (N, d) tier-3 payload (quantized if scales given)
     neighbors: jnp.ndarray,  # (L, N, deg)
     entry: jnp.ndarray,  # () int32
     cache,  # CacheState
@@ -417,6 +429,7 @@ def lazy_knn_search_fused(
     metric: str = "l2",
     eviction: int = 0,
     n_layers: Optional[int] = None,
+    table_scales: Optional[jnp.ndarray] = None,
 ):
     """Whole lazy KNN query (all layers) as ONE jitted program.
 
@@ -431,13 +444,13 @@ def lazy_knn_search_fused(
     for lc in range(L - 1, 0, -1):
         st, cache, db, fc = search_layer_lazy_fused(
             q, neighbors[lc], table, cache, entry_ids, 1, metric,
-            eviction=eviction,
+            eviction=eviction, table_scales=table_scales,
         )
         n_db, n_fetch = n_db + db, n_fetch + fc
         entry_ids = st.beam.ids[:1]
     st, cache, db, fc = search_layer_lazy_fused(
         q, neighbors[0], table, cache, entry_ids, max(ef, k), metric,
-        eviction=eviction,
+        eviction=eviction, table_scales=table_scales,
     )
     n_db, n_fetch = n_db + db, n_fetch + fc
     return st.beam.dists[:k], st.beam.ids[:k], (n_db, n_fetch), cache

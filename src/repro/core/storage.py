@@ -37,7 +37,10 @@ from typing import List, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.core import quant
+
 VECTOR_SHARD_PREFIX = "vectors_s"
+VECTOR_SCALE_PREFIX = "vector_scales_s"
 
 
 @runtime_checkable
@@ -103,6 +106,15 @@ class ShardedFileBackend:
     'r'`` so a fetch reads only the touched pages from disk; the
     ``shard_reads`` counter records how many shard files each engine run
     actually hit (the "served from disk" witness used by tests).
+
+    **Quantized shard codec** (DESIGN.md §7): when the manifest records
+    ``vector_dtype`` of ``"int8"`` each shard entry also names a
+    ``scales_file`` holding the per-row float32 scales; ``fetch``
+    dequantizes on the way out, so the :class:`StorageBackend` protocol
+    surface stays float32 and every consumer (tiered store, rerank,
+    fused path) is codec-oblivious. ``"float16"`` shards need no scales.
+    The int8 codec is re-quantization stable (see ``core/quant.py``), so
+    tier-2 re-quantizing these fetches on insert is lossless.
     """
 
     def __init__(self, path: str, mmap: bool = True):
@@ -115,6 +127,9 @@ class ShardedFileBackend:
                 "(graph-only artifact?) — persist vectors with Index.save "
                 "or storage.save_vector_shards first"
             )
+        self.precision = quant.canonical_precision(
+            manifest.get("vector_dtype", "float32")
+        )
         self._meta = [
             (int(s["start"]), int(s["stop"]), s["file"])
             for s in manifest["vector_shards"]
@@ -123,6 +138,11 @@ class ShardedFileBackend:
         self._shards = [
             np.load(os.path.join(path, fn), mmap_mode=mode)
             for _, _, fn in self._meta
+        ]
+        self._scales = [
+            np.load(os.path.join(path, s["scales_file"]), mmap_mode=mode)
+            if "scales_file" in s else None
+            for s in manifest["vector_shards"]
         ]
         self._starts = np.array([m[0] for m in self._meta], np.int64)
         self._n = int(self._meta[-1][1]) if self._meta else 0
@@ -138,13 +158,19 @@ class ShardedFileBackend:
     def dim(self) -> int:
         return self._dim
 
+    def _dequant(self, rows: np.ndarray, scales) -> np.ndarray:
+        if self.precision == "int8":
+            return rows.astype(np.float32) * np.asarray(scales)[:, None]
+        return np.asarray(rows, np.float32)
+
     @property
     def vectors(self) -> np.ndarray:
-        """All-in-one materialization (init-stage load; cached)."""
+        """All-in-one materialization (init-stage load; cached), float32."""
         if self._dense is None:
-            self._dense = np.concatenate(
-                [np.asarray(s, np.float32) for s in self._shards]
-            )
+            self._dense = np.concatenate([
+                self._dequant(np.asarray(s), sc)
+                for s, sc in zip(self._shards, self._scales)
+            ])
             self.shard_reads += len(self._shards)
         return self._dense
 
@@ -154,7 +180,10 @@ class ShardedFileBackend:
         shard_of = np.searchsorted(self._starts, ids, side="right") - 1
         for s in np.unique(shard_of):
             m = shard_of == s
-            out[m] = self._shards[s][ids[m] - self._starts[s]]
+            local = ids[m] - self._starts[s]
+            sc = (self._scales[s][local]
+                  if self._scales[s] is not None else None)
+            out[m] = self._dequant(self._shards[s][local], sc)
             self.shard_reads += 1
         return out
 
@@ -220,24 +249,43 @@ def save_vector_shards(
     path: str,
     vectors: np.ndarray,
     shard_bytes: int = 64 * 1024 * 1024,
+    precision: str = "float32",
 ) -> List[dict]:
     """Write ``vectors`` as chunked ``.npy`` shards under ``path`` and
     merge a ``vector_shards`` section into ``path/manifest.json``
-    (creating the manifest if absent). Returns the shard list."""
+    (creating the manifest if absent). Returns the shard list.
+
+    ``precision`` selects the on-disk codec (``core/quant.py``):
+    float32 (identity), float16, or int8 — the latter additionally
+    writes one per-shard ``vector_scales_s{s}.npy`` of per-row float32
+    scales, referenced from each shard entry as ``scales_file``, and
+    records the dtype in the manifest so :class:`ShardedFileBackend`
+    can dequantize on fetch. Shard row counts are computed from the
+    *encoded* bytes/row, so a fixed ``shard_bytes`` holds ~4× more
+    int8 rows per shard.
+    """
+    precision = quant.canonical_precision(precision)
     vectors = np.asarray(vectors, dtype=np.float32)
     os.makedirs(path, exist_ok=True)
-    rows_per_shard = max(1, shard_bytes // max(1, vectors.shape[1] * 4))
+    row_bytes = quant.bytes_per_vector(int(vectors.shape[1]), precision)
+    rows_per_shard = max(1, shard_bytes // max(1, row_bytes))
     shards: List[dict] = []
     for s, start in enumerate(range(0, vectors.shape[0], rows_per_shard)):
         stop = min(vectors.shape[0], start + rows_per_shard)
         fn = f"{VECTOR_SHARD_PREFIX}{s}.npy"
-        np.save(os.path.join(path, fn), vectors[start:stop])
-        shards.append({"file": fn, "start": start, "stop": stop})
+        payload, scales = quant.quantize_np(vectors[start:stop], precision)
+        np.save(os.path.join(path, fn), payload)
+        entry = {"file": fn, "start": start, "stop": stop}
+        if precision == "int8":
+            sfn = f"{VECTOR_SCALE_PREFIX}{s}.npy"
+            np.save(os.path.join(path, sfn), scales)
+            entry["scales_file"] = sfn
+        shards.append(entry)
     update_manifest(
         path,
         {
             "dim": int(vectors.shape[1]),
-            "vector_dtype": "float32",
+            "vector_dtype": precision,
             "vector_shards": shards,
         },
     )

@@ -8,7 +8,11 @@ Tier 2 (paper: JavaScript cache / here: per-device HBM cache slab) is
 :class:`CacheState` — a fixed-capacity vector slab plus an id→slot map,
 with pluggable eviction (FIFO default, as in the paper's prototype §4.1;
 LRU and LFU-ish "clock" provided as beyond-paper options). All operations
-are jittable pure functions on the pytree.
+are jittable pure functions on the pytree. The slab dtype is set by the
+``precision`` knob (DESIGN.md §7): float32, float16, or int8 with a
+per-row scale vector — inserts quantize, lookups dequantize, so the
+search phases always see float32 while the resident footprint shrinks
+by up to ~4× (the capacity the cache-size optimizer then re-spends).
 
 Tier 3 (paper: IndexedDB / here: pluggable storage backend) is
 :class:`ExternalStore` — an accounting shell (exact access counters +
@@ -31,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
 from repro.core.storage import (  # noqa: F401  (re-exported, DESIGN.md §6)
     InMemoryBackend,
     LatencyModel,
@@ -48,9 +53,19 @@ _EVICTION_NAMES = {"fifo": EVICT_FIFO, "lru": EVICT_LRU}
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class CacheState:
-    """Tier-2 cache: fixed-capacity slab + id→slot map (jittable pytree)."""
+    """Tier-2 cache: fixed-capacity slab + id→slot map (jittable pytree).
 
-    slab: jnp.ndarray  # (capacity, d) float32 — cached vectors
+    ``slab`` holds vectors at the cache's precision (float32 / float16 /
+    int8); ``scales`` carries the per-row dequantization scale — only
+    int8 slabs need one, so the float precisions carry a (0,) leaf and
+    pay neither the 4 bytes/row nor the insert-time scatter. The slab
+    dtype is part of every jitted op's trace signature, so each
+    precision compiles its own (cheap) specialization and the float32
+    path is byte-identical to the pre-quantization cache.
+    """
+
+    slab: jnp.ndarray  # (capacity, d) f32/f16/int8 — cached vectors
+    scales: jnp.ndarray  # (capacity,) f32 dequant scales; (0,) if float
     slot_of: jnp.ndarray  # (N,) int32 — slot of id, -1 if absent
     id_of: jnp.ndarray  # (capacity,) int32 — id in slot, -1 if empty
     clock: jnp.ndarray  # () int32 — insertion cursor (FIFO) / tick (LRU)
@@ -60,11 +75,29 @@ class CacheState:
     def capacity(self) -> int:
         return int(self.slab.shape[0])
 
+    @property
+    def precision(self) -> str:
+        return {
+            jnp.dtype(jnp.float32): "float32",
+            jnp.dtype(jnp.float16): "float16",
+            jnp.dtype(jnp.int8): "int8",
+        }[jnp.dtype(self.slab.dtype)]
 
-def cache_init(n_items: int, capacity: int, dim: int) -> CacheState:
+    def nbytes(self) -> int:
+        """Resident tier-2 payload bytes (slab + scales when quantized)."""
+        cap, dim = self.slab.shape
+        return cap * quant.bytes_per_vector(int(dim), self.precision)
+
+
+def cache_init(
+    n_items: int, capacity: int, dim: int, precision: str = "float32"
+) -> CacheState:
     capacity = int(max(1, capacity))
+    precision = quant.canonical_precision(precision)
+    n_scales = capacity if precision == "int8" else 0
     return CacheState(
-        slab=jnp.zeros((capacity, dim), jnp.float32),
+        slab=jnp.zeros((capacity, dim), quant.slab_dtype(precision)),
+        scales=jnp.ones((n_scales,), jnp.float32),
         slot_of=jnp.full((n_items,), -1, jnp.int32),
         id_of=jnp.full((capacity,), -1, jnp.int32),
         clock=jnp.zeros((), jnp.int32),
@@ -77,7 +110,11 @@ def cache_lookup(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Vectorized membership + gather. ids may contain -1 padding.
 
-    Returns (present (k,) bool, vectors (k, d) — garbage rows where absent).
+    Returns (present (k,) bool, vectors (k, d) — garbage rows where
+    absent). Vectors come back float32 regardless of the slab precision:
+    int8 rows are dequantized against their per-row scale on the way out
+    (the jnp twin of the fused dequant–gather kernels in
+    ``kernels/dequant_gather_distance.py``).
     """
     safe_ids = jnp.clip(ids, 0, cache.slot_of.shape[0] - 1)
     slots = cache.slot_of[safe_ids]
@@ -85,6 +122,10 @@ def cache_lookup(
     # id_of cross-check guards against stale mappings after ring wrap
     present = (slots >= 0) & (ids >= 0) & (cache.id_of[safe_slots] == ids)
     vecs = cache.slab[safe_slots]
+    if vecs.dtype == jnp.int8:
+        vecs = vecs.astype(jnp.float32) * cache.scales[safe_slots][..., None]
+    elif vecs.dtype != jnp.float32:
+        vecs = vecs.astype(jnp.float32)
     return present, vecs
 
 
@@ -142,9 +183,12 @@ def cache_insert(
 ) -> CacheState:
     """Insert a fetched batch, evicting per ``policy``. Jittable.
 
-    FIFO: slots are a ring buffer advanced by the insert cursor (paper's
-    prototype behavior). LRU: each insert claims the least-recently-used
-    slot (computed per batch via top_k on stale timestamps).
+    ``vecs`` arrive float32 (tier-3 fetches are always full precision);
+    they are quantized to the slab's precision on the way in, with the
+    per-row scale written alongside. FIFO: slots are a ring buffer
+    advanced by the insert cursor (paper's prototype behavior). LRU:
+    each insert claims the least-recently-used slot (computed per batch
+    via top_k on stale timestamps).
 
     Overflow contract (defined, tested): when one insert batch exceeds
     capacity, both policies recycle slots, so several rows of the batch
@@ -192,11 +236,16 @@ def cache_insert(
     # 2) write new vectors / maps (mode='drop' ignores out-of-range rows)
     i_idx = jnp.where(need, ids, n_items)
     slot_of = slot_of.at[i_idx].set(slots, mode="drop")
-    slab = cache.slab.at[slots, :].set(vecs, mode="drop")
+    payload, row_scales = quant.quantize_jnp(vecs, cache.precision)
+    slab = cache.slab.at[slots, :].set(payload, mode="drop")
+    scales = cache.scales  # float slabs: (0,) leaf, nothing to write
+    if cache.precision == "int8":
+        scales = scales.at[slots].set(row_scales, mode="drop")
     id_of = cache.id_of.at[slots].set(ids, mode="drop")
     last_used = cache.last_used.at[slots].set(new_clock, mode="drop")
     return CacheState(
         slab=slab,
+        scales=scales,
         slot_of=slot_of,
         id_of=id_of,
         clock=new_clock,
@@ -352,10 +401,14 @@ class TieredStore:
         external: ExternalStore,
         capacity: int,
         eviction: str = "fifo",
+        precision: str = "float32",
     ):
         self.external = external
         self.eviction = _EVICTION_NAMES[eviction]
-        self.cache = cache_init(external.n_items, capacity, external.dim)
+        self.precision = quant.canonical_precision(precision)
+        self.cache = cache_init(
+            external.n_items, capacity, external.dim, self.precision
+        )
         self.hits = 0
         self.misses = 0
 
@@ -363,10 +416,15 @@ class TieredStore:
     def capacity(self) -> int:
         return self.cache.capacity
 
+    def cache_bytes(self) -> int:
+        """Resident tier-2 payload bytes at the current precision."""
+        return self.cache.nbytes()
+
     def resize(self, capacity: int) -> None:
         """Re-initialize tier 2 with a new capacity (cache-size optimizer)."""
         self.cache = cache_init(
-            self.external.n_items, capacity, self.external.dim
+            self.external.n_items, capacity, self.external.dim,
+            self.precision,
         )
         self.hits = 0
         self.misses = 0
@@ -374,12 +432,21 @@ class TieredStore:
     def lookup(self, ids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return cache_lookup(self.cache, ids)
 
+    # floor of the padded-shape buckets: with a bare next-pow2 bucket
+    # every novel small miss-union size (1, 2, 3→4, 5→8, …) compiled its
+    # own cache-op specialization, and those one-off compiles landed in
+    # measured query time (the bs=16 p99 outlier in BENCH_query.json).
+    # Flooring at 64 collapses the bucket set to {64, 128, 256, …} — a
+    # handful of shapes that the bench warmup can exhaustively pre-trace.
+    PAD_FLOOR = 64
+
     @staticmethod
     def _pad_pow2(ids: np.ndarray) -> np.ndarray:
-        """Pad id batches to power-of-2 buckets so the jitted cache ops
-        trace once per bucket instead of once per batch size."""
+        """Pad id batches to a SMALL fixed set of power-of-2 buckets
+        (floored at :data:`PAD_FLOOR`) so the jitted cache ops trace once
+        per bucket instead of once per novel batch size."""
         n = max(1, len(ids))
-        cap = 1 << (n - 1).bit_length()
+        cap = max(TieredStore.PAD_FLOOR, 1 << (n - 1).bit_length())
         out = np.full(cap, -1, np.int32)
         out[: len(ids)] = ids
         return out

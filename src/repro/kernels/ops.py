@@ -20,6 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.dequant_gather_distance import (
+    dequant_gather_distance_batch_pallas,
+    dequant_gather_distance_pallas,
+)
 from repro.kernels.distance import distance_matrix_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.gather_distance import (
@@ -78,6 +82,27 @@ def gather_distance_batch(table, ids, Q, metric: str = "l2"):
         return gather_distance_batch_pallas(table, ids, Q, metric=metric,
                                             interpret=interp)
     return ref.gather_distance_batch_ref(table, ids, Q, metric)
+
+
+def dequant_gather_distance(table, scales, ids, q, metric: str = "l2"):
+    """Quantized-table fused gather + distance: (N, d) int8/f16 payload
+    with (N,) per-row scales → (B,) f32 distances (DESIGN.md §7)."""
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return dequant_gather_distance_pallas(
+            table, scales, ids, q, metric=metric, interpret=interp)
+    return ref.dequant_gather_distance_ref(table, scales, ids, q, metric)
+
+
+def dequant_gather_distance_batch(table, scales, ids, Q, metric: str = "l2"):
+    """Batched quantized-table fused gather + distance: (B, K) ids ×
+    (B, d) queries → (B, K) f32 distances (batched lazy load, §7)."""
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return dequant_gather_distance_batch_pallas(
+            table, scales, ids, Q, metric=metric, interpret=interp)
+    return ref.dequant_gather_distance_batch_ref(table, scales, ids, Q,
+                                                 metric)
 
 
 def embedding_bag(table, idx, weights=None, combiner: str = "sum"):

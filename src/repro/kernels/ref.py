@@ -80,6 +80,50 @@ def gather_distance_batch_ref(
     )(ids, Q)
 
 
+def dequant_gather_distance_ref(
+    table: jnp.ndarray,  # (N, d) int8/f16/f32 quantized payload
+    scales: jnp.ndarray,  # (N,) float32 per-row dequant scales
+    ids: jnp.ndarray,  # (B,) int32, -1 padded
+    q: jnp.ndarray,  # (d,)
+    metric: str = "l2",
+) -> jnp.ndarray:
+    """Fused dequant + gather + distance-to-query; +inf for padded ids.
+
+    Semantics oracle for ``dequant_gather_distance_pallas``: gather the
+    quantized rows, dequantize against their per-row scale, then compute
+    exactly what :func:`gather_distance_ref` computes.
+    """
+    safe = jnp.clip(ids, 0, table.shape[0] - 1)
+    x = table[safe].astype(jnp.float32) * scales[safe][:, None]
+    qf = q.astype(jnp.float32)
+    if metric == "l2":
+        diff = x - qf[None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    elif metric == "ip":
+        d = -(x @ qf)
+    elif metric == "cos":
+        d = -(x @ qf) / (
+            (jnp.linalg.norm(x, axis=-1) + 1e-30)
+            * (jnp.linalg.norm(qf) + 1e-30)
+        )
+    else:
+        raise ValueError(metric)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def dequant_gather_distance_batch_ref(
+    table: jnp.ndarray,  # (N, d) quantized payload
+    scales: jnp.ndarray,  # (N,) per-row scales
+    ids: jnp.ndarray,  # (B, K) int32, -1 padded
+    Q: jnp.ndarray,  # (B, d)
+    metric: str = "l2",
+) -> jnp.ndarray:
+    """Batched fused dequant + gather + distance (one query per id row)."""
+    return jax.vmap(
+        lambda i, q: dequant_gather_distance_ref(table, scales, i, q, metric)
+    )(ids, Q)
+
+
 def embedding_bag_ref(
     table: jnp.ndarray,  # (V, d)
     idx: jnp.ndarray,  # (B, S) int32, -1 padded

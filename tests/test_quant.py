@@ -1,0 +1,399 @@
+"""Quantized tier-2 / tier-3 precision modes (DESIGN.md §7).
+
+Covers the ISSUE-3 contract: codec round-trip error bounds, the
+dequant–gather–distance kernels against their oracles, cache
+insert/lookup/evict under int8, int8-vs-float32 recall@10 parity with
+exact-rerank, and the save→load→query round-trip of int8 shards.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.cache_opt import QueryTestStats, optimize_memory_bytes
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
+from repro.core.storage import ShardedFileBackend, save_vector_shards
+from repro.core.store import (
+    EVICT_LRU,
+    ExternalStore,
+    TieredStore,
+    cache_init,
+    cache_insert,
+    cache_lookup,
+)
+from repro.data.synthetic import corpus_embeddings
+from repro.kernels import ref
+from repro.kernels.dequant_gather_distance import (
+    dequant_gather_distance_batch_pallas,
+    dequant_gather_distance_pallas,
+)
+
+RNG = np.random.default_rng(7)
+
+
+# ------------------------------------------------------------- the codec
+
+
+def test_int8_round_trip_error_bound():
+    """|x - dequant(quantize(x))| <= scale/2 = max|x|/254, elementwise."""
+    X = (RNG.standard_normal((64, 48)) * RNG.uniform(0.1, 30, (64, 1))
+         ).astype(np.float32)
+    q, s = quant.quantize_np(X, "int8")
+    assert q.dtype == np.int8 and s.shape == (64,)
+    err = np.abs(quant.dequantize_np(q, s) - X)
+    bound = quant.max_abs_error(np.abs(X).max(axis=-1), "int8")
+    assert (err <= bound[:, None] + 1e-7).all()
+    # the bound is tight-ish: worst row error is within 2x of it
+    assert err.max() > 0  # quantization actually happened
+
+
+def test_fp16_round_trip_error_bound():
+    X = RNG.standard_normal((32, 16)).astype(np.float32)
+    q, s = quant.quantize_np(X, "fp16")
+    assert q.dtype == np.float16 and np.all(s == 1.0)
+    err = np.abs(quant.dequantize_np(q, s) - X)
+    bound = quant.max_abs_error(np.abs(X).max(axis=-1), "float16")
+    assert (err <= bound[:, None] + 1e-9).all()
+
+
+def test_float32_is_identity():
+    X = RNG.standard_normal((8, 4)).astype(np.float32)
+    q, s = quant.quantize_np(X, "float32")
+    assert q.dtype == np.float32 and (q == X).all() and np.all(s == 1.0)
+    assert np.all(
+        quant.max_abs_error(np.abs(X).max(axis=-1), "float32") == 0.0)
+
+
+def test_int8_requantization_stable():
+    """quantize ∘ dequantize is the identity on codes — the property
+    that makes tier-3-dequant → tier-2-requant lossless."""
+    X = RNG.standard_normal((40, 24)).astype(np.float32)
+    q, s = quant.quantize_np(X, "int8")
+    q2, s2 = quant.quantize_np(quant.dequantize_np(q, s), "int8")
+    assert (q2 == q).all()
+    np.testing.assert_allclose(s2, s, rtol=1e-6)
+
+
+def test_jnp_np_codecs_agree():
+    X = RNG.standard_normal((16, 8)).astype(np.float32)
+    for prec in quant.PRECISIONS:
+        qn, sn = quant.quantize_np(X, prec)
+        qj, sj = quant.quantize_jnp(jnp.asarray(X), prec)
+        assert np.array_equal(np.asarray(qj), qn), prec
+        np.testing.assert_allclose(np.asarray(sj), sn, rtol=1e-6)
+
+
+def test_zero_rows_survive():
+    X = np.zeros((3, 5), np.float32)
+    q, s = quant.quantize_np(X, "int8")
+    assert (q == 0).all() and (s > 0).all()  # no div-by-zero poison
+    assert (quant.dequantize_np(q, s) == 0).all()
+
+
+def test_bytes_and_budget_accounting():
+    assert quant.bytes_per_vector(64, "float32") == 256
+    assert quant.bytes_per_vector(64, "float16") == 128
+    assert quant.bytes_per_vector(64, "int8") == 68  # d + 4-byte scale
+    budget = 256 * 1000  # 1000 float32 vectors' worth
+    assert quant.capacity_for_budget(budget, 64, "float32") == 1000
+    # the acceptance lever: >= 2x capacity at the same byte budget
+    assert quant.capacity_for_budget(budget, 64, "int8") \
+        >= 2 * quant.capacity_for_budget(budget, 64, "float32")
+
+
+def test_precision_aliases_and_unknown():
+    assert quant.canonical_precision("fp16") == "float16"
+    assert quant.canonical_precision("INT8") == "int8"
+    with pytest.raises(ValueError):
+        quant.canonical_precision("int4")
+
+
+# ------------------------------------------------- dequant kernels vs ref
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_dequant_gather_distance_kernel_matches_ref(metric):
+    X = RNG.standard_normal((60, 16)).astype(np.float32)
+    table, scales = quant.quantize_np(X, "int8")
+    ids = jnp.array([0, 17, -1, 59, 3], jnp.int32)
+    q = jnp.asarray(X[5])
+    out = dequant_gather_distance_pallas(
+        jnp.asarray(table), jnp.asarray(scales), ids, q,
+        metric=metric, interpret=True)
+    want = ref.dequant_gather_distance_ref(
+        jnp.asarray(table), jnp.asarray(scales), ids, q, metric)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # and the oracle itself matches the float32 oracle on dequant rows
+    dq = quant.dequantize_np(table, scales)
+    truth = ref.gather_distance_ref(jnp.asarray(dq), ids, q, metric)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(truth),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_dequant_gather_distance_batch_kernel_matches_ref(metric):
+    X = RNG.standard_normal((50, 12)).astype(np.float32)
+    table, scales = quant.quantize_np(X, "int8")
+    ids = jnp.array([[0, 5, -1, 49], [1, 2, 3, -1], [-1, -1, -1, -1]],
+                    jnp.int32)
+    Q = jnp.asarray(X[:3])
+    out = dequant_gather_distance_batch_pallas(
+        jnp.asarray(table), jnp.asarray(scales), ids, Q,
+        metric=metric, interpret=True)
+    want = ref.dequant_gather_distance_batch_ref(
+        jnp.asarray(table), jnp.asarray(scales), ids, Q, metric)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dequant_kernel_float16_table():
+    """The same kernel serves fp16 payloads (scales all-ones)."""
+    X = RNG.standard_normal((30, 8)).astype(np.float32)
+    table, scales = quant.quantize_np(X, "float16")
+    ids = jnp.array([1, 2, -1], jnp.int32)
+    q = jnp.asarray(X[0])
+    out = dequant_gather_distance_pallas(
+        jnp.asarray(table), jnp.asarray(scales), ids, q, interpret=True)
+    want = ref.dequant_gather_distance_ref(
+        jnp.asarray(table), jnp.asarray(scales), ids, q, "l2")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------- int8 cache semantics
+
+
+def _vecs(ids, d=8):
+    return jnp.stack([jnp.full((d,), float(i) + 0.25, jnp.float32)
+                      for i in ids])
+
+
+def test_int8_cache_insert_lookup_dequantizes():
+    c = cache_init(100, 8, 8, precision="int8")
+    assert c.slab.dtype == jnp.int8
+    X = RNG.standard_normal((3, 8)).astype(np.float32) * 5
+    ids = jnp.array([3, 7, 11], jnp.int32)
+    c = cache_insert(c, ids, jnp.asarray(X))
+    present, out = cache_lookup(c, jnp.array([3, 7, 11, 5], jnp.int32))
+    assert np.asarray(present).tolist() == [True, True, True, False]
+    assert out.dtype == jnp.float32  # lookups always serve f32
+    q, s = quant.quantize_np(X, "int8")
+    np.testing.assert_allclose(np.asarray(out[:3]),
+                               quant.dequantize_np(q, s), rtol=1e-6)
+    # reconstruction within the codec bound
+    err = np.abs(np.asarray(out[:3]) - X)
+    bound = quant.max_abs_error(np.abs(X).max(axis=-1))
+    assert (err <= bound[:, None] + 1e-6).all()
+
+
+@pytest.mark.parametrize("policy_kw", [{}, {"policy": EVICT_LRU}])
+def test_int8_cache_eviction_matches_float32(policy_kw):
+    """Eviction bookkeeping is precision-independent: the same insert
+    sequence evicts the same ids under int8 and float32 slabs."""
+    c8 = cache_init(50, 3, 8, precision="int8")
+    c32 = cache_init(50, 3, 8)
+    for i in (1, 2, 3, 4, 9):
+        v = _vecs([i])
+        c8 = cache_insert(c8, jnp.array([i], jnp.int32), v, **policy_kw)
+        c32 = cache_insert(c32, jnp.array([i], jnp.int32), v, **policy_kw)
+    probe = jnp.arange(12, dtype=jnp.int32)
+    p8, _ = cache_lookup(c8, probe)
+    p32, _ = cache_lookup(c32, probe)
+    assert np.array_equal(np.asarray(p8), np.asarray(p32))
+
+
+def test_tiered_store_int8_gather_and_resize():
+    X = RNG.standard_normal((40, 8)).astype(np.float32)
+    ts = TieredStore(ExternalStore(X), capacity=8, precision="int8")
+    ids = np.array([1, 3, 5], np.int32)
+    out = ts.gather(ids)
+    np.testing.assert_allclose(out, X[ids], rtol=1e-6)  # misses: exact f32
+    assert ts.external.stats.n_db == 1
+    out2 = ts.gather(ids)  # hits: dequantized within bound
+    assert ts.external.stats.n_db == 1
+    err = np.abs(out2 - X[ids])
+    bound = quant.max_abs_error(np.abs(X[ids]).max(axis=-1))
+    assert (err <= bound[:, None] + 1e-6).all()
+    assert ts.cache_bytes() < 8 * 8 * 4  # smaller than the f32 slab
+    ts.resize(4)
+    assert ts.cache.slab.dtype == jnp.int8  # precision survives resize
+
+
+# ------------------------------------------------- engine recall & parity
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    X = corpus_embeddings(500, 32, n_clusters=8, seed=3)
+    eng = WebANNSEngine.build(
+        X, M=10, ef_construction=60,
+        config=EngineConfig(cache_capacity=125))
+    rng = np.random.default_rng(5)
+    Q = X[rng.choice(500, 10)] + 0.1 * rng.standard_normal(
+        (10, 32)).astype(np.float32)
+    return X, eng.graph, Q
+
+
+def _recall10(X, ids_batch, Q):
+    from benchmarks.common import brute_force_topk, recall_at_k
+
+    return recall_at_k(ids_batch, brute_force_topk(X, Q, 10))
+
+
+def test_int8_recall_parity_with_rerank(small_index):
+    X, g, Q = small_index
+    f32 = WebANNSEngine(X, g, EngineConfig(cache_capacity=125))
+    i8 = WebANNSEngine(X, g, EngineConfig(cache_capacity=125,
+                                          precision="int8"))
+    ids32 = np.stack([f32.search(SearchRequest(query=q, k=10, ef=64)).ids
+                      for q in Q])
+    ids8 = np.stack([i8.search(SearchRequest(query=q, k=10, ef=64)).ids
+                     for q in Q])
+    r32, r8 = _recall10(X, ids32, Q), _recall10(X, ids8, Q)
+    assert r8 >= 0.95 * r32, (r8, r32)
+
+
+def test_rerank_distances_are_exact(small_index):
+    """Returned top-k distances under int8+rerank equal full-precision
+    distances to the returned ids (not quantized ones)."""
+    X, g, Q = small_index
+    i8 = WebANNSEngine(X, g, EngineConfig(cache_capacity=125,
+                                          precision="int8"))
+    res = i8.search(SearchRequest(query=Q[0], k=5, ef=64))
+    diff = X[res.ids] - Q[0][None, :]
+    np.testing.assert_allclose(res.dists, (diff * diff).sum(-1), rtol=1e-5)
+
+
+def test_rerank_counts_one_access(small_index):
+    X, g, Q = small_index
+    i8 = WebANNSEngine(X, g, EngineConfig(cache_capacity=500,
+                                          precision="int8"))
+    i8.warm_cache()  # all hits → only the rerank should touch tier 3
+    res = i8.search(SearchRequest(query=Q[0], k=5, ef=64))
+    assert res.stats.n_db == 1
+    assert i8.external.stats.n_db == 1
+
+
+def test_int8_batched_loop_parity(small_index):
+    X, g, Q = small_index
+    mk = lambda: WebANNSEngine(X, g, EngineConfig(cache_capacity=125,
+                                                  precision="int8"))
+    rb = mk().search(SearchRequest(query=Q, k=10, ef=64,
+                                   batch_mode="batched"))
+    rl = mk().search(SearchRequest(query=Q, k=10, ef=64,
+                                   batch_mode="loop"))
+    assert np.array_equal(rb.ids, rl.ids)
+    np.testing.assert_allclose(rb.dists, rl.dists, rtol=1e-6)
+    # the shared batch rerank is ONE transaction, not B
+    assert rb.batch_stats.n_db < rl.batch_stats.n_db
+
+
+def test_fused_int8_matches_host_driver(small_index):
+    X, g, Q = small_index
+    host = WebANNSEngine(X, g, EngineConfig(cache_capacity=125,
+                                            precision="int8"))
+    fused = WebANNSEngine(X, g, EngineConfig(cache_capacity=125,
+                                             precision="int8", fused=True))
+    rh = host.search(SearchRequest(query=Q[0], k=10, ef=64))
+    rf = fused.search(SearchRequest(query=Q[0], k=10, ef=64))
+    assert np.array_equal(np.sort(rh.ids), np.sort(rf.ids))
+
+
+def test_fused_int8_device_table_is_quantized(small_index):
+    """The fused driver's device-resident tier-3 payload stays int8
+    (+ per-row scales) — the ~4x device-memory claim of DESIGN.md §7."""
+    X, g, Q = small_index
+    fused = WebANNSEngine(X, g, EngineConfig(cache_capacity=125,
+                                             precision="int8", fused=True))
+    fused.search(SearchRequest(query=Q[0], k=5, ef=64))
+    assert fused._table_dev.dtype == jnp.int8
+    assert fused._tscales_dev is not None
+    assert fused._table_dev.nbytes < X.nbytes / 3
+
+
+def test_rerank_disabled_returns_quantized_order(small_index):
+    X, g, Q = small_index
+    i8 = WebANNSEngine(X, g, EngineConfig(
+        cache_capacity=500, precision="int8", rerank_alpha=0.0))
+    i8.warm_cache()
+    res = i8.search(SearchRequest(query=Q[0], k=5, ef=64))
+    assert i8.external.stats.n_db == 0  # no rerank access
+
+
+# ------------------------------------------------ persistence round-trip
+
+
+@pytest.mark.parametrize("mmap", [True, False])
+def test_int8_shards_save_load_query(tmp_path, small_index, mmap):
+    X, g, Q = small_index
+    mem = WebANNSEngine(X, g, EngineConfig(cache_capacity=125,
+                                           precision="int8"))
+    path = str(tmp_path / "idx")
+    mem.save(path)  # int8 shards (session precision)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    assert man["vector_dtype"] == "int8"
+    assert all("scales_file" in s for s in man["vector_shards"])
+    reopened = WebANNSEngine.open(
+        path, config=EngineConfig(cache_capacity=125, precision="int8"),
+        mmap=mmap)
+    r_mem = mem.search(SearchRequest(query=Q[0], k=10, ef=64))
+    r_re = reopened.search(SearchRequest(query=Q[0], k=10, ef=64))
+    # the reopened engine's tier-3 serves DEQUANTIZED int8 — recall must
+    # still be at parity with the in-memory f32-tier-3 int8 session
+    r1 = _recall10(X, r_mem.ids[None], Q[:1])
+    r2 = _recall10(X, r_re.ids[None], Q[:1])
+    assert r2 >= r1 - 0.11  # at most one neighbor of 10 lost to the codec
+    assert isinstance(reopened.external.base_backend, ShardedFileBackend)
+    assert reopened.external.base_backend.precision == "int8"
+
+
+def test_int8_shards_are_smaller(tmp_path, small_index):
+    X, g, _ = small_index
+    save_vector_shards(str(tmp_path / "q"), X, precision="int8")
+    save_vector_shards(str(tmp_path / "f"), X, precision="float32")
+    size = lambda p: sum(
+        os.path.getsize(os.path.join(p, f)) for f in os.listdir(p)
+        if f.startswith("vectors_s"))
+    assert size(str(tmp_path / "q")) < size(str(tmp_path / "f")) / 3
+
+
+def test_sharded_backend_dequant_fetch_matches_codec(tmp_path):
+    X = RNG.standard_normal((100, 16)).astype(np.float32)
+    save_vector_shards(str(tmp_path), X, shard_bytes=16 * 30,
+                       precision="int8")
+    be = ShardedFileBackend(str(tmp_path))
+    assert len(be._shards) > 1  # actually sharded
+    ids = np.array([0, 31, 64, 99])
+    q, s = quant.quantize_np(X[ids], "int8")
+    np.testing.assert_allclose(be.fetch(ids), quant.dequantize_np(q, s),
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        be.vectors, quant.dequantize_np(*quant.quantize_np(X, "int8")),
+        rtol=1e-6)
+
+
+# ----------------------------------------------- bytes-aware cache sizing
+
+
+def test_optimize_memory_bytes_precision_lever():
+    """At the same byte budget the int8 optimizer starts from ~4x the
+    float32 capacity and reports comparable footprints in bytes."""
+    def query_test(c):
+        # synthetic monotone fetch curve: n_db falls as capacity grows
+        return QueryTestStats(n_db=max(1.0, 200.0 / max(c, 1)),
+                              n_q=200.0, t_query=0.01, t_db=1e-3)
+
+    budget = 64 * 4 * 256  # 256 float32 vectors at d=64
+    r32 = optimize_memory_bytes(query_test, budget, dim=64,
+                                precision="float32")
+    r8 = optimize_memory_bytes(query_test, budget, dim=64,
+                               precision="int8")
+    assert r8.c0 >= 2 * r32.c0
+    assert r8.bytes_per_item == quant.bytes_per_vector(64, "int8")
+    assert r8.c_best_bytes is not None and r32.c_best_bytes is not None
+    assert r8.c_best_bytes <= budget and r32.c_best_bytes <= budget
