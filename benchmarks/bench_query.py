@@ -18,10 +18,10 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP,
-                               brute_force_topk, csv_row, get_index,
-                               queries_for, recall_at_k, run_queries)
+from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, csv_row,
+                               get_index, queries_for, run_queries)
 from repro.core import quant
+from repro.core.eval import brute_force_topk, recall_at_k
 from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.mememo import MememoEngine
 

@@ -1,0 +1,213 @@
+"""Mutation-lifecycle benchmark (DESIGN.md §8): insert throughput,
+post-mutation query latency, and delta-save economics.
+
+The dynamic-corpus scenario the lifecycle exists for: an engine built
+over most of a corpus ingests the rest through ``add`` (incremental
+HNSW insertion — no rebuild), forgets a slice through ``delete``
+(tombstones), and persists through ``save`` (append-only delta shards).
+Reported per phase:
+
+- **insert throughput** — vectors/sec through ``engine.add`` and
+  per-call p50/p99 (host-side construction; the paper's service-worker
+  stage run incrementally).
+- **query latency after mutations** — batched p50/p99 and recall@10
+  over the LIVE set, before and after the add+delete sequence: the
+  tombstone masking must not degrade the served path.
+- **delta-save vs full-save bytes** — the witness that persisting a
+  small mutation costs a small write.
+
+    PYTHONPATH=src python -m benchmarks.bench_update [--assert-parity]
+
+Results merge into ``reports/BENCH_update.json`` (a CI artifact);
+``--assert-parity`` additionally reopens the delta-saved index and
+fails unless it is bit-identical to the live mutated engine (the CI
+add/delete/reopen smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, get_dataset,
+                               queries_for)
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
+from repro.core.eval import brute_force_topk, recall_at_k
+
+BENCH_JSON = os.path.join("reports", "BENCH_update.json")
+
+
+def _query_stats(eng, Q, k, ef, batch_size, live_ids, X) -> dict:
+    """Batched query pass over a cold cache: p50/p99 per call + recall
+    over the live set."""
+    starts = list(range(0, len(Q) - batch_size + 1, batch_size))
+    preds = []
+    for lo in starts:  # warm-up pass owns the compiles
+        preds.append(np.asarray(eng.search(SearchRequest(
+            query=Q[lo:lo + batch_size], k=k, ef=ef)).ids))
+    preds = np.concatenate(preds) if preds else np.zeros((0, k), np.int64)
+    truth = live_ids[brute_force_topk(X[live_ids], Q[: len(preds)], k)]
+    rec = recall_at_k(preds, truth) if len(preds) else 0.0
+    eng.store.resize(eng.store.capacity)  # re-cold, keep jit warm
+    lat: List[float] = []
+    for lo in starts:
+        t0 = time.perf_counter()
+        eng.search(SearchRequest(query=Q[lo:lo + batch_size], k=k, ef=ef))
+        lat.append(time.perf_counter() - t0)
+    return {
+        "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+        "recall_at_k": rec,
+        "n_calls": len(lat),
+    }
+
+
+def bench_update(
+    dataset: str = "arxiv-1k",
+    base_fraction: float = 0.8,
+    add_batch: int = 32,
+    delete_fraction: float = 0.1,
+    n_queries: int = 32,
+    batch_size: int = 8,
+    k: int = 10,
+    ef: int = 64,
+    cache_ratio: float = 0.25,
+    json_path: Optional[str] = BENCH_JSON,
+    assert_parity: bool = False,
+    seed: int = 0,
+) -> dict:
+    X = get_dataset(dataset)
+    Q = queries_for(X, n_queries)
+    n_base = int(len(X) * base_fraction)
+    cap = max(16, int(len(X) * cache_ratio))
+    cfg = EngineConfig(cache_capacity=cap, t_setup=IDB_T_SETUP,
+                       t_per_item=IDB_T_PER_ITEM)
+
+    t0 = time.perf_counter()
+    eng = WebANNSEngine.build(X[:n_base], M=12, ef_construction=80,
+                              config=cfg, seed=seed)
+    t_build = time.perf_counter() - t0
+
+    live0 = np.arange(n_base)
+    q_before = _query_stats(eng, Q, k, ef, batch_size, live0, X[:n_base])
+
+    # ---- insert throughput: stream the rest of the corpus in batches
+    add_lat: List[float] = []
+    for lo in range(n_base, len(X), add_batch):
+        chunk = X[lo: lo + add_batch]
+        t0 = time.perf_counter()
+        eng.add(chunk)
+        add_lat.append(time.perf_counter() - t0)
+    n_added = len(X) - n_base
+    insert_stats = {
+        "n_added": n_added,
+        "add_batch": add_batch,
+        "inserts_per_sec": n_added / max(sum(add_lat), 1e-9),
+        "p50_ms_per_call": float(np.percentile(add_lat, 50) * 1e3),
+        "p99_ms_per_call": float(np.percentile(add_lat, 99) * 1e3),
+        "build_baseline_sec": t_build,
+    }
+
+    # ---- deletes: tombstone a random slice of the full id space
+    rng = np.random.default_rng(seed + 1)
+    n_del = int(len(X) * delete_fraction)
+    dead = rng.choice(len(X), n_del, replace=False)
+    t0 = time.perf_counter()
+    eng.delete(dead)
+    t_delete = time.perf_counter() - t0
+    live = np.setdiff1d(np.arange(len(X)), dead)
+    q_after = _query_stats(eng, Q, k, ef, batch_size, live, X)
+
+    # ---- persistence economics: full save vs delta save
+    with tempfile.TemporaryDirectory() as tmp:
+        p_full = os.path.join(tmp, "full")
+        p_delta = os.path.join(tmp, "delta")
+        shard_bytes = 1 << 18
+        base_eng = WebANNSEngine.build(
+            X[:n_base], M=12, ef_construction=80, config=cfg, seed=seed)
+        full0 = base_eng.save(p_delta, shard_bytes=shard_bytes)
+        base_eng.add(X[n_base:])
+        base_eng.delete(dead)
+        delta = base_eng.save(p_delta, shard_bytes=shard_bytes)
+        full = base_eng.save(p_full, shard_bytes=shard_bytes)
+        save_stats = {
+            "shard_bytes": shard_bytes,
+            "base_full_save_bytes": full0["bytes_written"],
+            "delta_save_bytes": delta["bytes_written"],
+            "full_save_bytes": full["bytes_written"],
+            "delta_over_full": delta["bytes_written"]
+            / max(1, full["bytes_written"]),
+            "mutation_epoch": delta["epoch"],
+        }
+        if assert_parity:
+            # the CI add/delete/reopen smoke: a reopened delta save is
+            # bit-identical to the live mutated engine, and tombstoned
+            # ids never surface
+            re = WebANNSEngine.open(p_delta, config=cfg)
+            req = SearchRequest(query=Q[:batch_size], k=k, ef=ef)
+            a, b = base_eng.search(req), re.search(req)
+            assert np.array_equal(a.ids, b.ids), "reopen parity (ids)"
+            assert np.array_equal(a.dists, b.dists), "reopen parity (dists)"
+            assert not set(map(int, dead)) & set(
+                np.asarray(b.ids).ravel().tolist()), "tombstone leak"
+            save_stats["parity"] = "ok"
+
+    doc = {
+        "benchmark": "bench_update",
+        "dataset": dataset,
+        "n_base": n_base,
+        "n_total": int(eng.n),
+        "n_live": int(eng.n_live),
+        "delete_ms": t_delete * 1e3,
+        "insert": insert_stats,
+        "query_before_mutations": q_before,
+        "query_after_mutations": q_after,
+        "save": save_stats,
+    }
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1)
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="arxiv-1k")
+    ap.add_argument("--base-fraction", type=float, default=0.8)
+    ap.add_argument("--add-batch", type=int, default=32)
+    ap.add_argument("--delete-fraction", type=float, default=0.1)
+    ap.add_argument("--n-queries", type=int, default=32)
+    ap.add_argument("--assert-parity", action="store_true",
+                    help="fail unless a reopened delta save is "
+                         "bit-identical to the live mutated engine "
+                         "(the CI add/delete/reopen smoke)")
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help="output path ('' to disable)")
+    args = ap.parse_args()
+    doc = bench_update(
+        dataset=args.dataset, base_fraction=args.base_fraction,
+        add_batch=args.add_batch, delete_fraction=args.delete_fraction,
+        n_queries=args.n_queries, json_path=args.json or None,
+        assert_parity=args.assert_parity,
+    )
+    ins, sv = doc["insert"], doc["save"]
+    print(f"insert: {ins['inserts_per_sec']:.0f} vec/s "
+          f"(p50 {ins['p50_ms_per_call']:.1f} ms / batch of "
+          f"{ins['add_batch']}; offline build {ins['build_baseline_sec']:.2f}s)")
+    qb, qa = doc["query_before_mutations"], doc["query_after_mutations"]
+    print(f"query p50/p99 ms: before {qb['p50_latency_ms']:.1f}/"
+          f"{qb['p99_latency_ms']:.1f} recall@10 {qb['recall_at_k']:.3f} → "
+          f"after {qa['p50_latency_ms']:.1f}/{qa['p99_latency_ms']:.1f} "
+          f"recall@10 {qa['recall_at_k']:.3f}")
+    print(f"save bytes: delta {sv['delta_save_bytes']} vs full "
+          f"{sv['full_save_bytes']} ({sv['delta_over_full']:.2%})"
+          + (" — parity OK" if sv.get("parity") else ""))
+    if doc.get("save", {}).get("parity"):
+        print("# add/delete/reopen smoke passed")

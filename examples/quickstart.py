@@ -96,6 +96,32 @@ def main():
           f"{eng8.cache_bytes()} bytes at equal capacity; "
           f"recall@10 {rec8:.2f} vs float32 {rec32:.2f} (parity OK)")
 
+    # 7. mutation lifecycle (DESIGN.md §8): the corpus is alive —
+    #    build → add → delete → save (delta) → reopen, no rebuild ever.
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "live_index")
+        live = WebANNSEngine.build(
+            X[:1000], M=10, ef_construction=60,
+            config=EngineConfig(cache_capacity=250))
+        info = live.save(path)
+        added = live.add(X[1000:], texts=texts[1000:])  # incremental insert
+        hit = live.search(SearchRequest(query=X[1100], k=1, ef=32))
+        assert hit.ids[0] in added.ids  # new docs retrievable immediately
+        gone = live.delete(added.ids[:10]).deleted  # GDPR-style forget
+        res = live.search(SearchRequest(query=q, k=5, ef=64))
+        assert not set(gone.tolist()) & set(res.ids.tolist())
+        info = live.save(path)  # writes ONLY deltas + tombstones
+        assert info["mode"] == "delta"
+        reopened = WebANNSEngine.open(
+            path, config=EngineConfig(cache_capacity=250))
+        res2 = reopened.search(SearchRequest(query=q, k=5, ef=64))
+        assert np.array_equal(res.ids, res2.ids)  # replay is exact
+        assert np.array_equal(res.dists, res2.dists)
+        print(f"mutation lifecycle: +{len(added.ids)} docs / "
+              f"-{len(gone)} tombstones → delta save "
+              f"{info['bytes_written']} bytes (epoch {info['epoch']}); "
+              f"reopened engine bit-identical (n_live={reopened.n_live})")
+
 
 if __name__ == "__main__":
     main()

@@ -51,10 +51,15 @@ def distance_matrix(
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
-def brute_force_topk(
+def exact_topk(
     Q: jnp.ndarray, X: jnp.ndarray, k: int, metric: Metric = "l2"
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact top-k oracle: returns (dists (nq,k), ids (nq,k))."""
+    """Jitted exact top-k oracle: returns (dists (nq,k), ids (nq,k)).
+
+    Device-side twin of the host recall harness — for scoring
+    predictions use ``repro.core.eval.brute_force_topk`` (note its
+    ``(X, Q, k)`` argument order; this one is ``(Q, X, k)``).
+    """
     D = distance_matrix(Q, X, metric)
     neg, ids = jax.lax.top_k(-D, k)
     return -neg, ids

@@ -15,7 +15,16 @@ Index` (initialization-stage bulk load, one access per shard) over any
 persists the artifact; :meth:`WebANNSEngine.search` takes a typed
 :class:`SearchRequest` and returns a :class:`SearchResult`. The bare
 tuple-returning ``query`` / ``query_batch`` remain as thin deprecation
-shims over ``search``.
+shims over ``search`` (removal milestone: v0.6).
+
+The index is MUTABLE (DESIGN.md §8): ``engine.add(vectors, texts)``
+grows it by incremental HNSW insertion (continuing the offline build's
+level stream — no rebuild), ``engine.delete(ids)`` tombstones rows out
+of every driver's search, ``engine.upsert(ids, vectors)`` composes the
+two under fresh ids; all three return a typed :class:`MutationResult`,
+and ``engine.save`` back to the session's directory writes only the
+deltas (append-only vector shards + dirtied graph shards + the
+tombstone list).
 
 Engine modes (paper §4.2 baselines), validated at config construction:
 
@@ -34,9 +43,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
+import uuid as uuid_mod
 import warnings
-from typing import List, Optional, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,8 +55,8 @@ import numpy as np
 
 from repro.core import quant
 from repro.core import search as S
-from repro.core.graph import PAD, HNSWGraph
-from repro.core.hnsw import build_hnsw
+from repro.core.graph import PAD, HNSWGraph, random_levels
+from repro.core.hnsw import build_hnsw, insert_hnsw
 from repro.core.index import Index
 from repro.core.storage import StorageBackend
 from repro.core.store import (
@@ -177,6 +188,24 @@ class SearchRequest:
 
 
 @dataclasses.dataclass
+class MutationResult:
+    """Typed result of ``add`` / ``delete`` / ``upsert`` (DESIGN.md §8).
+
+    Id rules (the add→delete→add contract, tested): ids are assigned
+    monotonically and NEVER reused — a deleted id stays tombstoned
+    forever, and an upsert tombstones the old ids and returns fresh
+    ones for the replacement rows. ``n_total`` is therefore the size of
+    the id space (live + tombstoned), ``n_live`` the rows a search can
+    still return.
+    """
+
+    ids: np.ndarray  # ids assigned to newly added rows ((k,) int64)
+    deleted: np.ndarray  # ids newly tombstoned by this call
+    n_live: int
+    n_total: int
+
+
+@dataclasses.dataclass
 class SearchResult:
     """Typed result: ids/dists plus the latency decomposition.
 
@@ -200,9 +229,9 @@ class SearchResult:
     jax.jit, static_argnames=("ef", "metric")
 )
 def _seed_cached(q, entry_ids, cache: CacheState, ef: int, miss_cap_arr,
-                 metric: str):
+                 metric: str, tombs):
     n = cache.slot_of.shape[0]
-    state = S.make_state(ef, miss_cap_arr.shape[0], n)
+    state = S.make_state(ef, miss_cap_arr.shape[0], n, tombstones=tombs)
     lookup = lambda ids: cache_lookup(cache, ids)
     return S.seed_state(state, q, entry_ids, lookup, metric)
 
@@ -234,10 +263,12 @@ def _load_cached(q, state: S.SearchState, loaded_ids, loaded_vecs,
     jax.jit, static_argnames=("ef", "miss_cap", "metric")
 )
 def _batch_seed_cached(Q, entry_ids, cache: CacheState, ef: int,
-                       miss_cap: int, metric: str):
+                       miss_cap: int, metric: str, tombs):
     n = cache.slot_of.shape[0]
     lookup = lambda ids: cache_lookup(cache, ids)
-    states = S.batch_make_state(Q.shape[0], ef, miss_cap, n)
+    states = S.batch_make_state(
+        Q.shape[0], ef, miss_cap, n, tombstones=tombs
+    )
     return S.batch_seed_state(states, Q, entry_ids, lookup, metric)
 
 
@@ -277,12 +308,25 @@ class WebANNSEngine:
         texts: Optional[List[str]] = None,
     ):
         self.config = config or EngineConfig()
+        tombstones = None
+        level_state = None
+        insert_params = None
+        self._uuid: Optional[str] = None
+        self._last_save_path: Optional[str] = None
         if isinstance(source, Index):
             if graph is not None:
                 raise ValueError(
                     "pass either an Index or (vectors, graph), not both"
                 )
             graph = source.graph
+            tombstones = source.tombstones
+            level_state = source.level_state
+            insert_params = source.insert_params
+            self._uuid = source.uuid
+            self._last_save_path = (
+                os.path.realpath(source.path)
+                if source.path is not None else None
+            )
             source = source.backend
         if graph is None:
             raise ValueError("an HNSWGraph is required (or pass an Index)")
@@ -305,6 +349,36 @@ class WebANNSEngine:
         self._miss_cap = self.config.ef_search + graph.max_degree + 1
         # whole-batch accounting of the last query_batch call (DESIGN.md §5)
         self.last_batch_stats: Optional[BatchStats] = None
+        # ----- mutation lifecycle state (DESIGN.md §8) -----
+        # tombstones: (N,) bool — deleted ids; never seeded/expanded/
+        # returned by any driver, never reused by add()
+        self.tombstones = (
+            np.array(tombstones, dtype=bool, copy=True)
+            if tombstones is not None else np.zeros(self.n, dtype=bool)
+        )
+        if self.tombstones.shape[0] != self.n:
+            raise ValueError(
+                f"tombstone mask covers {self.tombstones.shape[0]} ids, "
+                f"backend holds {self.n}"
+            )
+        self._tombs_dev: Optional[jnp.ndarray] = None
+        # level stream continuation: (seed, draws) such that replaying
+        # seed and skipping `draws` uniforms reproduces the next levels
+        # the offline build would have sampled. Best-effort (0, n) for
+        # bare graphs — exact when constructed via build()/Index.
+        self._level_seed, self._levels_drawn = level_state or (0, self.n)
+        self._uuid = self._uuid or uuid_mod.uuid4().hex
+        # pre-existing graph rows whose links changed since the last
+        # save — the rows a delta save must rewrite
+        self._dirty_nodes: set = set()
+        # insertion hyperparameters: restored from the index artifact
+        # (they persist in the manifest next to the level stream — both
+        # are needed for grow-by-add parity); build() sets its own args
+        self.insert_ef_construction, self.insert_heuristic = (
+            insert_params or (200, True)
+        )
+        if self.tombstones[self.graph.entry_point]:
+            self._repair_entry()
 
     # ----------------------------------------------------------- factory
 
@@ -323,7 +397,12 @@ class WebANNSEngine:
             vectors, M=M, ef_construction=ef_construction,
             metric=config.metric, seed=seed,
         )
-        return cls(vectors, g, config, texts)
+        eng = cls(vectors, g, config, texts)
+        # exact level-stream state + insertion hyperparameters, so
+        # add() continues the offline build bit-for-bit (DESIGN.md §8)
+        eng._level_seed, eng._levels_drawn = seed, len(vectors)
+        eng.insert_ef_construction = ef_construction
+        return eng
 
     @classmethod
     def from_index(
@@ -358,8 +437,16 @@ class WebANNSEngine:
         path: str,
         shard_bytes: int = 64 * 1024 * 1024,
         precision: Optional[str] = None,
-    ) -> None:
-        """Persist this session's index (graph + vectors) to ``path``.
+    ) -> dict:
+        """Persist this session's index (graph + vectors + tombstones).
+
+        When ``path`` is the directory this session was opened from (or
+        last saved to), only the MUTATIONS since then are written —
+        append-only vector delta shards, dirtied neighbor shards, the
+        tombstone list, and a manifest merge bumping ``mutation_epoch``
+        (DESIGN.md §8). Any other target gets a full save (delta saves
+        never span lineages). Returns the save witness
+        ``{"mode", "bytes_written", "epoch"}``.
 
         ``precision=None`` follows the session's configured precision,
         so an int8 session persists int8 shards end-to-end (~4× smaller
@@ -367,15 +454,215 @@ class WebANNSEngine:
         serves DEQUANTIZED tier 3, so the exact-rerank pass is exact
         only w.r.t. that lossy payload (see ``_rerank_exact``). Pass
         ``"float32"`` explicitly to keep the payload full-precision on
-        disk regardless of the cache mode.
+        disk regardless of the cache mode. A precision differing from
+        the existing directory's codec also forces a full save.
         """
-        self.index.save(path, shard_bytes=shard_bytes,
-                        precision=precision or self.config.precision)
+        idx = self.index
+        # compare REAL paths: "./idx", an absolute spelling, or a
+        # symlink of the session's directory must all stay in-lineage
+        # (a raw string mismatch would force a full rewrite)
+        if os.path.realpath(path) != self._last_save_path:
+            idx.uuid = None  # new lineage for a new target directory
+        info = idx.save(path, shard_bytes=shard_bytes,
+                        precision=precision or self.config.precision,
+                        dirty_nodes=self._dirty_nodes)
+        self._uuid = idx.uuid
+        self._last_save_path = os.path.realpath(path)
+        self._dirty_nodes = set()
+        return info
 
     @property
     def index(self) -> Index:
-        """The session's index artifact (graph + storage medium)."""
-        return Index(graph=self.graph, backend=self.external.base_backend)
+        """The session's index artifact (graph + storage + tombstones)."""
+        return Index(
+            graph=self.graph,
+            backend=self.external.base_backend,
+            path=self._last_save_path,
+            tombstones=self.tombstones,
+            uuid=self._uuid,
+            level_state=(self._level_seed, self._levels_drawn),
+            insert_params=(
+                self.insert_ef_construction, self.insert_heuristic
+            ),
+        )
+
+    # --------------------------------------------------- mutation lifecycle
+
+    @property
+    def n_live(self) -> int:
+        """Rows a search can still return (total minus tombstoned)."""
+        return self.n - int(self.tombstones.sum())
+
+    def _repair_entry(self) -> None:
+        """Move the HNSW entry point to a live node (the highest-level
+        one, as the offline build would pick). Called whenever a delete
+        or upsert tombstones the current entry."""
+        live = np.nonzero(~self.tombstones)[0]
+        if live.size == 0:
+            return  # empty engine: searches short-circuit to -1 results
+        self.graph.entry_point = int(live[np.argmax(self.graph.levels[live])])
+
+    def _tombs_device(self) -> jnp.ndarray:
+        if self._tombs_dev is None:
+            self._tombs_dev = jnp.asarray(self.tombstones)
+        return self._tombs_dev
+
+    def _invalidate_device_state(self, table: bool) -> None:
+        """Drop cached device arrays after a mutation. ``table=True``
+        also drops the fused driver's device-resident tier-3 payload
+        (required after add/upsert; deletes only touch the mask)."""
+        self._tombs_dev = None
+        if table:
+            for attr in ("_table_dev", "_tscales_dev"):
+                if hasattr(self, attr):
+                    delattr(self, attr)
+
+    def add(
+        self,
+        vectors: np.ndarray,
+        texts: Optional[List[str]] = None,
+    ) -> MutationResult:
+        """Insert new vectors into the LIVE index — no rebuild.
+
+        Levels are sampled by continuing the offline build's RNG stream,
+        and the insertion loop is the same one ``build_hnsw`` runs, so
+        an index grown by ``add`` is bit-identical to a fresh build over
+        the concatenated corpus (when no deletes intervene; tested).
+        New ids are assigned monotonically from ``n_total`` — deleted
+        ids are never reused. Tombstoned nodes are excluded from link
+        selection, and the mutated rows are tracked for delta saves.
+        """
+        vectors = np.atleast_2d(np.asarray(vectors, dtype=np.float32))
+        if vectors.shape[0] == 0:
+            return MutationResult(
+                ids=np.empty(0, np.int64), deleted=np.empty(0, np.int64),
+                n_live=self.n_live, n_total=self.n,
+            )
+        if vectors.shape[1] != self.dim:
+            raise ValueError(
+                f"added vectors have dim {vectors.shape[1]}, index holds "
+                f"dim {self.dim}"
+            )
+        if texts is not None and len(texts) != vectors.shape[0]:
+            raise ValueError(
+                f"{len(texts)} texts for {vectors.shape[0]} vectors"
+            )
+        n_new = vectors.shape[0]
+        restart = self.n_live == 0  # dead graph: re-seed the entry point
+        # 1) payload append (tier 3 wraps itself in a DeltaBackend)
+        new_ids = self.external.append(vectors)
+        # 2) continue the build-time level stream. PCG64.advance is an
+        # O(1) skip-ahead to the same stream position that generating
+        # (and discarding) the prior draws would reach — one 64-bit
+        # state step per double, so `advance(draws)` lands exactly
+        # where random(draws) would (asserted in test_mutation.py)
+        bitgen = np.random.PCG64(self._level_seed)
+        if self._levels_drawn:
+            bitgen.advance(self._levels_drawn)
+        levels_new = random_levels(n_new, self.graph.M,
+                                   np.random.Generator(bitgen))
+        self._levels_drawn += n_new
+        # 3) incremental HNSW insertion with bidirectional link repair
+        exclude = None
+        if self.tombstones.any():
+            exclude = np.concatenate(
+                [self.tombstones, np.zeros(n_new, dtype=bool)]
+            )
+        self.graph, dirty = insert_hnsw(
+            self.graph, self.external.vectors, new_ids, levels_new,
+            ef_construction=self.insert_ef_construction,
+            heuristic=self.insert_heuristic, exclude=exclude,
+            restart_entry=restart,
+        )
+        self._dirty_nodes |= dirty
+        # 4) grow per-id engine state: tombstone mask, tier-2 id space,
+        #    device-resident graph; drop stale device caches
+        self.tombstones = np.concatenate(
+            [self.tombstones, np.zeros(n_new, dtype=bool)]
+        )
+        self.n = self.external.n_items
+        self.neighbors = jnp.asarray(self.graph.neighbors)
+        self.store.grow(self.n)
+        if texts is not None and self.doc_store is None:
+            self.doc_store = DocStore([None] * (self.n - n_new))
+        if self.doc_store is not None:
+            self.doc_store.extend(
+                texts if texts is not None else [None] * n_new
+            )
+        self._invalidate_device_state(table=True)
+        if self.tombstones[self.graph.entry_point]:
+            self._repair_entry()
+        return MutationResult(
+            ids=new_ids, deleted=np.empty(0, np.int64),
+            n_live=self.n_live, n_total=self.n,
+        )
+
+    def delete(self, ids: Union[int, Sequence[int]]) -> MutationResult:
+        """Tombstone ``ids``: they are immediately evicted from tier 2
+        and masked out of every driver's search (never seeded, expanded,
+        or returned — see ``search.make_state``). The graph keeps its
+        structure — deletes are O(k) mask writes, and the live nodes'
+        construction-time topology is untouched. Tombstoned rows keep
+        their payload bytes (ids are never reused); reclaiming them
+        means rebuilding into a fresh index, the classic compaction
+        trade. Deleting an already-tombstoned id is a no-op.
+        """
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n):
+            raise ValueError(
+                f"delete ids out of range [0, {self.n}): "
+                f"{ids[(ids < 0) | (ids >= self.n)][:4]}…"
+            )
+        fresh = np.unique(ids[~self.tombstones[ids]])
+        self.tombstones[fresh] = True
+        if fresh.size:
+            self.store.invalidate(fresh)
+            self._invalidate_device_state(table=False)
+            if self.tombstones[self.graph.entry_point]:
+                self._repair_entry()
+        return MutationResult(
+            ids=np.empty(0, np.int64), deleted=fresh,
+            n_live=self.n_live, n_total=self.n,
+        )
+
+    def upsert(
+        self,
+        ids: Union[int, Sequence[int]],
+        vectors: np.ndarray,
+        texts: Optional[List[str]] = None,
+    ) -> MutationResult:
+        """Replace rows: tombstone ``ids`` and insert ``vectors`` as
+        fresh rows. Ids are NEVER reused, so the replacements come back
+        under new ids (``result.ids``, aligned with ``vectors``;
+        ``result.deleted`` holds the retired ones). This keeps vector
+        shards append-only — an upsert costs one delta shard plus a
+        tombstone entry, never a rewrite.
+        """
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        vectors = np.atleast_2d(np.asarray(vectors, dtype=np.float32))
+        if len(ids) != vectors.shape[0]:
+            raise ValueError(
+                f"upsert replaces {len(ids)} ids with "
+                f"{vectors.shape[0]} vectors — counts must match"
+            )
+        # validate EVERYTHING add() would reject before tombstoning
+        # anything: ids are never reused, so a delete that precedes a
+        # failed add would silently lose the old rows forever
+        if vectors.shape[1] != self.dim:
+            raise ValueError(
+                f"upserted vectors have dim {vectors.shape[1]}, index "
+                f"holds dim {self.dim}"
+            )
+        if texts is not None and len(texts) != vectors.shape[0]:
+            raise ValueError(
+                f"{len(texts)} texts for {vectors.shape[0]} vectors"
+            )
+        deleted = self.delete(ids).deleted
+        added = self.add(vectors, texts=texts)
+        return MutationResult(
+            ids=added.ids, deleted=deleted,
+            n_live=self.n_live, n_total=self.n,
+        )
 
     # ------------------------------------------------------------ sizing
 
@@ -385,7 +672,10 @@ class WebANNSEngine:
     def warm_cache(self, ids: Optional[np.ndarray] = None) -> None:
         if ids is None:
             ids = np.arange(min(self.store.capacity, self.n))
-        self.store.warm(ids)
+        ids = np.asarray(ids)
+        ids = ids[~self.tombstones[ids]]  # never stage tombstoned rows
+        if len(ids):
+            self.store.warm(ids)
 
     def cache_bytes(self) -> int:
         """Resident tier-2 bytes at the configured precision — the byte
@@ -474,7 +764,8 @@ class WebANNSEngine:
         entry_np = np.full(max(len(entry_ids), 1), -1, np.int32)
         entry_np[: len(entry_ids)] = entry_ids
         state = _seed_cached(
-            q, jnp.asarray(entry_np), self.store.cache, ef, dummy, cfg.metric
+            q, jnp.asarray(entry_np), self.store.cache, ef, dummy,
+            cfg.metric, self._tombs_device(),
         )
         # eager mode (webanns-base): trigger=1 → flush L after every miss
         trigger = 1 if eager else ef
@@ -534,7 +825,7 @@ class WebANNSEngine:
         t0 = time.perf_counter()
         states = _batch_seed_cached(
             Q, jnp.asarray(entry_ids), self.store.cache, ef, miss_cap,
-            cfg.metric,
+            cfg.metric, self._tombs_device(),
         )
         bstats.t_in_mem += time.perf_counter() - t0
         for _ in range(cfg.max_phases):
@@ -605,6 +896,7 @@ class WebANNSEngine:
             jnp.asarray(self.graph.entry_point, jnp.int32),
             self.store.cache, k=k_run, ef=ef, metric=cfg.metric,
             eviction=self.store.eviction, table_scales=self._tscales_dev,
+            tombstones=self._tombs_device(),
         )
         ids.block_until_ready()
         stats.t_in_mem = time.perf_counter() - t0
@@ -638,6 +930,9 @@ class WebANNSEngine:
         """Single-query driver body. Returns (ids, dists, stats)."""
         cfg = self.config
         ef = ef or cfg.ef_search
+        if self.n_live == 0:  # fully-tombstoned engine: nothing to return
+            return (np.full(k, -1, np.int32),
+                    np.full(k, np.inf, np.float32), QueryStats())
         if cfg.fused and cfg.mode == "webanns":
             return self._query_fused(q, k, ef)
         eager = cfg.mode == "webanns-base"
@@ -692,6 +987,11 @@ class WebANNSEngine:
         ef = ef or cfg.ef_search
         Q = np.asarray(Q, dtype=np.float32)
         B = len(Q)
+        if self.n_live == 0:  # fully-tombstoned engine: nothing to return
+            self.last_batch_stats = BatchStats(batch_size=B)
+            return (np.full((B, k), -1, np.int32),
+                    np.full((B, k), np.inf, np.float32),
+                    [QueryStats() for _ in range(B)])
         # fused engines run the whole query as one program (_query_fused);
         # the batched host driver would silently reroute them, so honor
         # cfg.fused via the sequential path until a fused batch exists
@@ -805,10 +1105,16 @@ class WebANNSEngine:
 
         Kept so pre-redesign callers (tests, benchmarks, serving) work
         unmodified; returns the bare (ids, dists, stats) tuple.
+
+        .. deprecated:: PR 2
+           Removal milestone: **v0.6 (two PRs after the mutation
+           lifecycle lands, PR 6)** — the shim emits exactly one
+           ``DeprecationWarning`` per call until then (tested in
+           ``tests/test_engine_api.py``).
         """
         warnings.warn(
-            "WebANNSEngine.query is deprecated; use "
-            "search(SearchRequest(query=q, k=k, ef=ef))",
+            "WebANNSEngine.query is deprecated and will be removed in "
+            "v0.6 (PR 6); use search(SearchRequest(query=q, k=k, ef=ef))",
             DeprecationWarning, stacklevel=2,
         )
         res = self.search(SearchRequest(query=np.asarray(q), k=k, ef=ef))
@@ -820,9 +1126,17 @@ class WebANNSEngine:
     ) -> Tuple[np.ndarray, np.ndarray, List[QueryStats]]:
         """Deprecated tuple shim: prefer ``search(SearchRequest(...))``
         with a ``(B, d)`` query (whole-batch accounting then rides on
-        ``SearchResult.batch_stats`` instead of ``last_batch_stats``)."""
+        ``SearchResult.batch_stats`` instead of ``last_batch_stats``).
+
+        .. deprecated:: PR 2
+           Removal milestone: **v0.6 (two PRs after the mutation
+           lifecycle lands, PR 6)** — the shim emits exactly one
+           ``DeprecationWarning`` per call until then (tested in
+           ``tests/test_engine_api.py``).
+        """
         warnings.warn(
-            "WebANNSEngine.query_batch is deprecated; use "
+            "WebANNSEngine.query_batch is deprecated and will be removed "
+            "in v0.6 (PR 6); use "
             "search(SearchRequest(query=Q, k=k, ef=ef, batch_mode=...))",
             DeprecationWarning, stacklevel=2,
         )
@@ -841,8 +1155,12 @@ class WebANNSEngine:
 class DocStore:
     """Id → text store, kept separate from embeddings (paper §4.1)."""
 
-    def __init__(self, texts: List[str]):
+    def __init__(self, texts: List[Optional[str]]):
         self._texts = list(texts)
+
+    def extend(self, texts: List[Optional[str]]) -> None:
+        """Append texts for newly added ids (mutation lifecycle §8)."""
+        self._texts.extend(texts)
 
     def get(self, ids) -> List[Optional[str]]:
         out = []

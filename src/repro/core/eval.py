@@ -1,0 +1,86 @@
+"""Accuracy evaluation helpers — the single recall@k implementation.
+
+Through PR 3 two independent ``recall_at_k`` helpers had grown — a
+graph-walking one in ``core/hnsw.py`` and a prediction-scoring one in
+``benchmarks/common.py``. This module is the one import path for both
+shapes of the question (ISSUE 4 satellite):
+
+- :func:`recall_at_k` — score predicted id lists against exact id lists
+  (the primitive everything else reduces to).
+- :func:`brute_force_topk` — the exact baseline, batched through BLAS.
+- :func:`graph_recall_at_k` — convenience wrapper: run ``knn_search_np``
+  over an :class:`~repro.core.graph.HNSWGraph` and score it (what the
+  old hnsw.py helper did), optionally masking tombstoned ids out of the
+  ground truth so mutation benchmarks measure recall over the live set.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graph import HNSWGraph
+
+
+def brute_force_topk(
+    X: np.ndarray, Q: np.ndarray, k: int, metric: str = "l2"
+) -> np.ndarray:
+    """Exact top-k ids (B, k) of each query against the full corpus."""
+    X = np.asarray(X, np.float32)
+    Q = np.atleast_2d(np.asarray(Q, np.float32))
+    G = Q @ X.T
+    if metric == "l2":
+        D = (Q * Q).sum(-1)[:, None] + (X * X).sum(-1)[None, :] - 2.0 * G
+    elif metric == "ip":
+        D = -G
+    elif metric == "cos":
+        qn = np.linalg.norm(Q, axis=-1) + 1e-30
+        xn = np.linalg.norm(X, axis=-1) + 1e-30
+        D = -G / (qn[:, None] * xn[None, :])
+    else:
+        raise ValueError(metric)
+    part = np.argpartition(D, k - 1, axis=1)[:, :k]
+    order = np.take_along_axis(D, part, 1).argsort(axis=1, kind="stable")
+    return np.take_along_axis(part, order, 1)
+
+
+def recall_at_k(pred_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Mean fraction of exact top-k recovered, over the query batch."""
+    pred_ids = np.atleast_2d(np.asarray(pred_ids))
+    true_ids = np.atleast_2d(np.asarray(true_ids))
+    hits = sum(
+        len(set(p.tolist()) & set(t.tolist()))
+        for p, t in zip(pred_ids, true_ids)
+    )
+    return hits / float(true_ids.size)
+
+
+def graph_recall_at_k(
+    X: np.ndarray,
+    g: HNSWGraph,
+    queries: np.ndarray,
+    k: int,
+    ef: int,
+    live_mask: Optional[np.ndarray] = None,
+) -> float:
+    """recall@k of the NumPy reference graph search vs brute force.
+
+    ``live_mask`` (when given) restricts the exact baseline to live
+    (non-tombstoned) rows — the recall a mutated index should be judged
+    against. Predictions are scored as-is: a tombstoned id in the
+    prediction is simply a miss.
+    """
+    from repro.core.hnsw import knn_search_np  # cycle-free late import
+
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    if live_mask is not None:
+        live_ids = np.nonzero(np.asarray(live_mask))[0]
+        truth_local = brute_force_topk(X[live_ids], queries, k, g.metric)
+        truth = live_ids[truth_local]
+    else:
+        truth = brute_force_topk(X, queries, k, g.metric)
+    preds = np.stack(
+        [knn_search_np(X, g, q, k, ef)[0] for q in queries]
+    )
+    return recall_at_k(preds, truth)

@@ -114,6 +114,79 @@ class HNSWGraph:
         # vector_shards section when the graph alone is re-persisted
         update_manifest(path, manifest)
 
+    def save_delta(
+        self,
+        path: str,
+        dirty_rows,
+        shard_bytes: int = 64 * 1024 * 1024,
+    ) -> int:
+        """Delta-persist graph mutations onto an existing save at ``path``.
+
+        Incremental insertion changes three things: the new rows (always
+        at the tail), the neighbor lists of the pre-existing nodes they
+        linked to (``dirty_rows``, collected by ``insert_hnsw``), and the
+        entry metadata. So a delta save rewrites ONLY the existing
+        neighbor shards whose row range intersects ``dirty_rows``,
+        appends new shards for rows beyond the manifest's ``N`` (plus
+        whole new top layers), rewrites the small ``levels.npy``, and
+        merges the updated graph metadata into the manifest. Vector
+        shards are untouched. Returns the bytes written.
+        """
+        mpath = os.path.join(path, "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        if (manifest.get("max_degree") != self.max_degree
+                or manifest.get("M") != self.M
+                or manifest.get("N", 0) > self.size):
+            raise ValueError(
+                f"{path!r}: existing graph save is not a prefix of this "
+                "graph (M/max_degree/N mismatch) — use save() instead"
+            )
+        old_n = int(manifest["N"])
+        old_layers = manifest["shards"]
+        dirty = np.unique(np.fromiter(
+            (int(r) for r in dirty_rows), dtype=np.int64,
+            count=len(dirty_rows),
+        )) if len(dirty_rows) else np.empty(0, np.int64)
+        dirty = dirty[dirty < old_n]  # new rows ride in appended shards
+        flat_row_bytes = self.size * self.max_degree * 4
+        rows_per_shard = max(1, shard_bytes // max(1, flat_row_bytes))
+        written = 0
+
+        def _write(fn: str, arr: np.ndarray) -> int:
+            fp = os.path.join(path, fn)
+            np.save(fp, arr)
+            return os.path.getsize(fp)
+
+        shards = []
+        for l in range(self.n_layers):
+            nb = self.neighbors[l]
+            layer_shards = list(old_layers[l]) if l < len(old_layers) else []
+            for sh in layer_shards:  # rewrite only dirty-intersecting
+                lo, hi = int(sh["start"]), int(sh["stop"])
+                if dirty.size and np.any((dirty >= lo) & (dirty < hi)):
+                    written += _write(sh["file"], nb[lo:hi])
+            start0 = old_n if l < len(old_layers) else 0
+            s_idx = len(layer_shards)
+            for start in range(start0, self.size, rows_per_shard):
+                stop = min(self.size, start + rows_per_shard)
+                fn = f"neighbors_l{l}_s{s_idx}.npy"
+                written += _write(fn, nb[start:stop])
+                layer_shards.append(
+                    {"file": fn, "start": start, "stop": stop}
+                )
+                s_idx += 1
+            shards.append(layer_shards)
+        written += _write("levels.npy", self.levels)
+        update_manifest(path, {
+            "entry_point": int(self.entry_point),
+            "max_level": int(self.max_level),
+            "n_layers": self.n_layers,
+            "N": self.size,
+            "shards": shards,
+        })
+        return written
+
     @classmethod
     def load(cls, path: str) -> "HNSWGraph":
         with open(os.path.join(path, "manifest.json")) as f:

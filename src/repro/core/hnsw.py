@@ -208,6 +208,97 @@ def select_neighbors_simple(
 # ------------------------------------------------------------ construction
 
 
+def _add_link(
+    X: np.ndarray,
+    nb: np.ndarray,
+    deg: np.ndarray,
+    l: int,
+    a: int,
+    b: int,
+    m_max: int,
+    metric: str,
+    heuristic: bool,
+    dirty: Optional[set] = None,
+) -> None:
+    """Append link a->b; shrink with the selection rule if over m_max.
+
+    ``dirty`` (when given) collects every node whose neighbor list this
+    call mutates — the delta-persistence witness for incremental inserts.
+    """
+    if dirty is not None:
+        dirty.add(int(a))
+    da = deg[l, a]
+    if da < m_max:
+        nb[l, a, da] = b
+        deg[l, a] = da + 1
+        return
+    cur = nb[l, a, :da]
+    cand_ids = np.concatenate([cur, [b]])
+    dists = pairwise_distance(X[cand_ids], X[a], metric)
+    cand = list(zip(dists.tolist(), cand_ids.tolist()))
+    if heuristic:
+        keep = select_neighbors_heuristic(X, X[a], cand, m_max, metric)
+    else:
+        keep = select_neighbors_simple(cand, m_max)
+    nb[l, a, : len(keep)] = keep
+    nb[l, a, len(keep) :] = PAD
+    deg[l, a] = len(keep)
+
+
+def _insert_point(
+    X: np.ndarray,
+    nb: np.ndarray,  # (L, N, 2M) int32, mutated in place
+    deg: np.ndarray,  # (L, N) int32, mutated in place
+    levels: np.ndarray,
+    i: int,
+    entry: int,
+    max_level: int,
+    M: int,
+    ef_construction: int,
+    metric: str,
+    heuristic: bool,
+    visited: _VisitedPool,
+    exclude: Optional[np.ndarray] = None,  # (N,) bool — never LINK to these
+    dirty: Optional[set] = None,
+) -> Tuple[int, int]:
+    """INSERT (HNSW Alg. 1) of one point against the current graph.
+
+    The single insert loop shared by offline construction
+    (:func:`build_hnsw`) and incremental insertion (:func:`insert_hnsw`)
+    — sharing it is what makes grow-by-add reproduce the offline build
+    bit-for-bit. ``exclude`` masks tombstoned nodes out of *link
+    selection* (a live corpus never links new nodes to deleted ones)
+    while still letting the construction search navigate through them.
+    Returns the possibly-updated ``(entry, max_level)``.
+    """
+    l_i = int(levels[i])
+    ep = entry
+    # greedy descent through layers above l_i
+    for lc in range(max_level, l_i, -1):
+        ep = greedy_closest_np(X, nb[lc], X[i], ep, metric)
+    eps = [ep]
+    for lc in range(min(l_i, max_level), -1, -1):
+        W = search_layer_np(
+            X, nb[lc], X[i], eps, ef_construction, metric, visited
+        )
+        cand = (
+            W if exclude is None
+            else [(d, e) for d, e in W if not exclude[e]]
+        )
+        m_max = 2 * M if lc == 0 else M
+        if heuristic:
+            sel = select_neighbors_heuristic(X, X[i], cand, M, metric)
+        else:
+            sel = select_neighbors_simple(cand, M)
+        for e in sel:
+            _add_link(X, nb, deg, lc, i, e, m_max, metric, heuristic, dirty)
+            _add_link(X, nb, deg, lc, e, i, m_max, metric, heuristic, dirty)
+        eps = [e for _, e in W]
+    if l_i > max_level:
+        return i, l_i
+    return entry, max_level
+
+
 def build_hnsw(
     X: np.ndarray,
     M: int = 16,
@@ -233,52 +324,88 @@ def build_hnsw(
     visited = _VisitedPool(N)
 
     entry, max_level = 0, int(levels[0])
-
-    def _add_link(l: int, a: int, b: int, m_max: int) -> None:
-        """Append link a->b; shrink with the selection rule if over m_max."""
-        da = deg[l, a]
-        if da < m_max:
-            nb[l, a, da] = b
-            deg[l, a] = da + 1
-            return
-        cur = nb[l, a, :da]
-        cand_ids = np.concatenate([cur, [b]])
-        dists = pairwise_distance(X[cand_ids], X[a], metric)
-        cand = list(zip(dists.tolist(), cand_ids.tolist()))
-        if heuristic:
-            keep = select_neighbors_heuristic(X, X[a], cand, m_max, metric)
-        else:
-            keep = select_neighbors_simple(cand, m_max)
-        nb[l, a, : len(keep)] = keep
-        nb[l, a, len(keep) :] = PAD
-        deg[l, a] = len(keep)
-
     for i in range(1, N):
-        l_i = int(levels[i])
-        ep = entry
-        # greedy descent through layers above l_i
-        for lc in range(max_level, l_i, -1):
-            ep = greedy_closest_np(X, nb[lc], X[i], ep, metric)
-        eps = [ep]
-        for lc in range(min(l_i, max_level), -1, -1):
-            W = search_layer_np(
-                X, nb[lc], X[i], eps, ef_construction, metric, visited
-            )
-            m_max = 2 * M if lc == 0 else M
-            if heuristic:
-                sel = select_neighbors_heuristic(X, X[i], W, M, metric)
-            else:
-                sel = select_neighbors_simple(W, M)
-            for e in sel:
-                _add_link(lc, i, e, m_max)
-                _add_link(lc, e, i, m_max)
-            eps = [e for _, e in W]
-        if l_i > max_level:
-            entry, max_level = i, l_i
-            g.entry_point, g.max_level = entry, max_level
-
+        entry, max_level = _insert_point(
+            X, nb, deg, levels, i, entry, max_level, M, ef_construction,
+            metric, heuristic, visited,
+        )
     g.entry_point, g.max_level = entry, max_level
     return g
+
+
+def insert_hnsw(
+    g: HNSWGraph,
+    X: np.ndarray,  # (N_total, d) — full payload INCLUDING the new rows
+    new_ids: Sequence[int],  # contiguous range [g.size, N_total)
+    levels_new: np.ndarray,  # (len(new_ids),) int32 — pre-sampled levels
+    ef_construction: int = 200,
+    heuristic: bool = True,
+    exclude: Optional[np.ndarray] = None,  # (N_total,) bool — tombstoned
+    restart_entry: bool = False,
+) -> Tuple[HNSWGraph, set]:
+    """Incremental INSERT of new points into an existing graph.
+
+    Runs exactly the per-point insert loop of :func:`build_hnsw`
+    (level sampling is the caller's job — the engine continues the
+    build-time level stream), so growing an index one ``add()`` at a
+    time reproduces the full offline build bit-for-bit when no deletes
+    intervene (tested in ``tests/test_mutation.py``). Bidirectional
+    link repair is the same ``_add_link`` shrink rule construction uses.
+
+    Returns ``(grown_graph, dirty)`` where ``dirty`` is the set of
+    PRE-EXISTING node ids whose neighbor lists changed — the rows a
+    delta save must rewrite (new rows land in appended shards).
+    The input graph's arrays are not aliased by the result.
+
+    ``restart_entry`` handles the fully-tombstoned graph: the first new
+    point becomes the entry (exactly how :func:`build_hnsw` seeds node
+    0 — inserted without a search, since there is nothing live to link
+    to) and the remaining points insert against it. Without it, inserts
+    into a dead graph would come out as disconnected singletons.
+    """
+    new_ids = np.asarray(new_ids, dtype=np.int64)
+    if new_ids.size == 0:
+        return g, set()
+    X = np.asarray(X, dtype=np.float32)
+    if int(new_ids[0]) != g.size or not np.all(np.diff(new_ids) == 1):
+        raise ValueError(
+            f"new_ids must be the contiguous range [{g.size}, "
+            f"{g.size + len(new_ids)}), got {new_ids[:4]}…"
+        )
+    n_total = g.size + len(new_ids)
+    if X.shape[0] != n_total:
+        raise ValueError(
+            f"X must hold all {n_total} rows (old + new), got {X.shape[0]}"
+        )
+    levels_new = np.asarray(levels_new, dtype=np.int32)
+    n_layers = max(g.n_layers, int(levels_new.max()) + 1)
+    neighbors = np.full(
+        (n_layers, n_total, g.max_degree), PAD, dtype=np.int32
+    )
+    neighbors[: g.n_layers, : g.size] = g.neighbors
+    levels = np.concatenate([g.levels, levels_new])
+    deg = (neighbors != PAD).sum(axis=2, dtype=np.int32)
+    visited = _VisitedPool(n_total)
+    dirty: set = set()
+    entry, max_level = int(g.entry_point), int(g.max_level)
+    start = 0
+    if restart_entry:
+        # dead graph: the first new point IS the new entry; max_level
+        # restarts at its level, so searches skip the dead top layers
+        entry, max_level = int(new_ids[0]), int(levels_new[0])
+        start = 1
+    for i in new_ids[start:]:
+        entry, max_level = _insert_point(
+            X, neighbors, deg, levels, int(i), entry, max_level, g.M,
+            ef_construction, g.metric, heuristic, visited,
+            exclude=exclude, dirty=dirty,
+        )
+    g2 = HNSWGraph(
+        neighbors=neighbors, levels=levels, entry_point=entry,
+        max_level=max_level, M=g.M, metric=g.metric,
+    )
+    dirty.difference_update(int(i) for i in new_ids)
+    return g2, dirty
 
 
 # ------------------------------------------------------------ knn search
@@ -311,13 +438,6 @@ def exact_search(
     return ids, d[ids].astype(np.float32)
 
 
-def recall_at_k(
-    X: np.ndarray, g: HNSWGraph, queries: np.ndarray, k: int, ef: int
-) -> float:
-    hits, total = 0, 0
-    for q in queries:
-        approx, _ = knn_search_np(X, g, q, k, ef)
-        exact, _ = exact_search(X, q, k, g.metric)
-        hits += len(set(approx.tolist()) & set(exact.tolist()))
-        total += k
-    return hits / max(total, 1)
+# recall_at_k lived here through PR 3 (duplicated with benchmarks/common).
+# The single consolidated implementation is repro.core.eval — import
+# recall_at_k / graph_recall_at_k / brute_force_topk from there.

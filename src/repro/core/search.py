@@ -123,10 +123,21 @@ class LookupFn(NamedTuple):
     fn: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]
 
 
-def make_state(ef: int, miss_cap: int, n: int) -> SearchState:
+def make_state(
+    ef: int, miss_cap: int, n: int,
+    tombstones: Optional[jnp.ndarray] = None,
+) -> SearchState:
+    """Fresh per-layer search state. ``tombstones`` ((n,) bool) pre-marks
+    deleted ids as visited — the single mechanism by which masked ids are
+    never seeded, never expanded, never pushed to the miss list, and
+    never returned (they can't enter the beam). See DESIGN.md §8."""
+    visited = (
+        jnp.zeros((n,), bool) if tombstones is None
+        else jnp.asarray(tombstones, bool)
+    )
     return SearchState(
         beam=beam_init(ef),
-        visited=jnp.zeros((n,), bool),
+        visited=visited,
         miss_ids=jnp.full((miss_cap,), -1, jnp.int32),
         miss_count=jnp.zeros((), jnp.int32),
         n_hops=jnp.zeros((), jnp.int32),
@@ -143,9 +154,13 @@ def seed_state(
 ) -> SearchState:
     """Enter a layer: probe entry points, merging hits into the beam and
     misses into L (entry points must be resolved before the phase loop —
-    the paper's inter-layer correctness requirement)."""
+    the paper's inter-layer correctness requirement). Entry ids already
+    visited in a FRESH state are tombstoned (make_state pre-marks them)
+    and are dropped here — a deleted entry point must never seed the
+    beam even if a stale caller passes it."""
     n = state.visited.shape[0]
     valid = entry_ids >= 0
+    valid = valid & ~state.visited[jnp.clip(entry_ids, 0, n - 1)]
     present, vecs = lookup(entry_ids)
     usable = valid & present
     dists = point_distance(vecs, q, metric)
@@ -266,15 +281,24 @@ def load_phase(
 # issues ONE tier-3 fetch per phase for the whole batch.
 
 
-def batch_make_state(batch: int, ef: int, miss_cap: int, n: int) -> SearchState:
-    """SearchState with a leading batch axis on every leaf."""
+def batch_make_state(
+    batch: int, ef: int, miss_cap: int, n: int,
+    tombstones: Optional[jnp.ndarray] = None,
+) -> SearchState:
+    """SearchState with a leading batch axis on every leaf. ``tombstones``
+    ((n,) bool) is broadcast to every query's visited set — see
+    :func:`make_state` for the exclusion mechanism."""
+    visited = (
+        jnp.zeros((batch, n), bool) if tombstones is None
+        else jnp.broadcast_to(jnp.asarray(tombstones, bool), (batch, n))
+    )
     return SearchState(
         beam=Beam(
             ids=jnp.full((batch, ef), -1, jnp.int32),
             dists=jnp.full((batch, ef), INF),
             explored=jnp.zeros((batch, ef), bool),
         ),
-        visited=jnp.zeros((batch, n), bool),
+        visited=visited,
         miss_ids=jnp.full((batch, miss_cap), -1, jnp.int32),
         miss_count=jnp.zeros((batch,), jnp.int32),
         n_hops=jnp.zeros((batch,), jnp.int32),
@@ -342,6 +366,7 @@ def search_layer_lazy_fused(
     max_phases: int = 256,
     eviction: int = 0,
     table_scales: Optional[jnp.ndarray] = None,  # (N,) — int8 payload
+    tombstones: Optional[jnp.ndarray] = None,  # (N,) bool — deleted ids
 ):
     """One layer of Algorithm 1 with the WHOLE phase loop in-graph.
 
@@ -372,7 +397,7 @@ def search_layer_lazy_fused(
     trig = trigger if trigger is not None else ef
     miss_cap = ef + neighbors_l.shape[1] + 1
 
-    state = make_state(ef, miss_cap, n)
+    state = make_state(ef, miss_cap, n, tombstones=tombstones)
     state = seed_state(
         state, q, entry_ids, lambda ids: cache_lookup(cache, ids), metric
     )
@@ -430,11 +455,15 @@ def lazy_knn_search_fused(
     eviction: int = 0,
     n_layers: Optional[int] = None,
     table_scales: Optional[jnp.ndarray] = None,
+    tombstones: Optional[jnp.ndarray] = None,
 ):
     """Whole lazy KNN query (all layers) as ONE jitted program.
 
     Returns (dists (k,), ids (k,), (n_db, n_fetched), cache').
     Result equality with the host-driven engine is enforced in tests.
+    ``tombstones`` masks deleted ids out of every layer's search
+    (pre-visited — see :func:`make_state`); the caller must pass a LIVE
+    entry point.
     """
     L = n_layers if n_layers is not None else neighbors.shape[0]
     n_db = jnp.int32(0)
@@ -445,12 +474,14 @@ def lazy_knn_search_fused(
         st, cache, db, fc = search_layer_lazy_fused(
             q, neighbors[lc], table, cache, entry_ids, 1, metric,
             eviction=eviction, table_scales=table_scales,
+            tombstones=tombstones,
         )
         n_db, n_fetch = n_db + db, n_fetch + fc
         entry_ids = st.beam.ids[:1]
     st, cache, db, fc = search_layer_lazy_fused(
         q, neighbors[0], table, cache, entry_ids, max(ef, k), metric,
         eviction=eviction, table_scales=table_scales,
+        tombstones=tombstones,
     )
     n_db, n_fetch = n_db + db, n_fetch + fc
     return st.beam.dists[:k], st.beam.ids[:k], (n_db, n_fetch), cache

@@ -41,6 +41,14 @@ from repro.core import quant
 
 VECTOR_SHARD_PREFIX = "vectors_s"
 VECTOR_SCALE_PREFIX = "vector_scales_s"
+TOMBSTONE_FILE = "tombstones.npy"
+
+# Manifest format versions: 1 = the PR 2/3 read-only artifact (implicit —
+# older manifests carry no key); 2 adds the mutation-lifecycle keys
+# (index_uuid, mutation_epoch, tombstones_file, level_seed/levels_drawn)
+# on top of a format that stays a strict superset of v1, so v1 readers
+# of the graph section keep working and v2 readers accept v1 artifacts.
+MANIFEST_FORMAT_VERSION = 2
 
 
 @runtime_checkable
@@ -191,6 +199,87 @@ class ShardedFileBackend:
         return 0.0  # real media: cost is measured (wall), not modeled
 
 
+class DeltaBackend:
+    """Mutable tier 3: a frozen base backend + appended in-memory rows.
+
+    The mutation lifecycle (DESIGN.md §8) never rewrites what a backend
+    already holds — the base (an mmap'd shard directory, an in-memory
+    array) stays immutable and ``append`` accumulates new rows host-side.
+    Fetches split by id range and ``vectors`` concatenates lazily (cached,
+    invalidated per append), so every consumer of the
+    :class:`StorageBackend` protocol — tiered store, rerank, fused path,
+    ``Index.save`` — is mutability-oblivious. ``engine.save`` persists
+    the appended rows as append-only delta shards.
+    """
+
+    def __init__(self, base: StorageBackend):
+        self.base = base
+        self._delta = np.zeros((0, base.dim), dtype=np.float32)
+        # geometric materialization buffer for `vectors`: the base is
+        # staged once, appended rows are filled in incrementally, so a
+        # stream of add() calls costs amortized O(rows added) — not a
+        # full re-concatenation (= full disk read on mmap bases) each
+        self._buf: Optional[np.ndarray] = None
+        self._n_mat = 0  # rows of _buf currently filled
+
+    @property
+    def n_base(self) -> int:
+        return self.base.n_items
+
+    @property
+    def n_items(self) -> int:
+        return self.base.n_items + self._delta.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.base.dim
+
+    @property
+    def vectors(self) -> np.ndarray:
+        n = self.n_items
+        nb = self.base.n_items
+        if self._buf is None:
+            cap = max(n + 8, n + n // 2)
+            self._buf = np.empty((cap, self.dim), dtype=np.float32)
+            self._buf[:nb] = self.base.vectors
+            self._n_mat = nb
+        if self._n_mat < n:
+            if n > self._buf.shape[0]:  # grow geometrically
+                cap = max(n, 2 * self._buf.shape[0])
+                buf = np.empty((cap, self.dim), dtype=np.float32)
+                buf[: self._n_mat] = self._buf[: self._n_mat]
+                self._buf = buf
+            self._buf[self._n_mat: n] = self._delta[self._n_mat - nb:]
+            self._n_mat = n
+        return self._buf[:n]
+
+    def append(self, rows: np.ndarray) -> np.ndarray:
+        """Append ``rows`` ((k, d) float32); returns their new ids."""
+        rows = np.atleast_2d(np.asarray(rows, dtype=np.float32))
+        if rows.shape[1] != self.dim:
+            raise ValueError(
+                f"appended rows have dim {rows.shape[1]}, backend "
+                f"holds dim {self.dim}"
+            )
+        start = self.n_items
+        self._delta = np.concatenate([self._delta, rows])
+        return np.arange(start, start + rows.shape[0], dtype=np.int64)
+
+    def fetch(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        nb = self.base.n_items
+        out = np.empty((len(ids), self.dim), np.float32)
+        in_base = ids < nb
+        if in_base.any():
+            out[in_base] = self.base.fetch(ids[in_base])
+        if (~in_base).any():
+            out[~in_base] = self._delta[ids[~in_base] - nb]
+        return out
+
+    def access_cost(self, n: int) -> float:
+        return self.base.access_cost(n)
+
+
 class LatencyModel:
     """Composable access-cost model over any backend (paper Fig. 3b).
 
@@ -290,6 +379,85 @@ def save_vector_shards(
         },
     )
     return shards
+
+
+def append_vector_shards(
+    path: str,
+    new_vectors: np.ndarray,
+    shard_bytes: int = 64 * 1024 * 1024,
+) -> int:
+    """Append-only delta persistence of new payload rows (DESIGN.md §8).
+
+    Writes ``new_vectors`` as additional ``vectors_s{s}.npy`` shards
+    continuing the manifest's existing ``vector_shards`` list — existing
+    shard files are NEVER rewritten. The delta is encoded at the
+    manifest's recorded ``vector_dtype`` (a directory holds exactly one
+    codec; the caller falls back to a full save on precision change).
+    Returns the bytes written.
+    """
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    shards = manifest["vector_shards"]
+    precision = quant.canonical_precision(
+        manifest.get("vector_dtype", "float32")
+    )
+    new_vectors = np.atleast_2d(np.asarray(new_vectors, dtype=np.float32))
+    if new_vectors.shape[1] != int(manifest["dim"]):
+        raise ValueError(
+            f"delta rows dim {new_vectors.shape[1]} != manifest dim "
+            f"{manifest['dim']}"
+        )
+    start0 = int(shards[-1]["stop"]) if shards else 0
+    row_bytes = quant.bytes_per_vector(new_vectors.shape[1], precision)
+    rows_per_shard = max(1, shard_bytes // max(1, row_bytes))
+    written = 0
+    s_idx = len(shards)
+    for off in range(0, new_vectors.shape[0], rows_per_shard):
+        chunk = new_vectors[off: off + rows_per_shard]
+        fn = f"{VECTOR_SHARD_PREFIX}{s_idx}.npy"
+        payload, scales = quant.quantize_np(chunk, precision)
+        np.save(os.path.join(path, fn), payload)
+        written += os.path.getsize(os.path.join(path, fn))
+        entry = {
+            "file": fn,
+            "start": start0 + off,
+            "stop": start0 + off + chunk.shape[0],
+        }
+        if precision == "int8":
+            sfn = f"{VECTOR_SCALE_PREFIX}{s_idx}.npy"
+            np.save(os.path.join(path, sfn), scales)
+            written += os.path.getsize(os.path.join(path, sfn))
+            entry["scales_file"] = sfn
+        shards.append(entry)
+        s_idx += 1
+    update_manifest(path, {"vector_shards": shards})
+    return written
+
+
+def save_tombstones(path: str, tombstones: np.ndarray) -> int:
+    """Persist the tombstone set as one small id-list file + manifest key.
+
+    ``tombstones`` is the engine's (N,) bool mask; stored as the sorted
+    int64 id list (tiny, rewritten whole on every save — it is the one
+    mutation-lifecycle file that is not append-only). Returns bytes
+    written.
+    """
+    ids = np.nonzero(np.asarray(tombstones, bool))[0].astype(np.int64)
+    fp = os.path.join(path, TOMBSTONE_FILE)
+    np.save(fp, ids)
+    update_manifest(path, {"tombstones_file": TOMBSTONE_FILE})
+    return os.path.getsize(fp)
+
+
+def load_tombstones(path: str, manifest: dict, n_items: int) -> np.ndarray:
+    """Tombstone mask ((n_items,) bool) from a manifest; absent = none."""
+    mask = np.zeros(n_items, dtype=bool)
+    fn = manifest.get("tombstones_file")
+    if fn:
+        ids = np.load(os.path.join(path, fn))
+        mask[ids[ids < n_items]] = True
+    return mask
 
 
 def update_manifest(path: str, extra: dict) -> dict:

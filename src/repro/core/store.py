@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import quant
 from repro.core.storage import (  # noqa: F401  (re-exported, DESIGN.md §6)
+    DeltaBackend,
     InMemoryBackend,
     LatencyModel,
     ShardedFileBackend,
@@ -160,6 +161,52 @@ def cache_insert_batch(
     return cache_insert(
         cache, ids.reshape(B * k), vecs.reshape(B * k, -1), policy=policy
     )
+
+
+@jax.jit
+def cache_evict(cache: CacheState, ids: jnp.ndarray) -> CacheState:
+    """Drop ``ids`` from tier 2 (delete/upsert invalidation). Jittable.
+
+    Clears both directions of the id↔slot map so ``cache_lookup`` can
+    never serve a tombstoned row again; freed slots get a zeroed LRU
+    stamp (stalest possible → reclaimed first). The slab row itself is
+    left as garbage — unreachable once unmapped, same contract as a
+    ring-wrap eviction. Absent / -1 ids are no-ops.
+    """
+    n = cache.slot_of.shape[0]
+    cap = cache.capacity
+    safe_ids = jnp.clip(ids, 0, n - 1)
+    slots = cache.slot_of[safe_ids]
+    safe_slots = jnp.clip(slots, 0, cap - 1)
+    # only clear slots whose mapping is current (id_of cross-check),
+    # mirroring cache_lookup's staleness guard
+    ok = (ids >= 0) & (slots >= 0) & (cache.id_of[safe_slots] == ids)
+    id_of = cache.id_of.at[jnp.where(ok, slots, cap)].set(-1, mode="drop")
+    last_used = cache.last_used.at[jnp.where(ok, slots, cap)].set(
+        0, mode="drop"
+    )
+    slot_of = cache.slot_of.at[jnp.where(ids >= 0, ids, n)].set(
+        -1, mode="drop"
+    )
+    return dataclasses.replace(
+        cache, slot_of=slot_of, id_of=id_of, last_used=last_used
+    )
+
+
+def cache_grow(cache: CacheState, n_items: int) -> CacheState:
+    """Extend the id space of ``slot_of`` to ``n_items`` (new ids start
+    absent). Capacity/slab are untouched — adding corpus rows does not
+    resize tier 2. The (N,) shape is part of the jit trace signature,
+    so the first query after a grow re-traces (documented §8)."""
+    extra = int(n_items) - cache.slot_of.shape[0]
+    if extra < 0:
+        raise ValueError("cache id space cannot shrink")
+    if extra == 0:
+        return cache
+    slot_of = jnp.concatenate(
+        [cache.slot_of, jnp.full((extra,), -1, jnp.int32)]
+    )
+    return dataclasses.replace(cache, slot_of=slot_of)
 
 
 def cache_touch(cache: CacheState, ids: jnp.ndarray) -> CacheState:
@@ -319,6 +366,28 @@ class ExternalStore:
         """The storage medium itself, LatencyModel wrappers stripped."""
         return unwrap_backend(self.backend)
 
+    def append(self, rows: np.ndarray) -> np.ndarray:
+        """Append payload rows for the mutation lifecycle (DESIGN.md §8).
+
+        On first use the storage medium is wrapped in a
+        :class:`DeltaBackend` *inside* any LatencyModel chain, so the
+        cost model keeps covering every fetch while the medium itself
+        stays frozen. Appends are init-stage work (not a query-time
+        access), so no counters move. Returns the new rows' ids.
+        """
+        base = self.base_backend
+        if not isinstance(base, DeltaBackend):
+            delta = DeltaBackend(base)
+            b = self.backend
+            if isinstance(b, LatencyModel):
+                while isinstance(b.inner, LatencyModel):
+                    b = b.inner
+                b.inner = delta
+            else:
+                self.backend = delta
+            base = delta
+        return base.append(rows)
+
     @property
     def vectors(self) -> np.ndarray:
         """Full payload, materialized (init-stage all-in-one load)."""
@@ -431,6 +500,17 @@ class TieredStore:
 
     def lookup(self, ids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return cache_lookup(self.cache, ids)
+
+    def invalidate(self, ids: np.ndarray) -> None:
+        """Evict ``ids`` from tier 2 (delete/upsert invalidation)."""
+        ids = np.asarray(ids, dtype=np.int32)
+        self.cache = cache_evict(
+            self.cache, jnp.asarray(self._pad_pow2(ids))
+        )
+
+    def grow(self, n_items: int) -> None:
+        """Extend the cache's id space after corpus rows were appended."""
+        self.cache = cache_grow(self.cache, n_items)
 
     # floor of the padded-shape buckets: with a bare next-pow2 bucket
     # every novel small miss-union size (1, 2, 3→4, 5→8, …) compiled its

@@ -21,7 +21,7 @@ from repro.core.cache_opt import (
     QueryTestStats,
     optimize_memory_size,
 )
-from repro.core.engine import SearchRequest, WebANNSEngine
+from repro.core.engine import MutationResult, SearchRequest, WebANNSEngine
 
 
 @dataclasses.dataclass
@@ -50,6 +50,29 @@ class RAGPipeline:
         self.generate_fn = generate_fn
         self.k = k
         self.ef = ef
+
+    def add_documents(self, texts: List[str]) -> MutationResult:
+        """Ingest new documents into the LIVE corpus (DESIGN.md §8):
+        embed, insert into the index incrementally (no rebuild), store
+        the texts under the new ids. The next ``retrieve`` can return
+        them immediately."""
+        if not texts:
+            return self.engine.add(np.zeros((0, self.engine.dim)))
+        vecs = np.stack([self.embed_fn(t) for t in texts])
+        return self.engine.add(vecs, texts=list(texts))
+
+    def remove_documents(self, ids) -> MutationResult:
+        """Forget documents (GDPR-style deletion): tombstones the ids so
+        no retrieval — including in-flight batches' follow-ups — can
+        surface them again; their texts are never returned either since
+        lookups key off retrieved ids."""
+        return self.engine.delete(ids)
+
+    def update_documents(self, ids, texts: List[str]) -> MutationResult:
+        """Replace documents: re-embed and upsert (old ids tombstoned,
+        replacements live under the returned fresh ids)."""
+        vecs = np.stack([self.embed_fn(t) for t in texts])
+        return self.engine.upsert(ids, vecs, texts=list(texts))
 
     def retrieve(self, query: str) -> Tuple[np.ndarray, List, object]:
         qv = self.embed_fn(query)

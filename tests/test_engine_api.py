@@ -121,6 +121,37 @@ def test_query_shim_matches_search(small_dataset, small_graph):
     assert isinstance(stats, QueryStats)
 
 
+def test_shims_emit_exactly_one_warning_per_call_with_milestone(
+    small_dataset, small_graph
+):
+    """The deprecation contract: each tuple-shim call emits EXACTLY one
+    DeprecationWarning (no double-emission through the search() core),
+    and the message names the concrete removal milestone (v0.6)."""
+    import warnings
+
+    X, Q = small_dataset
+    eng = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=128))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng.query(Q[0], k=3, ef=32)
+    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(r.message) for r in dep]
+    assert "v0.6" in str(dep[0].message)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng.query_batch(Q[:2], k=3, ef=32)
+    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(r.message) for r in dep]
+    assert "v0.6" in str(dep[0].message)
+    # two calls → two warnings: the shim never suppresses repeats itself
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng.query(Q[0], k=3, ef=32)
+        eng.query(Q[1], k=3, ef=32)
+    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)]
+    assert len(dep) == 2
+
+
 def test_query_batch_shim_matches_search(small_dataset, small_graph):
     X, Q = small_dataset
     eng = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=128))

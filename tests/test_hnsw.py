@@ -4,12 +4,12 @@ import numpy as np
 import pytest
 
 from repro.core.graph import PAD, HNSWGraph
+from repro.core.eval import graph_recall_at_k
 from repro.core.hnsw import (
     build_hnsw,
     exact_search,
     knn_search_np,
     pairwise_distance,
-    recall_at_k,
     search_layer_np,
     select_neighbors_heuristic,
     select_neighbors_simple,
@@ -44,14 +44,14 @@ def test_links_are_mostly_bidirectional(small_graph):
 
 def test_recall_random_data(small_dataset, small_graph):
     X, Q = small_dataset
-    r = recall_at_k(X, small_graph, Q, k=10, ef=64)
+    r = graph_recall_at_k(X, small_graph, Q, k=10, ef=64)
     assert r > 0.85, f"recall {r}"
 
 
 def test_recall_clustered_data(clustered_dataset):
     X, Q = clustered_dataset
     g = build_hnsw(X, M=8, ef_construction=60, seed=0)
-    r = recall_at_k(X, g, Q, k=10, ef=64)
+    r = graph_recall_at_k(X, g, Q, k=10, ef=64)
     assert r > 0.9, f"recall {r}"
 
 

@@ -1,0 +1,439 @@
+"""Mutation lifecycle (DESIGN.md §8): incremental insertion parity,
+tombstone exclusion across all three drivers (and under quantized
+rerank), id-reuse rules, cache invalidation, and delta-shard
+persistence round trips."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    EngineConfig,
+    MutationResult,
+    SearchRequest,
+    WebANNSEngine,
+)
+from repro.core.graph import random_levels
+from repro.core.hnsw import build_hnsw, insert_hnsw
+from repro.core.storage import DeltaBackend, InMemoryBackend
+from repro.core.store import cache_lookup
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(42)
+    X = rng.standard_normal((500, 24)).astype(np.float32)
+    X2 = rng.standard_normal((80, 24)).astype(np.float32)
+    Q = rng.standard_normal((8, 24)).astype(np.float32)
+    return X, X2, Q
+
+
+def _build(X, cfg=None, **kw):
+    return WebANNSEngine.build(
+        X, M=8, ef_construction=48, seed=7,
+        config=cfg or EngineConfig(cache_capacity=128), **kw,
+    )
+
+
+# --------------------------------------------- incremental insert parity
+
+
+def test_level_stream_prefix_property():
+    """random_levels over a continued stream == one long draw — the
+    property the engine's add() relies on for build parity."""
+    rng_a = np.random.default_rng(7)
+    full = random_levels(120, 8, rng_a)
+    rng_b = np.random.default_rng(7)
+    head = random_levels(90, 8, rng_b)
+    tail = random_levels(30, 8, rng_b)
+    np.testing.assert_array_equal(full, np.concatenate([head, tail]))
+    # the O(1) skip-ahead the engine actually uses: PCG64.advance(k)
+    # lands exactly where generating-and-discarding k doubles would
+    bg = np.random.PCG64(7)
+    bg.advance(90)
+    skipped = random_levels(30, 8, np.random.Generator(bg))
+    np.testing.assert_array_equal(skipped, tail)
+
+
+def test_insert_hnsw_matches_offline_build(corpus):
+    X, X2, _ = corpus
+    Xall = np.concatenate([X, X2])
+    rng = np.random.default_rng(7)
+    levels = random_levels(len(Xall), 8, rng)
+    g0 = build_hnsw(X, M=8, ef_construction=48, levels=levels[: len(X)])
+    g1, dirty = insert_hnsw(
+        g0, Xall, np.arange(len(X), len(Xall)), levels[len(X):],
+        ef_construction=48,
+    )
+    fresh = build_hnsw(Xall, M=8, ef_construction=48, levels=levels)
+    np.testing.assert_array_equal(g1.neighbors, fresh.neighbors)
+    np.testing.assert_array_equal(g1.levels, fresh.levels)
+    assert g1.entry_point == fresh.entry_point
+    assert g1.max_level == fresh.max_level
+    assert dirty and all(d < len(X) for d in dirty)
+    # the input graph was not mutated in place
+    assert g0.size == len(X)
+
+
+def test_insert_hnsw_rejects_non_contiguous_ids(corpus):
+    X, X2, _ = corpus
+    g = build_hnsw(X, M=8, ef_construction=48, seed=7)
+    with pytest.raises(ValueError, match="contiguous"):
+        insert_hnsw(g, np.concatenate([X, X2]),
+                    [len(X) + 1], np.zeros(1, np.int32))
+
+
+def test_engine_add_matches_fresh_build_all_drivers(corpus):
+    """Acceptance: an engine grown by add() returns bit-identical
+    results to a fresh Index.build over the same corpus in all three
+    drivers (the level stream continues the offline build's RNG)."""
+    X, X2, Q = corpus
+    Xall = np.concatenate([X, X2])
+    for mode in ("loop", "batched", "fused"):
+        cfg = EngineConfig(cache_capacity=128, fused=(mode == "fused"))
+        grown = _build(X, cfg)
+        res = grown.add(X2)
+        assert isinstance(res, MutationResult)
+        np.testing.assert_array_equal(
+            res.ids, np.arange(len(X), len(Xall)))
+        fresh = _build(Xall, cfg)
+        np.testing.assert_array_equal(
+            grown.graph.neighbors, fresh.graph.neighbors)
+        if mode == "fused":
+            for q in Q[:4]:
+                a = grown.search(SearchRequest(query=q, k=6, ef=48))
+                b = fresh.search(SearchRequest(query=q, k=6, ef=48))
+                np.testing.assert_array_equal(a.ids, b.ids)
+                np.testing.assert_array_equal(a.dists, b.dists)
+        else:
+            req = SearchRequest(query=Q, k=6, ef=48, batch_mode=mode)
+            a, b = grown.search(req), fresh.search(req)
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_array_equal(a.dists, b.dists)
+
+
+# ------------------------------------------------- tombstone exclusion
+
+
+@pytest.mark.parametrize("mode", ["loop", "batched", "fused"])
+def test_deleted_ids_never_returned(corpus, mode):
+    X, _, Q = corpus
+    cfg = EngineConfig(cache_capacity=128, fused=(mode == "fused"))
+    eng = _build(X, cfg)
+    # delete the current top hits — the hardest ids to keep out
+    top = eng.search(SearchRequest(query=Q[0], k=10, ef=64)).ids
+    victims = set(top[:5].tolist())
+    eng.delete(np.array(sorted(victims)))
+    if mode == "fused":
+        ids = np.concatenate([
+            eng.search(SearchRequest(query=q, k=10, ef=64)).ids for q in Q
+        ])
+    else:
+        ids = np.asarray(eng.search(SearchRequest(
+            query=Q, k=10, ef=64, batch_mode=mode)).ids).ravel()
+    assert not victims & set(ids.tolist())
+
+
+@pytest.mark.parametrize("precision", ["int8", "float16"])
+def test_deleted_ids_never_returned_under_rerank(corpus, precision):
+    """The exact-rerank pass re-fetches candidates from tier 3 — it must
+    never resurrect a tombstoned id (it can't: the pool comes from the
+    masked beam). Covers single, batched, and fused rerank paths."""
+    X, _, Q = corpus
+    for fused in (False, True):
+        cfg = EngineConfig(cache_capacity=128, precision=precision,
+                           rerank_alpha=2.0, fused=fused)
+        eng = _build(X, cfg)
+        top = eng.search(SearchRequest(query=Q[0], k=10, ef=64)).ids
+        victims = set(top[:4].tolist())
+        eng.delete(np.array(sorted(victims)))
+        single = np.concatenate([
+            eng.search(SearchRequest(query=q, k=10, ef=64)).ids for q in Q
+        ])
+        assert not victims & set(single.tolist())
+        if not fused:
+            batched = np.asarray(eng.search(SearchRequest(
+                query=Q, k=10, ef=64)).ids).ravel()
+            assert not victims & set(batched.tolist())
+
+
+def test_delete_keeps_live_results_sane(corpus):
+    """Post-delete recall over the live set stays high: the masked
+    search must route around tombstones, not truncate."""
+    from repro.core.eval import brute_force_topk, recall_at_k
+
+    X, _, Q = corpus
+    eng = _build(X)
+    rng = np.random.default_rng(3)
+    dead = rng.choice(len(X), 50, replace=False)
+    eng.delete(dead)
+    live = np.setdiff1d(np.arange(len(X)), dead)
+    truth = live[brute_force_topk(X[live], Q, 10)]
+    preds = np.asarray(
+        eng.search(SearchRequest(query=Q, k=10, ef=64)).ids)
+    assert recall_at_k(preds, truth) > 0.8
+
+
+def test_cache_lookup_never_serves_tombstoned(corpus):
+    X, _, Q = corpus
+    eng = _build(X)
+    victim = int(eng.search(SearchRequest(query=Q[0], k=1, ef=32)).ids[0])
+    eng.warm_cache(np.array([victim]))
+    present, _ = cache_lookup(eng.store.cache,
+                              jnp.asarray([victim], jnp.int32))
+    assert bool(np.asarray(present)[0])  # warm: it IS cached
+    eng.delete([victim])
+    present, _ = cache_lookup(eng.store.cache,
+                              jnp.asarray([victim], jnp.int32))
+    assert not bool(np.asarray(present)[0])  # evicted on delete
+    eng.warm_cache()  # re-warm must not re-stage it
+    present, _ = cache_lookup(eng.store.cache,
+                              jnp.asarray([victim], jnp.int32))
+    assert not bool(np.asarray(present)[0])
+
+
+def test_delete_entry_point_repairs_to_live_node(corpus):
+    X, _, Q = corpus
+    eng = _build(X)
+    old_entry = eng.graph.entry_point
+    eng.delete([old_entry])
+    assert eng.graph.entry_point != old_entry
+    assert not eng.tombstones[eng.graph.entry_point]
+    r = eng.search(SearchRequest(query=Q[0], k=5, ef=48))
+    assert (r.ids >= 0).all() and old_entry not in r.ids.tolist()
+
+
+def test_delete_all_then_revive(corpus):
+    X, X2, Q = corpus
+    eng = _build(X)
+    eng.delete(np.arange(len(X)))
+    assert eng.n_live == 0
+    r = eng.search(SearchRequest(query=Q[0], k=5))
+    assert (r.ids == -1).all()
+    rb = eng.search(SearchRequest(query=Q[:3], k=5))
+    assert (np.asarray(rb.ids) == -1).all()
+    m = eng.add(X2[:6])
+    r = eng.search(SearchRequest(query=Q[0], k=3, ef=16))
+    assert (r.ids >= 0).all()
+    assert set(r.ids.tolist()) <= set(m.ids.tolist())
+
+
+# ------------------------------------------------------- id-reuse rules
+
+
+def test_add_delete_add_never_reuses_ids(corpus):
+    X, X2, _ = corpus
+    eng = _build(X)
+    first = eng.add(X2[:10])
+    np.testing.assert_array_equal(
+        first.ids, np.arange(len(X), len(X) + 10))
+    eng.delete(first.ids[:5])
+    second = eng.add(X2[10:20])
+    # deleted ids stay dead; new ids continue monotonically
+    np.testing.assert_array_equal(
+        second.ids, np.arange(len(X) + 10, len(X) + 20))
+    assert second.n_total == len(X) + 20
+    assert second.n_live == len(X) + 15
+    assert eng.tombstones[first.ids[:5]].all()
+
+
+def test_upsert_returns_fresh_ids_and_moves_vector(corpus):
+    X, _, Q = corpus
+    eng = _build(X)
+    target = int(eng.search(SearchRequest(query=Q[1], k=1, ef=48)).ids[0])
+    far = X[target] + 100.0  # move the row far away from the query
+    res = eng.upsert([target], far[None])
+    assert res.deleted.tolist() == [target]
+    assert res.ids.tolist() == [len(X)]
+    assert res.n_total == len(X) + 1 and res.n_live == len(X)
+    ids = eng.search(SearchRequest(query=Q[1], k=10, ef=64)).ids
+    assert target not in ids.tolist()
+    # the replacement IS retrievable at its new position
+    hit = eng.search(SearchRequest(query=far, k=1, ef=48)).ids
+    assert hit.tolist() == [len(X)]
+
+
+def test_upsert_count_mismatch_raises(corpus):
+    X, _, _ = corpus
+    eng = _build(X)
+    with pytest.raises(ValueError, match="counts must match"):
+        eng.upsert([1, 2], X[:3])
+
+
+def test_add_dim_mismatch_raises(corpus):
+    X, _, _ = corpus
+    eng = _build(X)
+    with pytest.raises(ValueError, match="dim"):
+        eng.add(np.zeros((2, 7), np.float32))
+
+
+def test_delete_out_of_range_raises(corpus):
+    X, _, _ = corpus
+    eng = _build(X)
+    with pytest.raises(ValueError, match="out of range"):
+        eng.delete([len(X)])
+
+
+# --------------------------------------------------- delta backend unit
+
+
+def test_delta_backend_fetch_spans_base_and_delta():
+    base = InMemoryBackend(np.arange(12, dtype=np.float32).reshape(6, 2))
+    d = DeltaBackend(base)
+    ids = d.append(np.full((2, 2), 99.0, np.float32))
+    np.testing.assert_array_equal(ids, [6, 7])
+    out = d.fetch(np.array([0, 6, 5, 7]))
+    np.testing.assert_array_equal(out[0], base.vectors[0])
+    np.testing.assert_array_equal(out[2], base.vectors[5])
+    assert (out[[1, 3]] == 99.0).all()
+    assert d.n_items == 8 and d.vectors.shape == (8, 2)
+
+
+# ------------------------------------------- delta persistence round trip
+
+
+@pytest.mark.parametrize("precision", ["float32", "int8"])
+def test_delta_save_appends_only_and_reopens_identically(
+    tmp_path, corpus, precision
+):
+    """Acceptance: after an add/delete/upsert sequence, save writes only
+    delta shards + tombstones (base vector shards untouched), and the
+    reopened engine is bit-identical to the live mutated one in all
+    three drivers, with tombstoned ids absent everywhere."""
+    X, X2, Q = corpus
+    path = str(tmp_path / "idx")
+    cfg = EngineConfig(cache_capacity=128, precision=precision)
+    eng = _build(X, cfg)
+    info = eng.save(path, shard_bytes=1 << 14)
+    assert info["mode"] == "full" and info["epoch"] == 0
+    base_vec_files = {
+        f: (os.path.getmtime(os.path.join(path, f)),
+            os.path.getsize(os.path.join(path, f)))
+        for f in os.listdir(path)
+        if f.startswith("vectors_s") or f.startswith("vector_scales_s")
+    }
+    assert base_vec_files
+    # mutate: add, delete (incl. some hot ids), upsert
+    eng.add(X2)
+    victims = eng.search(SearchRequest(query=Q[0], k=6, ef=64)).ids[:3]
+    eng.delete(victims)
+    up = eng.upsert([5, 11], X2[:2] * 0.5)
+    info2 = eng.save(path, shard_bytes=1 << 14)
+    assert info2["mode"] == "delta" and info2["epoch"] == 1
+    # append-only contract: every base vector shard is byte-untouched
+    for f, (mtime, size) in base_vec_files.items():
+        assert os.path.getmtime(os.path.join(path, f)) == mtime, f
+        assert os.path.getsize(os.path.join(path, f)) == size, f
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    assert manifest["format_version"] == 2
+    assert manifest["mutation_epoch"] == 1
+    assert manifest["tombstones_file"] == "tombstones.npy"
+    stops = [s["stop"] for s in manifest["vector_shards"]]
+    assert stops[-1] == eng.n  # delta shards cover the appended rows
+    # reopen: bit-identical to the live mutated engine, all drivers.
+    # For int8 the comparison engine's tier 3 must hold what int8 shards
+    # actually serve — the dequantized payload (the save() docstring's
+    # documented trade); re-quantization stability makes everything
+    # downstream of tier 3 identical from there.
+    from repro.core import quant
+    from repro.core.index import Index
+
+    idx = eng.index
+    if precision == "int8":
+        payload, scales = quant.quantize_np(eng.external.vectors, "int8")
+        idx = Index(
+            graph=eng.graph,
+            backend=InMemoryBackend(quant.dequantize_np(payload, scales)),
+            tombstones=eng.tombstones,
+        )
+    for mode in ("loop", "batched", "fused"):
+        mcfg = EngineConfig(cache_capacity=128, precision=precision,
+                            fused=(mode == "fused"))
+        mem = WebANNSEngine(idx, config=mcfg)
+        disk = WebANNSEngine.open(path, config=mcfg)
+        assert disk.n_live == eng.n_live
+        dead = set(np.nonzero(eng.tombstones)[0].tolist())
+        if mode == "fused":
+            for q in Q[:4]:
+                a = mem.search(SearchRequest(query=q, k=6, ef=48))
+                b = disk.search(SearchRequest(query=q, k=6, ef=48))
+                np.testing.assert_array_equal(a.ids, b.ids)
+                np.testing.assert_array_equal(a.dists, b.dists)
+                assert not dead & set(b.ids.tolist())
+        else:
+            req = SearchRequest(query=Q, k=6, ef=48, batch_mode=mode)
+            a, b = mem.search(req), disk.search(req)
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_array_equal(a.dists, b.dists)
+            assert not dead & set(np.asarray(b.ids).ravel().tolist())
+    assert up.ids[0] not in dead
+
+
+def test_reopened_engine_continues_level_stream(tmp_path, corpus):
+    """add() after save→open keeps matching the fresh offline build:
+    the level-stream state AND the insertion hyperparameters survive
+    the manifest round trip."""
+    X, X2, Q = corpus
+    path = str(tmp_path / "idx")
+    eng = _build(X)
+    eng.save(path)
+    re = WebANNSEngine.open(path, config=EngineConfig(cache_capacity=128))
+    assert re.insert_ef_construction == 48  # restored from the manifest
+    re.add(X2)
+    fresh = _build(np.concatenate([X, X2]))
+    np.testing.assert_array_equal(
+        re.graph.neighbors, fresh.graph.neighbors)
+    req = SearchRequest(query=Q, k=6, ef=48)
+    np.testing.assert_array_equal(
+        re.search(req).ids, fresh.search(req).ids)
+
+
+def test_save_to_new_path_is_full_save(tmp_path, corpus):
+    X, X2, _ = corpus
+    p1, p2 = str(tmp_path / "a"), str(tmp_path / "b")
+    eng = _build(X)
+    assert eng.save(p1)["mode"] == "full"
+    eng.add(X2[:5])
+    assert eng.save(p2)["mode"] == "full"  # different dir: new lineage
+    assert eng.save(p2)["mode"] == "delta"  # now it's the lineage dir
+
+
+def test_delta_save_smaller_than_full_save(tmp_path, corpus):
+    """The economics the lifecycle exists for: persisting a small
+    mutation writes far fewer bytes than re-saving the index."""
+    X, X2, _ = corpus
+    path = str(tmp_path / "idx")
+    eng = _build(X)
+    full = eng.save(path, shard_bytes=1 << 14)
+    eng.add(X2[:8])
+    eng.delete([2, 3])
+    delta = eng.save(path, shard_bytes=1 << 14)
+    assert delta["mode"] == "delta"
+    assert delta["bytes_written"] < 0.5 * full["bytes_written"]
+
+
+# ----------------------------------------------------------- RAG surface
+
+
+def test_rag_add_remove_update_documents(corpus):
+    X, _, _ = corpus
+    rng = np.random.default_rng(9)
+    texts = [f"doc {i}" for i in range(len(X))]
+    eng = _build(X, texts=texts)
+
+    def embed(t):
+        return np.asarray(rng.standard_normal(X.shape[1]), np.float32)
+
+    from repro.serve.rag import RAGPipeline
+
+    pipe = RAGPipeline(eng, embed, lambda q, ts: np.zeros(4, np.int32), k=3)
+    added = pipe.add_documents(["fresh A", "fresh B"])
+    assert eng.get_texts(added.ids) == ["fresh A", "fresh B"]
+    removed = pipe.remove_documents(added.ids[:1])
+    assert removed.deleted.tolist() == [added.ids[0]]
+    updated = pipe.update_documents([0], ["rewritten"])
+    assert 0 in updated.deleted.tolist()
+    assert eng.get_texts(updated.ids) == ["rewritten"]

@@ -240,7 +240,7 @@ def small_index():
 
 
 def _recall10(X, ids_batch, Q):
-    from benchmarks.common import brute_force_topk, recall_at_k
+    from repro.core.eval import brute_force_topk, recall_at_k
 
     return recall_at_k(ids_batch, brute_force_topk(X, Q, 10))
 
