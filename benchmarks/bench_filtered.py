@@ -1,0 +1,179 @@
+"""Metadata-filtered search benchmark (DESIGN.md §9).
+
+Sweeps filter selectivity ∈ {1.0, 0.5, 0.1, 0.01} over the batched
+driver and reports, per selectivity:
+
+- **recall@10 vs the brute-force-filtered oracle** — the number the
+  route-but-don't-return design plus the selectivity-adaptive ef boost
+  must hold up as filters tighten;
+- **effective ef** (the boost the engine actually applied);
+- **latency** (p50/p99 per batched call) and **n_db/query** — filtered
+  vs an unfiltered run at the SAME effective ef, whose access counts
+  must match exactly (filtering is free at the tier-3 boundary).
+
+    PYTHONPATH=src python -m benchmarks.bench_filtered [--assert-parity]
+
+Results land in ``reports/BENCH_filtered.json`` (a CI artifact);
+``--assert-parity`` additionally fails unless (a) every filtered id
+satisfies its filter, (b) recall@10 ≥ 0.95 at selectivity ≥ 0.1, and
+(c) the filtered run's tier-3 access count equals the matched
+unfiltered run's — the CI filtered-search smoke.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.common import (IDB_T_PER_ITEM, IDB_T_SETUP, get_dataset,
+                               queries_for)
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
+from repro.core.eval import brute_force_topk, recall_at_k
+from repro.core.metadata import Filter
+
+BENCH_JSON = os.path.join("reports", "BENCH_filtered.json")
+
+# selectivity → an eq/in_ predicate over a 100-bucket uniform column
+SELECTIVITIES = (1.0, 0.5, 0.1, 0.01)
+
+
+def _filter_for(sel: float) -> Optional[Filter]:
+    if sel >= 1.0:
+        return None
+    n_buckets = max(1, round(sel * 100))
+    if n_buckets == 1:
+        return Filter.eq("bucket", 0)
+    return Filter.in_("bucket", list(range(n_buckets)))
+
+
+def _timed_batches(eng, Q, k, ef, batch_size, filt):
+    starts = list(range(0, len(Q) - batch_size + 1, batch_size))
+    preds: List[np.ndarray] = []
+    for lo in starts:  # warm-up pass owns the compiles
+        preds.append(np.asarray(eng.search(SearchRequest(
+            query=Q[lo:lo + batch_size], k=k, ef=ef, filter=filt)).ids))
+    eng.store.resize(eng.store.capacity)  # re-cold, keep jit warm
+    eng.external.stats.reset()
+    lat: List[float] = []
+    for lo in starts:
+        t0 = time.perf_counter()
+        eng.search(SearchRequest(
+            query=Q[lo:lo + batch_size], k=k, ef=ef, filter=filt))
+        lat.append(time.perf_counter() - t0)
+    n_db = eng.external.stats.n_db
+    return np.concatenate(preds), lat, n_db
+
+
+def bench_filtered(
+    dataset: str = "arxiv-1k",
+    n_queries: int = 32,
+    batch_size: int = 8,
+    k: int = 10,
+    ef: int = 64,
+    cache_ratio: float = 0.25,
+    json_path: Optional[str] = BENCH_JSON,
+    assert_parity: bool = False,
+    seed: int = 0,
+) -> dict:
+    X = get_dataset(dataset)
+    Q = queries_for(X, n_queries)
+    rng = np.random.default_rng(seed)
+    bucket = rng.integers(0, 100, len(X))  # uniform → sel = buckets/100
+    cap = max(16, int(len(X) * cache_ratio))
+    cfg = EngineConfig(cache_capacity=cap, t_setup=IDB_T_SETUP,
+                       t_per_item=IDB_T_PER_ITEM)
+    eng = WebANNSEngine.build(X, M=12, ef_construction=80, config=cfg,
+                              seed=seed, metadata={"bucket": bucket})
+
+    sweeps = []
+    for sel in SELECTIVITIES:
+        filt = _filter_for(sel)
+        allow = (np.ones(len(X), bool) if filt is None
+                 else filt.mask(eng.metadata))
+        sel_actual = float(allow.mean())
+        ef_eff = eng._boost_ef(ef, sel_actual) if filt is not None else ef
+        preds, lat, n_db = _timed_batches(eng, Q, k, ef, batch_size, filt)
+        allowed_ids = np.nonzero(allow)[0]
+        truth = allowed_ids[
+            brute_force_topk(X[allowed_ids], Q[: len(preds)], k)]
+        rec = recall_at_k(preds, truth)
+        leaked = int((~allow[preds.ravel()[preds.ravel() >= 0]]).sum())
+        # matched unfiltered run: same effective ef, fresh cold cache —
+        # its access count is the floor filtering must not exceed
+        eng.store.resize(eng.store.capacity)
+        _, _, n_db_ref = _timed_batches(
+            eng, Q, k, ef_eff, batch_size, None)
+        entry = {
+            "selectivity": sel,
+            "selectivity_actual": sel_actual,
+            "ef": ef,
+            "ef_effective": ef_eff,
+            "recall_at_10": rec,
+            "filter_violations": leaked,
+            "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+            "n_db": int(n_db),
+            "n_db_unfiltered_same_ef": int(n_db_ref),
+            "n_db_per_query": n_db / max(1, len(preds)),
+        }
+        sweeps.append(entry)
+        if assert_parity:
+            assert leaked == 0, \
+                f"sel={sel}: {leaked} filtered-out ids returned"
+            assert n_db == n_db_ref, (
+                f"sel={sel}: filtering changed tier-3 accesses "
+                f"{n_db_ref} -> {n_db}"
+            )
+            if sel >= 0.1:
+                assert rec >= 0.95, f"sel={sel}: recall {rec:.3f} < 0.95"
+
+    doc = {
+        "benchmark": "bench_filtered",
+        "dataset": dataset,
+        "n": int(len(X)),
+        "k": k,
+        "batch_size": batch_size,
+        "cache_capacity": cap,
+        "sweep": sweeps,
+    }
+    if assert_parity:
+        doc["parity"] = "ok"
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1)
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="arxiv-1k")
+    ap.add_argument("--n-queries", type=int, default=32)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--ef", type=int, default=64)
+    ap.add_argument("--assert-parity", action="store_true",
+                    help="fail on filter leaks, recall < 0.95 at "
+                         "sel >= 0.1, or any filter-added tier-3 access "
+                         "(the CI filtered-search smoke)")
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help="output path ('' to disable)")
+    args = ap.parse_args()
+    doc = bench_filtered(
+        dataset=args.dataset, n_queries=args.n_queries,
+        batch_size=args.batch_size, ef=args.ef,
+        json_path=args.json or None, assert_parity=args.assert_parity,
+    )
+    print(f"{'sel':>6} {'ef_eff':>6} {'recall@10':>9} {'p50ms':>7} "
+          f"{'p99ms':>7} {'ndb/q':>6} {'ndb==ref':>8}")
+    for e in doc["sweep"]:
+        print(f"{e['selectivity']:>6} {e['ef_effective']:>6} "
+              f"{e['recall_at_10']:>9.3f} {e['p50_latency_ms']:>7.1f} "
+              f"{e['p99_latency_ms']:>7.1f} {e['n_db_per_query']:>6.2f} "
+              f"{str(e['n_db'] == e['n_db_unfiltered_same_ef']):>8}")
+    if doc.get("parity"):
+        print("# filtered-search smoke passed")

@@ -17,6 +17,16 @@ persists the artifact; :meth:`WebANNSEngine.search` takes a typed
 tuple-returning ``query`` / ``query_batch`` remain as thin deprecation
 shims over ``search`` (removal milestone: v0.6).
 
+Searches are FILTERABLE (DESIGN.md §9): ``SearchRequest.filter`` takes
+a :class:`repro.core.metadata.Filter` predicate (or one per query of a
+batch), compiled host-side against the engine's
+:class:`~repro.core.metadata.MetadataStore` into a per-query deny mask
+with route-but-don't-return semantics — filtered-out ids still route
+the traversal but never enter the returned top-k or a rerank pool, so
+filtering changes *which* results return, never how many tier-3
+accesses occur. The layer-0 beam widens with filter tightness
+(``EngineConfig.filter_ef_cap``).
+
 The index is MUTABLE (DESIGN.md §8): ``engine.add(vectors, texts)``
 grows it by incremental HNSW insertion (continuing the offline build's
 level stream — no rebuild), ``engine.delete(ids)`` tombstones rows out
@@ -43,11 +53,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import os
 import time
 import uuid as uuid_mod
 import warnings
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +69,7 @@ from repro.core import search as S
 from repro.core.graph import PAD, HNSWGraph, random_levels
 from repro.core.hnsw import build_hnsw, insert_hnsw
 from repro.core.index import Index
+from repro.core.metadata import Filter, MetadataStore
 from repro.core.storage import StorageBackend
 from repro.core.store import (
     CacheState,
@@ -158,6 +170,12 @@ class EngineConfig:
     # disables the rerank (quantized distances returned as-is).
     precision: str = "float32"
     rerank_alpha: float = 2.0
+    # selectivity-adaptive ef boost for filtered search (DESIGN.md §9):
+    # with a filter of live selectivity s the layer-0 beam widens to
+    # ef_eff = ef * min(filter_ef_cap, sqrt(1/s)) so enough ALLOWED
+    # candidates survive route-but-don't-return masking as filters
+    # tighten. 1.0 disables the boost (tests use this to pin ef_eff).
+    filter_ef_cap: float = 4.0
 
     def __post_init__(self) -> None:
         if self.mode not in ENGINE_MODES:
@@ -179,12 +197,20 @@ class SearchRequest:
     ``ef=None`` falls back to ``EngineConfig.ef_search``. ``batch_mode``
     applies to batched requests only: ``'batched'`` is the cross-query
     amortized driver (DESIGN.md §5), ``'loop'`` the sequential fallback.
+
+    ``filter`` restricts results to metadata-matching ids (DESIGN.md
+    §9): one :class:`~repro.core.metadata.Filter` (applied to every
+    query of a batch) or, for a ``(B, d)`` batch, a length-B sequence of
+    per-query ``Optional[Filter]``. Filtering is route-but-don't-return:
+    it changes *which* ids return, never the traversal or the number of
+    tier-3 accesses at a given effective ef.
     """
 
     query: np.ndarray
     k: int = 10
     ef: Optional[int] = None
     batch_mode: str = "batched"
+    filter: Optional[Union[Filter, Sequence[Optional[Filter]]]] = None
 
 
 @dataclasses.dataclass
@@ -229,9 +255,10 @@ class SearchResult:
     jax.jit, static_argnames=("ef", "metric")
 )
 def _seed_cached(q, entry_ids, cache: CacheState, ef: int, miss_cap_arr,
-                 metric: str, tombs):
+                 metric: str, tombs, banned):
     n = cache.slot_of.shape[0]
-    state = S.make_state(ef, miss_cap_arr.shape[0], n, tombstones=tombs)
+    state = S.make_state(ef, miss_cap_arr.shape[0], n, tombstones=tombs,
+                         banned=banned)
     lookup = lambda ids: cache_lookup(cache, ids)
     return S.seed_state(state, q, entry_ids, lookup, metric)
 
@@ -263,13 +290,18 @@ def _load_cached(q, state: S.SearchState, loaded_ids, loaded_vecs,
     jax.jit, static_argnames=("ef", "miss_cap", "metric")
 )
 def _batch_seed_cached(Q, entry_ids, cache: CacheState, ef: int,
-                       miss_cap: int, metric: str, tombs):
+                       miss_cap: int, metric: str, tombs, banned):
     n = cache.slot_of.shape[0]
     lookup = lambda ids: cache_lookup(cache, ids)
     states = S.batch_make_state(
-        Q.shape[0], ef, miss_cap, n, tombstones=tombs
+        Q.shape[0], ef, miss_cap, n, tombstones=tombs, banned=banned
     )
     return S.batch_seed_state(states, Q, entry_ids, lookup, metric)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _finalize_cached(state: S.SearchState, k: int):
+    return S.finalize_topk(state, k)
 
 
 @functools.partial(
@@ -306,6 +338,7 @@ class WebANNSEngine:
         graph: Optional[HNSWGraph] = None,
         config: Optional[EngineConfig] = None,
         texts: Optional[List[str]] = None,
+        metadata: Optional[Union[MetadataStore, Dict]] = None,
     ):
         self.config = config or EngineConfig()
         tombstones = None
@@ -322,6 +355,8 @@ class WebANNSEngine:
             tombstones = source.tombstones
             level_state = source.level_state
             insert_params = source.insert_params
+            if metadata is None:
+                metadata = source.metadata
             self._uuid = source.uuid
             self._last_save_path = (
                 os.path.realpath(source.path)
@@ -346,6 +381,16 @@ class WebANNSEngine:
         # Text-embedding separation (paper §4.1): texts live in a separate
         # id-indexed store, never loaded during queries.
         self.doc_store = DocStore(texts) if texts is not None else None
+        # per-id metadata columns (host-resident, consulted only when a
+        # Filter compiles to its allow-bitmap — DESIGN.md §9)
+        if metadata is not None and not isinstance(metadata, MetadataStore):
+            metadata = MetadataStore(metadata, n_rows=self.n)
+        self.metadata: Optional[MetadataStore] = metadata
+        if self.metadata is not None and self.metadata.n_rows != self.n:
+            raise ValueError(
+                f"metadata covers {self.metadata.n_rows} ids, backend "
+                f"holds {self.n}"
+            )
         self._miss_cap = self.config.ef_search + graph.max_degree + 1
         # whole-batch accounting of the last query_batch call (DESIGN.md §5)
         self.last_batch_stats: Optional[BatchStats] = None
@@ -362,6 +407,7 @@ class WebANNSEngine:
                 f"backend holds {self.n}"
             )
         self._tombs_dev: Optional[jnp.ndarray] = None
+        self._noban_dev: Optional[jnp.ndarray] = None  # (N,) all-False
         # level stream continuation: (seed, draws) such that replaying
         # seed and skipping `draws` uniforms reproduces the next levels
         # the offline build would have sampled. Best-effort (0, n) for
@@ -391,13 +437,14 @@ class WebANNSEngine:
         config: Optional[EngineConfig] = None,
         texts: Optional[List[str]] = None,
         seed: int = 0,
+        metadata: Optional[Union[MetadataStore, Dict]] = None,
     ) -> "WebANNSEngine":
         config = config or EngineConfig()
         g = build_hnsw(
             vectors, M=M, ef_construction=ef_construction,
             metric=config.metric, seed=seed,
         )
-        eng = cls(vectors, g, config, texts)
+        eng = cls(vectors, g, config, texts, metadata=metadata)
         # exact level-stream state + insertion hyperparameters, so
         # add() continues the offline build bit-for-bit (DESIGN.md §8)
         eng._level_seed, eng._levels_drawn = seed, len(vectors)
@@ -484,6 +531,7 @@ class WebANNSEngine:
             insert_params=(
                 self.insert_ef_construction, self.insert_heuristic
             ),
+            metadata=self.metadata,
         )
 
     # --------------------------------------------------- mutation lifecycle
@@ -512,15 +560,60 @@ class WebANNSEngine:
         also drops the fused driver's device-resident tier-3 payload
         (required after add/upsert; deletes only touch the mask)."""
         self._tombs_dev = None
+        self._noban_dev = None
         if table:
             for attr in ("_table_dev", "_tscales_dev"):
                 if hasattr(self, attr):
                     delattr(self, attr)
 
+    # ------------------------------------------------------ filtered search
+
+    def _noban_device(self) -> jnp.ndarray:
+        """Cached all-False deny mask for unfiltered requests, so the
+        no-filter path pays one device constant, not one per query."""
+        if self._noban_dev is None:
+            self._noban_dev = jnp.zeros((self.n,), bool)
+        return self._noban_dev
+
+    def _compile_filter(self, filt: Filter) -> Tuple[np.ndarray, float]:
+        """Compile one predicate to (deny mask, live selectivity).
+
+        The allow-bitmap is evaluated host-side against the metadata
+        columns — metadata is never fetched from tier 3, so compiling a
+        filter costs ZERO external accesses. Selectivity is measured
+        over the LIVE (non-tombstoned) id space: it drives the ef boost
+        and the empty-result short-circuit.
+        """
+        if not isinstance(filt, Filter):
+            raise TypeError(
+                f"SearchRequest.filter must be a Filter (or a sequence "
+                f"of them for a batch), got {type(filt).__name__}"
+            )
+        allow = np.asarray(filt.mask(self.metadata), bool)
+        if allow.shape != (self.n,):
+            raise ValueError(
+                f"filter mask covers {allow.shape[0]} ids, index holds "
+                f"{self.n}"
+            )
+        live_allowed = int((allow & ~self.tombstones).sum())
+        sel = live_allowed / max(1, self.n_live)
+        return ~allow, sel
+
+    def _boost_ef(self, ef: int, sel: float) -> int:
+        """Selectivity-adaptive beam widening: ef_eff = ef * min(cap,
+        sqrt(1/sel)), so recall holds as filters tighten while the cap
+        bounds the latency cost (DESIGN.md §9)."""
+        if sel >= 1.0:
+            return ef
+        boost = min(self.config.filter_ef_cap,
+                    math.sqrt(1.0 / max(sel, 1e-9)))
+        return min(self.n, int(math.ceil(ef * max(1.0, boost))))
+
     def add(
         self,
         vectors: np.ndarray,
         texts: Optional[List[str]] = None,
+        metadata: Optional[Dict] = None,
     ) -> MutationResult:
         """Insert new vectors into the LIVE index — no rebuild.
 
@@ -531,6 +624,11 @@ class WebANNSEngine:
         New ids are assigned monotonically from ``n_total`` — deleted
         ids are never reused. Tombstoned nodes are excluded from link
         selection, and the mutated rows are tracked for delta saves.
+
+        ``metadata`` maps column name → one value per added vector;
+        the store grows in lockstep with the id space (existing columns
+        a row omits get their kind's fill value, previously-unseen
+        columns are backfilled — DESIGN.md §9).
         """
         vectors = np.atleast_2d(np.asarray(vectors, dtype=np.float32))
         if vectors.shape[0] == 0:
@@ -547,6 +645,15 @@ class WebANNSEngine:
             raise ValueError(
                 f"{len(texts)} texts for {vectors.shape[0]} vectors"
             )
+        if metadata is not None and self.metadata is None:
+            # creating the (still-empty) store pre-mutation is safe: it
+            # stays consistent with n even if a later step raises
+            self.metadata = MetadataStore(n_rows=self.n)
+        if self.metadata is not None:
+            # full dry-run validation (names, lengths, kinds, dtypes)
+            # BEFORE anything is committed — a bad metadata dict must
+            # never leave the store out of sync with the id space
+            self.metadata.validate_extend(vectors.shape[0], metadata)
         n_new = vectors.shape[0]
         restart = self.n_live == 0  # dead graph: re-seed the entry point
         # 1) payload append (tier 3 wraps itself in a DeltaBackend)
@@ -589,6 +696,8 @@ class WebANNSEngine:
             self.doc_store.extend(
                 texts if texts is not None else [None] * n_new
             )
+        if self.metadata is not None:
+            self.metadata.extend(n_new, metadata)  # pre-validated above
         self._invalidate_device_state(table=True)
         if self.tombstones[self.graph.entry_point]:
             self._repair_entry()
@@ -630,6 +739,7 @@ class WebANNSEngine:
         ids: Union[int, Sequence[int]],
         vectors: np.ndarray,
         texts: Optional[List[str]] = None,
+        metadata: Optional[Dict] = None,
     ) -> MutationResult:
         """Replace rows: tombstone ``ids`` and insert ``vectors`` as
         fresh rows. Ids are NEVER reused, so the replacements come back
@@ -657,8 +767,20 @@ class WebANNSEngine:
             raise ValueError(
                 f"{len(texts)} texts for {vectors.shape[0]} vectors"
             )
+        if metadata is None and self.metadata is not None:
+            # replacements inherit the retired rows' metadata unless the
+            # caller overrides it — an upsert must not silently drop a
+            # document out of every filtered view
+            metadata = {
+                name: col[ids]
+                for name, col in self.metadata.to_columns().items()
+            }
+        if metadata is not None:
+            # metadata failures must also surface BEFORE the delete
+            (self.metadata or MetadataStore(n_rows=self.n)) \
+                .validate_extend(vectors.shape[0], metadata)
         deleted = self.delete(ids).deleted
-        added = self.add(vectors, texts=texts)
+        added = self.add(vectors, texts=texts, metadata=metadata)
         return MutationResult(
             ids=added.ids, deleted=deleted,
             n_live=self.n_live, n_total=self.n,
@@ -756,6 +878,7 @@ class WebANNSEngine:
     def _lazy_layer(
         self, q: jnp.ndarray, layer: int, entry_ids: np.ndarray, ef: int,
         stats: QueryStats, eager: bool,
+        banned: Optional[jnp.ndarray] = None,
     ) -> S.SearchState:
         """Run one layer with phased lazy loading (or eager fetches)."""
         cfg = self.config
@@ -766,6 +889,7 @@ class WebANNSEngine:
         state = _seed_cached(
             q, jnp.asarray(entry_np), self.store.cache, ef, dummy,
             cfg.metric, self._tombs_device(),
+            self._noban_device() if banned is None else banned,
         )
         # eager mode (webanns-base): trigger=1 → flush L after every miss
         trigger = 1 if eager else ef
@@ -809,6 +933,7 @@ class WebANNSEngine:
     def _batched_lazy_layer(
         self, Q: jnp.ndarray, layer: int, entry_ids: np.ndarray, ef: int,
         per_stats: List[QueryStats], bstats: BatchStats, eager: bool,
+        banned: Optional[jnp.ndarray] = None,  # (B, N) per-query deny
     ) -> S.SearchState:
         """One layer of the batched phased-lazy driver (DESIGN.md §5).
 
@@ -823,9 +948,13 @@ class WebANNSEngine:
         from repro.core.store import EVICT_LRU, cache_touch
 
         t0 = time.perf_counter()
+        if banned is None:
+            banned = jnp.broadcast_to(
+                self._noban_device(), (Q.shape[0], self.n)
+            )
         states = _batch_seed_cached(
             Q, jnp.asarray(entry_ids), self.store.cache, ef, miss_cap,
-            cfg.metric, self._tombs_device(),
+            cfg.metric, self._tombs_device(), banned,
         )
         bstats.t_in_mem += time.perf_counter() - t0
         for _ in range(cfg.max_phases):
@@ -866,7 +995,8 @@ class WebANNSEngine:
         return states
 
     def _query_fused(
-        self, q: np.ndarray, k: int, ef: int
+        self, q: np.ndarray, k: int, ef: int,
+        banned: Optional[jnp.ndarray] = None,
     ) -> Tuple[np.ndarray, np.ndarray, QueryStats]:
         cfg = self.config
         stats = QueryStats()
@@ -896,7 +1026,7 @@ class WebANNSEngine:
             jnp.asarray(self.graph.entry_point, jnp.int32),
             self.store.cache, k=k_run, ef=ef, metric=cfg.metric,
             eviction=self.store.eviction, table_scales=self._tscales_dev,
-            tombstones=self._tombs_device(),
+            tombstones=self._tombs_device(), banned=banned,
         )
         ids.block_until_ready()
         stats.t_in_mem = time.perf_counter() - t0
@@ -925,50 +1055,100 @@ class WebANNSEngine:
         return np.asarray(ids), np.asarray(dists), stats
 
     def _search_one(
-        self, q: np.ndarray, k: int, ef: Optional[int]
+        self, q: np.ndarray, k: int, ef: Optional[int],
+        filt: Optional[Filter] = None,
+        boost: bool = True,
     ) -> Tuple[np.ndarray, np.ndarray, QueryStats]:
-        """Single-query driver body. Returns (ids, dists, stats)."""
+        """Single-query driver body. Returns (ids, dists, stats).
+
+        ``filt`` restricts results via route-but-don't-return masking
+        (DESIGN.md §9): traversal is IDENTICAL to an unfiltered run at
+        the same effective ef (so filtering adds zero tier-3 accesses);
+        banned ids are dropped only at top-k extraction and from the
+        exact-rerank pool. The effective ef widens with the filter's
+        live selectivity (``_boost_ef``).
+        """
         cfg = self.config
         ef = ef or cfg.ef_search
         if self.n_live == 0:  # fully-tombstoned engine: nothing to return
             return (np.full(k, -1, np.int32),
                     np.full(k, np.inf, np.float32), QueryStats())
+        banned = None
+        if filt is not None:
+            banned_np, sel = self._compile_filter(filt)
+            if sel <= 0.0:  # nothing can match: skip the search entirely
+                return (np.full(k, -1, np.int32),
+                        np.full(k, np.inf, np.float32), QueryStats())
+            if boost:  # batch callers pre-boost to the shared ef_eff
+                ef = self._boost_ef(ef, sel)
+            banned = jnp.asarray(banned_np)
         if cfg.fused and cfg.mode == "webanns":
-            return self._query_fused(q, k, ef)
+            return self._query_fused(q, k, ef, banned=banned)
         eager = cfg.mode == "webanns-base"
         stats = QueryStats()
         qj = jnp.asarray(q, jnp.float32)
         t_db0 = self.external.stats.modeled_time
         entry = np.array([self.graph.entry_point], np.int32)
-        # upper layers: beam of ef_upper (greedy for 1), lazily loaded too
+        # upper layers: beam of ef_upper (greedy for 1), lazily loaded too;
+        # the deny mask is irrelevant here (descent only routes)
         for lc in range(self.graph.max_level, 0, -1):
             st = self._lazy_layer(qj, lc, entry, cfg.ef_upper, stats, eager)
             best = np.asarray(st.beam.ids[: cfg.ef_upper])
             entry = best[best >= 0][:1] if (best >= 0).any() else entry
             stats.n_hops += int(st.n_hops)
             stats.n_dist += int(st.n_dist)
-        st = self._lazy_layer(qj, 0, entry, max(ef, k), stats, eager)
+        st = self._lazy_layer(
+            qj, 0, entry, max(ef, k), stats, eager, banned=banned
+        )
         stats.n_hops += int(st.n_hops)
         stats.n_dist += int(st.n_dist)
         stats.n_visited = stats.n_dist  # every visited id gets a distance
         if self._rerank_active():
             pool = min(st.beam.ef, quant.rerank_pool(k, cfg.rerank_alpha))
+            if filt is not None:
+                # allowed-only pool: a banned id must never reach the
+                # rerank fetch, let alone the returned top-k
+                p_dists, p_ids = _finalize_cached(st, pool)
+            else:
+                p_ids = st.beam.ids[:pool]
+                p_dists = st.beam.dists[:pool]
             db0, f0 = self.external.stats.n_db, \
                 self.external.stats.items_fetched
             ids, dists = self._rerank_exact(
-                q, np.asarray(st.beam.ids[:pool]),
-                np.asarray(st.beam.dists[:pool]), k,
+                q, np.asarray(p_ids), np.asarray(p_dists), k,
             )
             stats.n_db += self.external.stats.n_db - db0
             stats.items_fetched += self.external.stats.items_fetched - f0
+        elif filt is not None:
+            f_dists, f_ids = _finalize_cached(st, k)
+            ids, dists = np.asarray(f_ids), np.asarray(f_dists)
         else:
             ids = np.asarray(st.beam.ids[:k])
             dists = np.asarray(st.beam.dists[:k])
         stats.t_db = self.external.stats.modeled_time - t_db0
         return ids, dists, stats
 
+    def _normalize_filters(
+        self, filt, B: int
+    ) -> Optional[List[Optional[Filter]]]:
+        """Request-level filter → per-query list (length B) or None."""
+        if filt is None:
+            return None
+        if isinstance(filt, Filter):
+            return [filt] * B
+        filters = list(filt)
+        if len(filters) != B:
+            raise ValueError(
+                f"{len(filters)} filters for a batch of {B} queries — "
+                "pass one Filter (broadcast) or exactly one per query"
+            )
+        if all(f is None for f in filters):
+            return None
+        return filters
+
     def _search_many(
-        self, Q: np.ndarray, k: int, ef: Optional[int], batch_mode: str
+        self, Q: np.ndarray, k: int, ef: Optional[int], batch_mode: str,
+        filt=None,
     ) -> Tuple[np.ndarray, np.ndarray, List[QueryStats]]:
         """Batch driver body (DESIGN.md §5). Returns (ids, dists, stats).
 
@@ -992,6 +1172,33 @@ class WebANNSEngine:
             return (np.full((B, k), -1, np.int32),
                     np.full((B, k), np.inf, np.float32),
                     [QueryStats() for _ in range(B)])
+        # per-query filters compile to one (B, N) deny matrix — or, for
+        # a single broadcast Filter, ONE (N,) mask compiled once and
+        # broadcast on device. The batch shares ONE effective ef (a
+        # jitted phase has one static beam width), so the widest
+        # per-query boost wins — both drivers use it, keeping
+        # loop/batched parity exact (DESIGN.md §9)
+        filters = self._normalize_filters(filt, B)
+        banned_rows: Optional[List[Optional[np.ndarray]]] = None
+        shared_banned: Optional[np.ndarray] = None
+        if filters is not None:
+            if isinstance(filt, Filter):  # broadcast: compile ONCE
+                shared_banned, sel = self._compile_filter(filt)
+                banned_rows = [shared_banned] * B  # loop fallback rows
+                if sel > 0.0:
+                    ef = max(ef, self._boost_ef(ef, sel))
+            else:
+                banned_rows = []
+                ef_eff = ef
+                for f in filters:
+                    if f is None:
+                        banned_rows.append(None)
+                        continue
+                    banned_np, sel = self._compile_filter(f)
+                    banned_rows.append(banned_np)
+                    if sel > 0.0:
+                        ef_eff = max(ef_eff, self._boost_ef(ef, sel))
+                ef = ef_eff
         # fused engines run the whole query as one program (_query_fused);
         # the batched host driver would silently reroute them, so honor
         # cfg.fused via the sequential path until a fused batch exists
@@ -999,8 +1206,11 @@ class WebANNSEngine:
             batch_mode = "loop"
         if batch_mode == "loop":
             out_i, out_d, out_s = [], [], []
-            for q in Q:
-                i, d, s = self._search_one(q, k, ef)
+            for b, q in enumerate(Q):
+                i, d, s = self._search_one(
+                    q, k, ef, filt=None if filters is None else filters[b],
+                    boost=False,
+                )
                 out_i.append(i)
                 out_d.append(d)
                 out_s.append(s)
@@ -1020,6 +1230,17 @@ class WebANNSEngine:
         bstats = BatchStats(batch_size=B)
         per_stats = [QueryStats() for _ in range(B)]
         Qj = jnp.asarray(Q)
+        banned_mat = None
+        if shared_banned is not None:
+            # (N,) once — batch_make_state broadcasts on device (a view,
+            # not a (B, N) host materialization)
+            banned_mat = jnp.asarray(shared_banned)
+        elif banned_rows is not None:
+            banned_np = np.zeros((B, self.n), bool)
+            for b, row in enumerate(banned_rows):
+                if row is not None:
+                    banned_np[b] = row
+            banned_mat = jnp.asarray(banned_np)
         t_db0 = self.external.stats.modeled_time
         entry = np.full((B, 1), self.graph.entry_point, np.int32)
         for lc in range(self.graph.max_level, 0, -1):
@@ -1036,7 +1257,8 @@ class WebANNSEngine:
                 per_stats[b].n_hops += int(hops[b])
                 per_stats[b].n_dist += int(ndist[b])
         st = self._batched_lazy_layer(
-            Qj, 0, entry, max(ef, k), per_stats, bstats, eager
+            Qj, 0, entry, max(ef, k), per_stats, bstats, eager,
+            banned=banned_mat,
         )
         hops = np.asarray(st.n_hops)
         ndist = np.asarray(st.n_dist)
@@ -1044,11 +1266,17 @@ class WebANNSEngine:
             # ONE shared tier-3 access reranks the whole batch (§5/§7)
             pool = min(int(st.beam.ids.shape[1]),
                        quant.rerank_pool(k, cfg.rerank_alpha))
+            if banned_mat is not None:
+                # per-query allowed-only pools: banned ids never reach
+                # the rerank fetch (route-but-don't-return, §9)
+                p_dists, p_ids = _finalize_cached(st, pool)
+            else:
+                p_ids = st.beam.ids[:, :pool]
+                p_dists = st.beam.dists[:, :pool]
             db0 = self.external.stats.n_db
             f0 = self.external.stats.items_fetched
             ids, dists = self._rerank_exact_batch(
-                Q, np.asarray(st.beam.ids[:, :pool]),
-                np.asarray(st.beam.dists[:, :pool]), k,
+                Q, np.asarray(p_ids), np.asarray(p_dists), k,
             )
             bstats.n_db += self.external.stats.n_db - db0
             bstats.items_fetched += (
@@ -1056,6 +1284,9 @@ class WebANNSEngine:
             )
             for b in range(B):  # every query demanded the shared rerank
                 per_stats[b].n_db += 1
+        elif banned_mat is not None:
+            f_dists, f_ids = _finalize_cached(st, k)
+            ids, dists = np.asarray(f_ids), np.asarray(f_dists)
         else:
             ids = np.asarray(st.beam.ids[:, :k])
             dists = np.asarray(st.beam.dists[:, :k])
@@ -1082,14 +1313,23 @@ class WebANNSEngine:
         """
         q = np.asarray(request.query, dtype=np.float32)
         if q.ndim == 1:
-            ids, dists, stats = self._search_one(q, request.k, request.ef)
+            filt = request.filter
+            if filt is not None and not isinstance(filt, Filter):
+                raise ValueError(
+                    "a single-query request takes a single Filter, not "
+                    f"{type(filt).__name__}"
+                )
+            ids, dists, stats = self._search_one(
+                q, request.k, request.ef, filt=filt
+            )
             return SearchResult(ids=ids, dists=dists, stats=stats)
         if q.ndim != 2:
             raise ValueError(
                 f"SearchRequest.query must be (d,) or (B, d), got {q.shape}"
             )
         ids, dists, stats = self._search_many(
-            q, request.k, request.ef, request.batch_mode
+            q, request.k, request.ef, request.batch_mode,
+            filt=request.filter,
         )
         return SearchResult(
             ids=ids, dists=dists, stats=stats,
@@ -1147,9 +1387,13 @@ class WebANNSEngine:
         return res.ids, res.dists, res.stats
 
     def get_texts(self, ids: np.ndarray) -> List[Optional[str]]:
+        """Texts for ``ids``; ``None`` for unknown, padded (-1), AND
+        tombstoned ids — deleted content must never resurface through a
+        stale id (GDPR-style forgetting; RAGPipeline.remove_documents
+        relies on this)."""
         if self.doc_store is None:
             return [None] * len(ids)
-        return self.doc_store.get(ids)
+        return self.doc_store.get(ids, tombstones=self.tombstones)
 
 
 class DocStore:
@@ -1162,8 +1406,20 @@ class DocStore:
         """Append texts for newly added ids (mutation lifecycle §8)."""
         self._texts.extend(texts)
 
-    def get(self, ids) -> List[Optional[str]]:
+    def get(self, ids, tombstones=None) -> List[Optional[str]]:
+        """Texts by id; out-of-range ids come back None. ``tombstones``
+        ((N,) bool) masks deleted ids to None — the raw rows are kept
+        (ids are never reused) but must not be served."""
         out = []
         for i in np.asarray(ids).tolist():
-            out.append(self._texts[i] if 0 <= i < len(self._texts) else None)
+            i = int(i)
+            dead = (
+                tombstones is not None
+                and 0 <= i < len(tombstones)
+                and bool(tombstones[i])
+            )
+            out.append(
+                self._texts[i]
+                if 0 <= i < len(self._texts) and not dead else None
+            )
         return out

@@ -36,6 +36,8 @@ On-disk layout (one directory)::
     vectors_s{s}.npy         vector payload shards (f32 / f16 / int8)
     vector_scales_s{s}.npy   per-row dequant scales (int8 codec only)
     tombstones.npy           sorted int64 ids of deleted rows
+    metadata_{name}.npy      one per-id metadata column per file (§9);
+                             listed under manifest "metadata_columns"
 
 The manifest is a strict superset of the graph-only format already
 emitted under ``reports/bench_cache/`` — ``HNSWGraph.load`` keeps
@@ -63,7 +65,9 @@ from repro.core.storage import (
     ShardedFileBackend,
     StorageBackend,
     append_vector_shards,
+    load_metadata,
     load_tombstones,
+    save_metadata,
     save_tombstones,
     save_vector_shards,
     update_manifest,
@@ -85,6 +89,9 @@ class Index:
     # (ef_construction, heuristic) the graph was built with: add() must
     # insert with the same knobs or grow-by-add parity silently breaks
     insert_params: Optional[Tuple[int, bool]] = None
+    # per-id metadata columns behind filtered search (DESIGN.md §9);
+    # None = the index carries no metadata
+    metadata: Optional[object] = None  # MetadataStore
 
     @property
     def n_items(self) -> int:
@@ -114,18 +121,33 @@ class Index:
         metric: str = "l2",
         seed: int = 0,
         heuristic: bool = True,
+        metadata=None,
     ) -> "Index":
-        """Offline construction (the paper's service-worker stage)."""
+        """Offline construction (the paper's service-worker stage).
+        ``metadata`` maps column name → per-row values (one per vector)
+        and becomes the index's :class:`MetadataStore` (DESIGN.md §9)."""
+        from repro.core.metadata import MetadataStore
+
         vectors = np.asarray(vectors, dtype=np.float32)
         graph = build_hnsw(
             vectors, M=M, ef_construction=ef_construction,
             metric=metric, seed=seed, heuristic=heuristic,
         )
+        meta = None
+        if metadata is not None:
+            meta = (metadata if isinstance(metadata, MetadataStore)
+                    else MetadataStore(metadata, n_rows=vectors.shape[0]))
+            if meta.n_rows != vectors.shape[0]:
+                raise ValueError(
+                    f"metadata covers {meta.n_rows} rows, corpus holds "
+                    f"{vectors.shape[0]}"
+                )
         return cls(
             graph=graph, backend=InMemoryBackend(vectors),
             tombstones=np.zeros(vectors.shape[0], dtype=bool),
             level_state=(seed, vectors.shape[0]),
             insert_params=(ef_construction, heuristic),
+            metadata=meta,
         )
 
     # -------------------------------------------------------- persistence
@@ -199,6 +221,8 @@ class Index:
             self.tombstones if self.tombstones is not None
             else np.zeros(self.n_items, bool),
         )
+        if self.metadata is not None:
+            save_metadata(path, self.metadata)
         manifest = update_manifest(path, self._meta_extra(epoch=0))
         self.path = path
         return {
@@ -232,6 +256,10 @@ class Index:
             self.tombstones if self.tombstones is not None
             else np.zeros(self.n_items, bool),
         )
+        if self.metadata is not None:
+            # metadata columns are small (like the tombstone list) and
+            # rewritten whole on every save — they are not append-only
+            written += save_metadata(path, self.metadata)
         epoch = int(manifest.get("mutation_epoch", 0)) + 1
         update_manifest(path, self._meta_extra(epoch=epoch))
         self.path = path
@@ -277,6 +305,7 @@ class Index:
             uuid=manifest.get("index_uuid"),
             level_state=level_state,
             insert_params=insert_params,
+            metadata=load_metadata(path, manifest, backend.n_items),
         )
 
 
@@ -286,6 +315,8 @@ def _artifact_bytes(path: str, manifest: dict) -> int:
     files = {"manifest.json", "levels.npy"}
     if manifest.get("tombstones_file"):
         files.add(manifest["tombstones_file"])
+    for col in manifest.get("metadata_columns", []):
+        files.add(col["file"])
     for layer_shards in manifest.get("shards", []):
         files.update(sh["file"] for sh in layer_shards)
     for sh in manifest.get("vector_shards", []):

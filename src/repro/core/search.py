@@ -75,10 +75,22 @@ class Beam:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SearchState:
-    """Full per-query state threaded through phases of one layer search."""
+    """Full per-query state threaded through phases of one layer search.
+
+    Two per-id masks with DIFFERENT semantics coexist (DESIGN.md §8/§9):
+
+    - tombstones arrive pre-marked in ``visited`` — a deleted id is never
+      seeded, expanded, fetched, or returned (it cannot enter the beam);
+    - ``banned`` is the per-query metadata-filter deny mask with
+      *route-but-don't-return* semantics: a banned id traverses normally
+      (it enters the beam and routes the search, keeping the graph
+      connected under selective filters) but is masked out of the final
+      top-k by :func:`finalize_topk` and out of both exact-rerank pools.
+    """
 
     beam: Beam
     visited: jnp.ndarray  # (N,) bool
+    banned: jnp.ndarray  # (N,) bool — per-query deny mask (route, no return)
     miss_ids: jnp.ndarray  # (miss_cap,) int32, -1 padded
     miss_count: jnp.ndarray  # () int32
     n_hops: jnp.ndarray  # () int32 — beam expansions done (|Q| contribution)
@@ -126,11 +138,15 @@ class LookupFn(NamedTuple):
 def make_state(
     ef: int, miss_cap: int, n: int,
     tombstones: Optional[jnp.ndarray] = None,
+    banned: Optional[jnp.ndarray] = None,
 ) -> SearchState:
     """Fresh per-layer search state. ``tombstones`` ((n,) bool) pre-marks
     deleted ids as visited — the single mechanism by which masked ids are
     never seeded, never expanded, never pushed to the miss list, and
-    never returned (they can't enter the beam). See DESIGN.md §8."""
+    never returned (they can't enter the beam). See DESIGN.md §8.
+    ``banned`` ((n,) bool) is the per-query filter deny mask — routed
+    through but never returned (see :class:`SearchState`, DESIGN.md §9).
+    """
     visited = (
         jnp.zeros((n,), bool) if tombstones is None
         else jnp.asarray(tombstones, bool)
@@ -138,6 +154,10 @@ def make_state(
     return SearchState(
         beam=beam_init(ef),
         visited=visited,
+        banned=(
+            jnp.zeros((n,), bool) if banned is None
+            else jnp.asarray(banned, bool)
+        ),
         miss_ids=jnp.full((miss_cap,), -1, jnp.int32),
         miss_count=jnp.zeros((), jnp.int32),
         n_hops=jnp.zeros((), jnp.int32),
@@ -271,6 +291,32 @@ def load_phase(
     )
 
 
+def finalize_topk(
+    state: SearchState, k: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Route-but-don't-return extraction (DESIGN.md §9). Jittable.
+
+    The beam was allowed to hold banned (filtered-out) nodes so they
+    could route the traversal; here — and ONLY here — they are masked
+    to (+inf, -1) and the top-k of the *allowed* beam is re-extracted.
+    Works on a single state (beam (ef,)) or a batched one ((B, ef)),
+    with ``state.banned`` of matching (n,) / (B, n) shape. Returns
+    (dists, ids), -1/+inf padded when fewer than k allowed entries
+    survive (the empty-filter case)."""
+    ids, dists = state.beam.ids, state.beam.dists
+    n = state.banned.shape[-1]
+    safe = jnp.clip(ids, 0, n - 1).astype(jnp.int32)
+    banned = jnp.take_along_axis(state.banned, safe, axis=-1)
+    bad = (ids < 0) | banned
+    dists = jnp.where(bad, INF, dists)
+    ids = jnp.where(bad, -1, ids)
+    _, order = jax.lax.top_k(-dists, k)
+    return (
+        jnp.take_along_axis(dists, order, axis=-1),
+        jnp.take_along_axis(ids, order, axis=-1),
+    )
+
+
 # ----------------------------------------------------- batched phase ops
 #
 # The batched driver (engine.query_batch, DESIGN.md §5) vmaps the three
@@ -284,10 +330,13 @@ def load_phase(
 def batch_make_state(
     batch: int, ef: int, miss_cap: int, n: int,
     tombstones: Optional[jnp.ndarray] = None,
+    banned: Optional[jnp.ndarray] = None,
 ) -> SearchState:
     """SearchState with a leading batch axis on every leaf. ``tombstones``
     ((n,) bool) is broadcast to every query's visited set — see
-    :func:`make_state` for the exclusion mechanism."""
+    :func:`make_state` for the exclusion mechanism. ``banned`` is the
+    PER-QUERY deny mask: (batch, n) for per-query filters, or (n,) to
+    broadcast one filter across the batch (DESIGN.md §9)."""
     visited = (
         jnp.zeros((batch, n), bool) if tombstones is None
         else jnp.broadcast_to(jnp.asarray(tombstones, bool), (batch, n))
@@ -299,6 +348,10 @@ def batch_make_state(
             explored=jnp.zeros((batch, ef), bool),
         ),
         visited=visited,
+        banned=(
+            jnp.zeros((batch, n), bool) if banned is None
+            else jnp.broadcast_to(jnp.asarray(banned, bool), (batch, n))
+        ),
         miss_ids=jnp.full((batch, miss_cap), -1, jnp.int32),
         miss_count=jnp.zeros((batch,), jnp.int32),
         n_hops=jnp.zeros((batch,), jnp.int32),
@@ -367,6 +420,7 @@ def search_layer_lazy_fused(
     eviction: int = 0,
     table_scales: Optional[jnp.ndarray] = None,  # (N,) — int8 payload
     tombstones: Optional[jnp.ndarray] = None,  # (N,) bool — deleted ids
+    banned: Optional[jnp.ndarray] = None,  # (N,) bool — filter deny mask
 ):
     """One layer of Algorithm 1 with the WHOLE phase loop in-graph.
 
@@ -397,7 +451,7 @@ def search_layer_lazy_fused(
     trig = trigger if trigger is not None else ef
     miss_cap = ef + neighbors_l.shape[1] + 1
 
-    state = make_state(ef, miss_cap, n, tombstones=tombstones)
+    state = make_state(ef, miss_cap, n, tombstones=tombstones, banned=banned)
     state = seed_state(
         state, q, entry_ids, lambda ids: cache_lookup(cache, ids), metric
     )
@@ -456,6 +510,7 @@ def lazy_knn_search_fused(
     n_layers: Optional[int] = None,
     table_scales: Optional[jnp.ndarray] = None,
     tombstones: Optional[jnp.ndarray] = None,
+    banned: Optional[jnp.ndarray] = None,
 ):
     """Whole lazy KNN query (all layers) as ONE jitted program.
 
@@ -463,13 +518,17 @@ def lazy_knn_search_fused(
     Result equality with the host-driven engine is enforced in tests.
     ``tombstones`` masks deleted ids out of every layer's search
     (pre-visited — see :func:`make_state`); the caller must pass a LIVE
-    entry point.
+    entry point. ``banned`` is the per-query filter deny mask: it does
+    not alter traversal at all (route-but-don't-return, so the phase
+    and access structure is bit-identical to the unfiltered run); the
+    final top-k extraction drops banned ids in-graph via
+    :func:`finalize_topk`.
     """
     L = n_layers if n_layers is not None else neighbors.shape[0]
     n_db = jnp.int32(0)
     n_fetch = jnp.int32(0)
     entry_ids = jnp.full((1,), entry, jnp.int32)
-    # upper layers: ef=1 greedy with lazy loading
+    # upper layers: ef=1 greedy with lazy loading (banned ids may route)
     for lc in range(L - 1, 0, -1):
         st, cache, db, fc = search_layer_lazy_fused(
             q, neighbors[lc], table, cache, entry_ids, 1, metric,
@@ -481,9 +540,12 @@ def lazy_knn_search_fused(
     st, cache, db, fc = search_layer_lazy_fused(
         q, neighbors[0], table, cache, entry_ids, max(ef, k), metric,
         eviction=eviction, table_scales=table_scales,
-        tombstones=tombstones,
+        tombstones=tombstones, banned=banned,
     )
     n_db, n_fetch = n_db + db, n_fetch + fc
+    if banned is not None:
+        dists_k, ids_k = finalize_topk(st, k)
+        return dists_k, ids_k, (n_db, n_fetch), cache
     return st.beam.dists[:k], st.beam.ids[:k], (n_db, n_fetch), cache
 
 

@@ -42,12 +42,16 @@ from repro.core import quant
 VECTOR_SHARD_PREFIX = "vectors_s"
 VECTOR_SCALE_PREFIX = "vector_scales_s"
 TOMBSTONE_FILE = "tombstones.npy"
+METADATA_PREFIX = "metadata_"
 
 # Manifest format versions: 1 = the PR 2/3 read-only artifact (implicit —
 # older manifests carry no key); 2 adds the mutation-lifecycle keys
 # (index_uuid, mutation_epoch, tombstones_file, level_seed/levels_drawn)
 # on top of a format that stays a strict superset of v1, so v1 readers
 # of the graph section keep working and v2 readers accept v1 artifacts.
+# The metadata_columns key (DESIGN.md §9) is optional under v2: readers
+# without metadata support ignore it, and manifests without it load with
+# no MetadataStore.
 MANIFEST_FORMAT_VERSION = 2
 
 
@@ -448,6 +452,48 @@ def save_tombstones(path: str, tombstones: np.ndarray) -> int:
     np.save(fp, ids)
     update_manifest(path, {"tombstones_file": TOMBSTONE_FILE})
     return os.path.getsize(fp)
+
+
+def save_metadata(path: str, store) -> int:
+    """Persist a :class:`~repro.core.metadata.MetadataStore` as one
+    ``metadata_{name}.npy`` array per column plus a ``metadata_columns``
+    manifest section (DESIGN.md §9). Like the tombstone list, metadata
+    is small next to the vector payload and is rewritten whole on every
+    save (full or delta). Returns bytes written."""
+    written = 0
+    entries = []
+    for name, col in sorted(store.to_columns().items()):
+        fn = f"{METADATA_PREFIX}{name}.npy"
+        np.save(os.path.join(path, fn), col)
+        written += os.path.getsize(os.path.join(path, fn))
+        entries.append({"name": name, "file": fn, "dtype": str(col.dtype)})
+    update_manifest(path, {"metadata_columns": entries})
+    return written
+
+
+def load_metadata(path: str, manifest: dict, n_items: int):
+    """MetadataStore from a manifest's ``metadata_columns`` section;
+    ``None`` when the artifact carries no metadata. Columns persisted
+    before later rows were appended are fill-extended to ``n_items``
+    (the same backfill rule MetadataStore.extend applies live)."""
+    from repro.core.metadata import MetadataStore, pad_column
+
+    entries = manifest.get("metadata_columns")
+    if not entries:
+        return None
+    cols = {}
+    for e in entries:
+        col = np.load(os.path.join(path, e["file"]))
+        if len(col) > n_items:
+            raise ValueError(
+                f"metadata column {e['name']!r} has {len(col)} rows, "
+                f"payload holds {n_items}"
+            )
+        # pad_column keeps the saved CANONICAL dtype (int64/float64/str)
+        # even for full-length columns — fill inference must never
+        # promote an int column to float on the way back in
+        cols[e["name"]] = pad_column(col, n_items)
+    return MetadataStore(cols, n_rows=n_items)
 
 
 def load_tombstones(path: str, manifest: dict, n_items: int) -> np.ndarray:

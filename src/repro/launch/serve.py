@@ -40,8 +40,13 @@ def main():
         config=EngineConfig(cache_capacity=200),
     )
     batcher = ContinuousBatcher(
+        # positions-aware decode: per-slot sequence positions + an
+        # active mask, so admission-time prefill runs through the same
+        # program while other slots are mid-generation
         decode_fn=jax.jit(
-            lambda p, s, t: T.decode_step(p, s, t, cfg, kv_chunk=16)
+            lambda p, s, t, pos, act: T.decode_step(
+                p, s, t, cfg, kv_chunk=16, positions=pos, active=act
+            )
         ),
         init_state_fn=lambda b, l: T.init_decode_state(cfg, b, l),
         params=params,

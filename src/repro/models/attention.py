@@ -146,32 +146,49 @@ def attention_decode(
     x: jnp.ndarray,  # (B, 1, D) — one new token
     cache_k: jnp.ndarray,  # (B, S_max, Hkv, hd)
     cache_v: jnp.ndarray,
-    position: jnp.ndarray,  # () int32 — index of the new token
+    position: jnp.ndarray,  # () or (B,) int32 — index of the new token
     n_heads: int,
     kv_heads: int,
     head_dim: Optional[int] = None,
     rope_theta: float = 10000.0,
     kv_chunk: int = 2048,
+    active: Optional[jnp.ndarray] = None,  # (B,) bool — rows to advance
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One decode step. Returns (out (B,1,D), new_cache_k, new_cache_v).
 
     Flash-style: streams the KV cache in ``kv_chunk`` blocks with a
     running (max, sum, acc) online-softmax state, so peak memory is
     O(B·H·kv_chunk) regardless of context length (long_500k-safe).
+
+    ``position`` may be per-row (B,) — required by continuous batching,
+    where slots sit at different sequence positions (one slot prefilling
+    its prompt while another is mid-generation). ``active`` masks the KV
+    write per row: an inactive row neither stores its (garbage) token
+    nor advances — its cache is byte-identical afterwards — while its
+    attention output is simply ignored by the caller.
     """
     B, _, D = x.shape
     hd = head_dim or D // n_heads
     g = n_heads // kv_heads
     S_max = cache_k.shape[1]
     q, k_new, v_new = _project_qkv(p, x, n_heads, kv_heads, hd)
-    pos = jnp.full((B, 1), position, jnp.int32)
+    pos_vec = jnp.broadcast_to(
+        jnp.asarray(position, jnp.int32), (B,)
+    )
+    pos = pos_vec[:, None]  # (B, 1)
     q = apply_rope(q, pos, rope_theta)  # (B, 1, H, hd)
     k_new = apply_rope(k_new, pos, rope_theta)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k_new.astype(cache_k.dtype), position, axis=1
+    # per-row scatter at each row's own position; inactive rows write
+    # out-of-range and are dropped (cache untouched)
+    write_pos = (
+        pos_vec if active is None else jnp.where(active, pos_vec, S_max)
     )
-    cache_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v_new.astype(cache_v.dtype), position, axis=1
+    b_idx = jnp.arange(B)
+    cache_k = cache_k.at[b_idx, write_pos].set(
+        k_new[:, 0].astype(cache_k.dtype), mode="drop"
+    )
+    cache_v = cache_v.at[b_idx, write_pos].set(
+        v_new[:, 0].astype(cache_v.dtype), mode="drop"
     )
     q = q.reshape(B, kv_heads, g, hd)
     kv_chunk = min(kv_chunk, S_max)  # clamp for short caches
@@ -184,9 +201,10 @@ def attention_decode(
         kc = jax.lax.dynamic_slice_in_dim(cache_k, start, kv_chunk, 1)
         vc = jax.lax.dynamic_slice_in_dim(cache_v, start, kv_chunk, 1)
         idx = start + jnp.arange(kv_chunk)
-        mask = idx <= position  # causal: only written positions
+        # causal, per row: only positions this row has written
+        mask = idx[None, :] <= pos_vec[:, None]  # (B, kv_chunk)
         sc = jnp.einsum("bhgd,bkhd->bhgk", q, kc).astype(jnp.float32) * scale
-        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
         alpha = jnp.exp(m - m_new)
         pr = jnp.exp(sc - m_new[..., None])

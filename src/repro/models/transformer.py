@@ -271,22 +271,32 @@ def decode_step(
     tokens: jnp.ndarray,  # (B, 1) — new token per sequence
     cfg: LMConfig,
     kv_chunk: int = 2048,
+    positions: Optional[jnp.ndarray] = None,  # (B,) per-row override
+    active: Optional[jnp.ndarray] = None,  # (B,) bool — rows to advance
 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """One token of autoregressive decode against the KV cache.
 
     The per-layer scan carries (x, pos) and scans over (layer_params,
     cache_k, cache_v), returning updated caches — KV updates stay inside
     the scan so the whole step is one fused program.
+
+    By default every row decodes at the shared ``state["pos"]`` (the
+    single-sequence / lockstep-batch path). Continuous batching passes
+    ``positions`` — each slot's own sequence position — and ``active``,
+    so one call can prefill a fresh slot's prompt token while other
+    slots are mid-generation: inactive rows neither write their KV slot
+    nor advance (their caches are byte-identical afterwards), and
+    ``state["pos"]`` then carries the per-row vector.
     """
     x = embed(params["embed"], tokens).astype(_dtype(cfg))
-    pos = state["pos"]
+    pos = state["pos"] if positions is None else positions
 
     def body(x, scanned):
         lp, ck, cv = scanned
         h, ck, cv = A.attention_decode(
             lp["attn"], rmsnorm(lp["ln1"], x), ck, cv, pos,
             cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.rope_theta,
-            kv_chunk=kv_chunk,
+            kv_chunk=kv_chunk, active=active,
         )
         x = x + h
         if cfg.is_moe:
@@ -305,5 +315,6 @@ def decode_step(
     )
     x = rmsnorm(params["ln_f"], x)
     logits = unembed(params["embed"], x)  # (B, 1, V)
-    new_state = {"k": ks, "v": vs, "pos": pos + 1}
+    advance = 1 if active is None else active.astype(jnp.int32)
+    new_state = {"k": ks, "v": vs, "pos": pos + advance}
     return logits, new_state

@@ -51,15 +51,19 @@ class RAGPipeline:
         self.k = k
         self.ef = ef
 
-    def add_documents(self, texts: List[str]) -> MutationResult:
+    def add_documents(
+        self, texts: List[str], metadata: Optional[dict] = None
+    ) -> MutationResult:
         """Ingest new documents into the LIVE corpus (DESIGN.md §8):
         embed, insert into the index incrementally (no rebuild), store
         the texts under the new ids. The next ``retrieve`` can return
-        them immediately."""
+        them immediately. ``metadata`` maps column name → one value per
+        document (user id, source, timestamp, …) and feeds the filtered
+        retrieval path (DESIGN.md §9)."""
         if not texts:
             return self.engine.add(np.zeros((0, self.engine.dim)))
         vecs = np.stack([self.embed_fn(t) for t in texts])
-        return self.engine.add(vecs, texts=list(texts))
+        return self.engine.add(vecs, texts=list(texts), metadata=metadata)
 
     def remove_documents(self, ids) -> MutationResult:
         """Forget documents (GDPR-style deletion): tombstones the ids so
@@ -68,43 +72,55 @@ class RAGPipeline:
         lookups key off retrieved ids."""
         return self.engine.delete(ids)
 
-    def update_documents(self, ids, texts: List[str]) -> MutationResult:
+    def update_documents(
+        self, ids, texts: List[str], metadata: Optional[dict] = None
+    ) -> MutationResult:
         """Replace documents: re-embed and upsert (old ids tombstoned,
         replacements live under the returned fresh ids)."""
         vecs = np.stack([self.embed_fn(t) for t in texts])
-        return self.engine.upsert(ids, vecs, texts=list(texts))
+        return self.engine.upsert(
+            ids, vecs, texts=list(texts), metadata=metadata
+        )
 
-    def retrieve(self, query: str) -> Tuple[np.ndarray, List, object]:
+    def retrieve(
+        self, query: str, filter=None
+    ) -> Tuple[np.ndarray, List, object]:
+        """Retrieve top-k documents; ``filter`` (a
+        :class:`repro.core.metadata.Filter`) restricts candidates by
+        metadata — the per-user / per-source / time-window predicate
+        every production RAG query carries (DESIGN.md §9)."""
         qv = self.embed_fn(query)
         res = self.engine.search(
-            SearchRequest(query=qv, k=self.k, ef=self.ef)
+            SearchRequest(query=qv, k=self.k, ef=self.ef, filter=filter)
         )
         texts = self.engine.get_texts(res.ids)
         return res.ids, texts, res.stats
 
     def retrieve_batch(
-        self, queries: List[str]
+        self, queries: List[str], filter=None
     ) -> List[Tuple[np.ndarray, List, object]]:
         """Batched retrieval for many concurrent requests: ONE call into
         the engine's amortized driver (tier-3 misses shared across the
-        whole batch — DESIGN.md §5) instead of one query per request."""
+        whole batch — DESIGN.md §5) instead of one query per request.
+        ``filter`` is one Filter (broadcast) or a per-query sequence."""
         if not queries:
             return []
         Q = np.stack([self.embed_fn(q) for q in queries])
-        res = self.engine.search(SearchRequest(query=Q, k=self.k, ef=self.ef))
+        res = self.engine.search(SearchRequest(
+            query=Q, k=self.k, ef=self.ef, filter=filter))
         return [
             (res.ids[b], self.engine.get_texts(res.ids[b]), res.stats[b])
             for b in range(len(queries))
         ]
 
-    def __call__(self, query: str) -> RAGResult:
-        return self.batch([query])[0]
+    def __call__(self, query: str, filter=None) -> RAGResult:
+        return self.batch([query], filter=filter)[0]
 
-    def batch(self, queries: List[str]) -> List[RAGResult]:
+    def batch(self, queries: List[str], filter=None) -> List[RAGResult]:
         """Serve a batch of RAG requests through batched retrieval."""
         out: List[RAGResult] = []
         for query, (ids, texts, stats) in zip(
-            queries, self.retrieve_batch(queries)
+            queries, self.retrieve_batch(queries, filter=filter)
         ):
             prompt = self.tokenize_fn(query, [t or "" for t in texts])
             res = RAGResult(

@@ -5,15 +5,24 @@ varying lengths; the scheduler packs up to ``max_batch`` active sequences
 into fixed decode slots, admits new requests into freed slots each step,
 and retires sequences that emit EOS or hit their token budget. Slot state
 (one KV cache per slot) is preallocated — static shapes, jit-once.
+
+Prefill runs THROUGH the decode program (the same jitted step that
+generates): on admission, each new request's prompt tokens are fed one
+position at a time into its slot's cache region, with per-slot positions
+and an active-row mask so concurrent slots at different sequence
+positions neither stall nor corrupt each other (see
+``transformer.decode_step`` / ``attention_decode``). This is what makes
+retrieve-before-prefill ordering meaningful: the RAG-augmented prompt is
+what actually populates the KV cache.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -33,12 +42,37 @@ class Request:
     retrieved_dists: Optional[np.ndarray] = None  # (k,) float32
 
 
+class SchedulerExhausted(RuntimeError):
+    """``run_until_done`` hit ``max_steps`` with work still outstanding.
+
+    Carries the partial results so callers can salvage them: ``completed``
+    maps rid → finished Request; ``n_unfinished`` counts the requests
+    still pending or mid-generation when the budget ran out.
+    """
+
+    def __init__(self, completed: Dict[int, Request], n_unfinished: int):
+        super().__init__(
+            f"scheduler budget exhausted with {n_unfinished} request(s) "
+            f"unfinished ({len(completed)} completed)"
+        )
+        self.completed = completed
+        self.n_unfinished = n_unfinished
+
+
 class ContinuousBatcher:
-    """Fixed-slot continuous batching over a single decode program."""
+    """Fixed-slot continuous batching over a single decode program.
+
+    ``decode_fn`` may accept either the lockstep signature
+    ``(params, state, tokens (B,1))`` or the continuous-batching one
+    ``(params, state, tokens, positions (B,), active (B,))``. Only the
+    latter supports per-slot positions, which real prefill needs — with
+    a 3-arg decode_fn the scheduler still works but assumes the decode
+    state is position-oblivious (toy LMs in tests).
+    """
 
     def __init__(
         self,
-        decode_fn: Callable,  # (params, state, tokens (B,1)) → (logits, state)
+        decode_fn: Callable,  # see class docstring
         init_state_fn: Callable,  # (batch, max_len) → state
         params,
         max_batch: int = 8,
@@ -66,11 +100,32 @@ class ContinuousBatcher:
         self.slot_remaining = np.zeros(max_batch, np.int64)
         self.pending: Deque[Request] = deque()
         self.completed: Dict[int, Request] = {}
+        self.exhausted = False
         self._next_token = np.zeros((max_batch, 1), np.int32)
+        try:
+            n_params = len(inspect.signature(decode_fn).parameters)
+        except (TypeError, ValueError):  # builtins/partials may hide it
+            n_params = 5
+        self._positional_decode = n_params >= 5
 
     def submit(self, req: Request):
         req.generated = []
         self.pending.append(req)
+
+    # ------------------------------------------------------------ decode
+
+    def _decode(self, tokens: np.ndarray, active: np.ndarray):
+        """One decode-program call for the given token column. Rows with
+        ``active`` False must leave their cache state untouched."""
+        if self._positional_decode:
+            return self.decode_fn(
+                self.params, self.state, jnp.asarray(tokens),
+                jnp.asarray(self.slot_pos.astype(np.int32)),
+                jnp.asarray(active),
+            )
+        return self.decode_fn(self.params, self.state, jnp.asarray(tokens))
+
+    # ------------------------------------------------------------- admit
 
     def _admit(self):
         admitted: List[tuple] = []
@@ -79,17 +134,32 @@ class ContinuousBatcher:
                 req = self.pending.popleft()
                 self.slots[slot] = req
                 admitted.append((slot, req))
+        if not admitted:
+            return
         # retrieval BEFORE prefill: augment_fn rebuilds each prompt
         # around the retrieved context before any token enters the cache
         self._retrieve_for([r for _, r in admitted])
         for slot, req in admitted:
-            # prefill: feed prompt tokens through the shared decode
-            # program one at a time into this slot's cache region.
-            for t in req.prompt:
-                self._next_token[slot, 0] = t
-            # simplified single-slot prefill: the shared-position cache
-            # advances globally; per-slot positions tracked host-side.
+            if len(req.prompt) == 0:
+                raise ValueError(f"request {req.rid}: empty prompt")
+            self.slot_pos[slot] = 0
             self.slot_remaining[slot] = req.max_new
+        # prefill: feed prompt tokens through the decode program, one
+        # position per call, ALL newly admitted slots in parallel. The
+        # last prompt token is left for step() — its logits produce the
+        # first generated token. Slots mid-generation stay inactive
+        # (masked out of the KV write) and do not advance.
+        max_prefill = max(len(req.prompt) - 1 for _, req in admitted)
+        for j in range(max_prefill):
+            tokens = self._next_token.copy()
+            active = np.zeros(self.max_batch, bool)
+            for slot, req in admitted:
+                if j < len(req.prompt) - 1:
+                    tokens[slot, 0] = req.prompt[j]
+                    active[slot] = True
+            _, self.state = self._decode(tokens, active)
+            self.slot_pos[active] += 1
+        for slot, req in admitted:
             self._next_token[slot, 0] = req.prompt[-1]
 
     def _retrieve_for(self, admitted: List[Request]) -> None:
@@ -113,19 +183,22 @@ class ContinuousBatcher:
                     self.augment_fn(req), np.int32
                 )
 
+    # -------------------------------------------------------------- step
+
     def step(self) -> int:
         """One decode step for all active slots. Returns #active."""
         self._admit()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
-        if not active:
+        active_slots = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active_slots:
             return 0
-        logits, self.state = self.decode_fn(
-            self.params, self.state, jnp.asarray(self._next_token)
-        )
+        active = np.zeros(self.max_batch, bool)
+        active[active_slots] = True
+        logits, self.state = self._decode(self._next_token, active)
         nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1)).astype(
             np.int32
         )
-        for i in active:
+        self.slot_pos[active] += 1
+        for i in active_slots:
             req = self.slots[i]
             tok = int(nxt[i])
             req.generated.append(tok)
@@ -136,11 +209,29 @@ class ContinuousBatcher:
                 self.slots[i] = None
             else:
                 self._next_token[i, 0] = tok
-        return len(active)
+        return len(active_slots)
 
-    def run_until_done(self, max_steps: int = 10_000) -> Dict[int, Request]:
+    def run_until_done(
+        self, max_steps: int = 10_000, strict: bool = True
+    ) -> Dict[int, Request]:
+        """Drive steps until every submitted request completes.
+
+        If ``max_steps`` elapses with requests still pending or
+        mid-generation, the truncation is NEVER silent: ``strict=True``
+        (default) raises :class:`SchedulerExhausted` (partial results on
+        the exception); ``strict=False`` returns the partial
+        ``completed`` dict with ``self.exhausted`` set.
+        """
+        self.exhausted = False
         for _ in range(max_steps):
             if not self.pending and all(s is None for s in self.slots):
-                break
+                return self.completed
             self.step()
+        n_left = len(self.pending) + sum(
+            s is not None for s in self.slots
+        )
+        if n_left:
+            self.exhausted = True
+            if strict:
+                raise SchedulerExhausted(self.completed, n_left)
         return self.completed

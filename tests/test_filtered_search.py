@@ -1,0 +1,441 @@
+"""Metadata-filtered search (DESIGN.md §9): predicate DSL, per-query
+deny masks across all three drivers, route-but-don't-return semantics,
+filter ∧ tombstone composition, the zero-extra-accesses invariant, and
+metadata persistence."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
+from repro.core.eval import brute_force_topk, recall_at_k
+from repro.core.metadata import Filter, MetadataStore
+
+N, D = 600, 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(11)
+    X = rng.standard_normal((N, D)).astype(np.float32)
+    Q = rng.standard_normal((8, D)).astype(np.float32)
+    meta = {
+        "user": np.arange(N) % 10,               # eq/in_ selectivities
+        "ts": np.arange(N, dtype=np.float64),    # range selectivities
+        "source": np.array(
+            ["web", "pdf", "web", "doc", "web"] * (N // 5)
+        ),
+    }
+    return X, Q, meta
+
+
+def _build(X, meta, cfg=None, **kw):
+    return WebANNSEngine.build(
+        X, M=8, ef_construction=48, seed=3,
+        config=cfg or EngineConfig(cache_capacity=128),
+        metadata=meta, **kw,
+    )
+
+
+def _search_ids(eng, Q, k, ef, mode, filt):
+    if mode == "fused":
+        return np.stack([
+            eng.search(SearchRequest(query=q, k=k, ef=ef, filter=filt)).ids
+            for q in Q
+        ])
+    return np.asarray(eng.search(SearchRequest(
+        query=Q, k=k, ef=ef, batch_mode=mode, filter=filt)).ids)
+
+
+def _oracle(X, Q, k, allow):
+    ids = np.nonzero(allow)[0]
+    return ids[brute_force_topk(X[ids], Q, k)]
+
+
+# ------------------------------------------------------------- DSL units
+
+
+def test_filter_dsl_masks(corpus):
+    _, _, meta = corpus
+    store = MetadataStore(meta)
+    u = np.asarray(meta["user"])
+    ts = np.asarray(meta["ts"])
+    src = np.asarray(meta["source"])
+    np.testing.assert_array_equal(
+        Filter.eq("user", 3).mask(store), u == 3)
+    np.testing.assert_array_equal(
+        Filter.in_("source", ["web", "doc"]).mask(store),
+        np.isin(src, ["web", "doc"]))
+    np.testing.assert_array_equal(
+        Filter.range("ts", lo=100, hi=199).mask(store),
+        (ts >= 100) & (ts <= 199))
+    np.testing.assert_array_equal(
+        Filter.range("ts", hi=49).mask(store), ts <= 49)
+    composed = Filter.and_(
+        Filter.eq("source", "web"), Filter.not_(Filter.eq("user", 0)))
+    np.testing.assert_array_equal(
+        composed.mask(store), (src == "web") & (u != 0))
+    # operator sugar is the same tree
+    np.testing.assert_array_equal(
+        ((Filter.eq("source", "web") & ~Filter.eq("user", 0))
+         | Filter.eq("user", 5)).mask(store),
+        ((src == "web") & (u != 0)) | (u == 5))
+
+
+def test_filter_errors(corpus):
+    X, Q, meta = corpus
+    store = MetadataStore(meta)
+    with pytest.raises(KeyError, match="unknown metadata column"):
+        Filter.eq("nope", 1).mask(store)
+    with pytest.raises(ValueError, match="at least one bound"):
+        Filter.range("ts")
+    with pytest.raises(ValueError, match="no metadata"):
+        Filter.eq("user", 1).mask(None)
+    bare = WebANNSEngine.build(
+        X, M=8, ef_construction=48, seed=3,
+        config=EngineConfig(cache_capacity=128))
+    with pytest.raises(ValueError, match="no metadata"):
+        bare.search(SearchRequest(
+            query=Q[0], k=5, filter=Filter.eq("user", 1)))
+
+
+def test_metadata_store_extend_and_backfill():
+    store = MetadataStore({"user": [1, 2]})
+    store.extend(2, {"user": [3, 4], "lang": ["en", "fr"]})
+    np.testing.assert_array_equal(store.column("user"), [1, 2, 3, 4])
+    np.testing.assert_array_equal(
+        store.column("lang"), ["", "", "en", "fr"])
+    store.extend(1)  # no values: fills
+    assert store.column("user")[-1] == 0
+    assert store.n_rows == 5
+    with pytest.raises(ValueError, match="values for"):
+        store.extend(2, {"user": [1]})
+
+
+# ------------------------------------------- oracle parity, all drivers
+
+
+@pytest.mark.parametrize("mode", ["loop", "batched", "fused"])
+@pytest.mark.parametrize("precision", ["float32", "int8"])
+def test_filtered_recall_against_oracle(corpus, mode, precision):
+    """Acceptance: filtered top-k at selectivity >= 0.1 reaches
+    recall@10 >= 0.95 against the brute-force-filtered oracle in every
+    driver and precision mode (int8 exercises the exact-rerank path)."""
+    X, Q, meta = corpus
+    cfg = EngineConfig(cache_capacity=128, fused=(mode == "fused"),
+                       precision=precision)
+    eng = _build(X, meta, cfg)
+    store = MetadataStore(meta)
+    for filt, sel in [
+        (Filter.in_("user", list(range(5))), 0.5),
+        (Filter.eq("user", 7), 0.1),
+    ]:
+        allow = filt.mask(store)
+        assert abs(allow.mean() - sel) < 0.01
+        ids = _search_ids(eng, Q, 10, 64, mode, filt)
+        assert (ids >= 0).all()
+        allowed = set(np.nonzero(allow)[0].tolist())
+        assert set(ids.ravel().tolist()) <= allowed, \
+            f"{mode}/{precision}: filtered-out id returned at sel={sel}"
+        rec = recall_at_k(ids, _oracle(X, Q, 10, allow))
+        assert rec >= 0.95, f"{mode}/{precision} sel={sel}: recall {rec}"
+
+
+def test_loop_batched_parity_with_filters(corpus):
+    """Both host drivers return identical filtered results (they share
+    one effective ef per batch)."""
+    X, Q, meta = corpus
+    eng = _build(X, meta)
+    filt = Filter.eq("source", "pdf")
+    a = _search_ids(eng, Q, 8, 48, "loop", filt)
+    b = _search_ids(eng, Q, 8, 48, "batched", filt)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_per_query_filters_in_one_batch(corpus):
+    """A batch may carry one filter per query ((B, N) deny matrix),
+    including None entries (unfiltered rows)."""
+    X, Q, meta = corpus
+    eng = _build(X, meta)
+    u = np.asarray(meta["user"])
+    filters = [Filter.eq("user", 1), None, Filter.eq("user", 2),
+               Filter.range("ts", lo=300)]
+    res = eng.search(SearchRequest(
+        query=Q[:4], k=6, ef=48, filter=filters))
+    ids = np.asarray(res.ids)
+    assert set(u[ids[0]]) == {1}
+    assert set(u[ids[2]]) == {2}
+    assert (ids[3] >= 300).all()
+    # the unfiltered row matches the unfiltered oracle's candidates
+    assert (ids[1] >= 0).all()
+    with pytest.raises(ValueError, match="one per query"):
+        eng.search(SearchRequest(query=Q[:4], k=6, filter=filters[:2]))
+
+
+# ----------------------------------------- tombstones compose with filters
+
+
+@pytest.mark.parametrize("mode", ["loop", "batched", "fused"])
+def test_filter_and_tombstone_composition(corpus, mode):
+    """A mutated-then-filtered index returns no tombstoned AND no
+    filtered-out id from any path (acceptance)."""
+    X, Q, meta = corpus
+    cfg = EngineConfig(cache_capacity=128, fused=(mode == "fused"))
+    eng = _build(X, meta, cfg)
+    filt = Filter.in_("user", [0, 1, 2, 3, 4])
+    allow = filt.mask(MetadataStore(meta))
+    # tombstone the filtered search's own current top hits
+    top = _search_ids(eng, Q[:1], 10, 64, mode, filt)[0]
+    victims = top[:5]
+    eng.delete(victims)
+    ids = _search_ids(eng, Q, 10, 64, mode, filt)
+    returned = set(ids.ravel().tolist()) - {-1}
+    assert not returned & set(victims.tolist()), "tombstoned id returned"
+    assert returned <= set(np.nonzero(allow)[0].tolist())
+    # live-allowed oracle recall stays high
+    allow_live = allow & ~eng.tombstones
+    rec = recall_at_k(ids, _oracle(X, Q, 10, allow_live))
+    assert rec >= 0.9
+
+
+# --------------------------------------------------- empty-result filters
+
+
+@pytest.mark.parametrize("mode", ["loop", "batched", "fused"])
+def test_empty_filter_returns_all_padding(corpus, mode):
+    X, Q, meta = corpus
+    cfg = EngineConfig(cache_capacity=128, fused=(mode == "fused"))
+    eng = _build(X, meta, cfg)
+    filt = Filter.eq("user", 999)
+    ids = _search_ids(eng, Q[:3], 5, 48, mode, filt)
+    assert (ids == -1).all()
+
+
+# --------------------------------------- the zero-extra-accesses invariant
+
+
+@pytest.mark.parametrize("mode", ["loop", "batched", "fused"])
+@pytest.mark.parametrize("precision", ["float32", "int8"])
+def test_filtering_adds_zero_tier3_accesses(corpus, mode, precision):
+    """Strict AccessStats assertion: at the same effective ef, a
+    filtered run performs EXACTLY the accesses of the unfiltered run —
+    route-but-don't-return masking changes which ids return, never the
+    traversal (metadata is host-resident; the deny mask costs no
+    fetch). filter_ef_cap=1.0 pins ef_eff == ef."""
+    X, Q, meta = corpus
+
+    def run(filt):
+        cfg = EngineConfig(cache_capacity=64, fused=(mode == "fused"),
+                           precision=precision, filter_ef_cap=1.0)
+        eng = _build(X, meta, cfg)
+        _search_ids(eng, Q, 10, 64, mode, filt)
+        return (eng.external.stats.n_db, eng.external.stats.items_fetched)
+
+    base_db, base_items = run(None)
+    filt_db, filt_items = run(Filter.in_("user", [2, 3]))
+    assert base_db > 0  # cold cache: the unfiltered run did hit tier 3
+    assert filt_db == base_db, (
+        f"{mode}/{precision}: filtering changed tier-3 access count "
+        f"{base_db} -> {filt_db}"
+    )
+    if precision == "float32":
+        # no rerank: the fetch stream itself is identical
+        assert filt_items == base_items
+
+
+# ------------------------------------------------- selectivity-adaptive ef
+
+
+def test_ef_boost_monotone_and_capped(corpus):
+    X, _, meta = corpus
+    eng = _build(X, meta)
+    assert eng._boost_ef(64, 1.0) == 64
+    assert eng._boost_ef(64, 0.25) == 128   # sqrt(4) = 2x
+    assert eng._boost_ef(64, 0.01) == 256   # sqrt(100)=10x capped at 4x
+    assert eng._boost_ef(64, 1e-12) == 256  # cap holds at the extreme
+    eng.config.filter_ef_cap = 1.0
+    assert eng._boost_ef(64, 0.01) == 64    # cap 1.0 disables the boost
+
+
+def test_tight_filter_recall_needs_boost(corpus):
+    """The boost is what holds recall up under tight filters: sel=0.1
+    with the boost on beats the same search with the boost disabled (or
+    at minimum matches it while hitting the acceptance bar)."""
+    X, Q, meta = corpus
+    filt = Filter.eq("user", 7)
+    allow = filt.mask(MetadataStore(meta))
+    truth = _oracle(X, Q, 10, allow)
+    boosted = _build(X, meta, EngineConfig(cache_capacity=128))
+    rec_boost = recall_at_k(
+        _search_ids(boosted, Q, 10, 32, "batched", filt), truth)
+    flat = _build(X, meta, EngineConfig(cache_capacity=128,
+                                        filter_ef_cap=1.0))
+    rec_flat = recall_at_k(
+        _search_ids(flat, Q, 10, 32, "batched", filt), truth)
+    assert rec_boost >= rec_flat
+    assert rec_boost >= 0.95
+
+
+# ------------------------------------------------------- mutation + meta
+
+
+def test_add_extends_metadata_and_filters_new_rows(corpus):
+    X, Q, meta = corpus
+    rng = np.random.default_rng(5)
+    eng = _build(X, meta)
+    X2 = rng.standard_normal((20, D)).astype(np.float32)
+    res = eng.add(X2, metadata={"user": [77] * 20,
+                                "source": ["new"] * 20,
+                                "ts": [1e6] * 20})
+    assert eng.metadata.n_rows == eng.n
+    ids = np.asarray(eng.search(SearchRequest(
+        query=X2[3], k=5, ef=48, filter=Filter.eq("user", 77))).ids)
+    assert set(ids.tolist()) <= set(res.ids.tolist())
+    # upsert: the fresh row carries fresh metadata; the old id is dead
+    up = eng.upsert([int(res.ids[0])], X2[:1] * 0.5,
+                    metadata={"user": [88], "source": ["upd"],
+                              "ts": [2e6]})
+    assert eng.metadata.column("user")[up.ids[0]] == 88
+    got = np.asarray(eng.search(SearchRequest(
+        query=X2[0] * 0.5, k=1, ef=48, filter=Filter.eq("user", 88))).ids)
+    assert got.tolist() == up.ids.tolist()
+
+
+def test_add_without_metadata_fills_columns(corpus):
+    X, _, meta = corpus
+    eng = _build(X, meta)
+    eng.add(np.zeros((3, D), np.float32))
+    assert eng.metadata.n_rows == eng.n
+    assert (eng.metadata.column("user")[-3:] == 0).all()
+    assert (eng.metadata.column("source")[-3:] == "").all()
+
+
+# ---------------------------------------------------------- persistence
+
+
+def test_metadata_save_load_roundtrip(tmp_path, corpus):
+    X, Q, meta = corpus
+    path = str(tmp_path / "idx")
+    eng = _build(X, meta)
+    info = eng.save(path)
+    assert info["mode"] == "full"
+    re = WebANNSEngine.open(path, config=EngineConfig(cache_capacity=128))
+    assert re.metadata is not None
+    for name in ("user", "ts", "source"):
+        np.testing.assert_array_equal(
+            re.metadata.column(name), eng.metadata.column(name))
+    filt = Filter.eq("user", 4) & Filter.range("ts", hi=400)
+    req = SearchRequest(query=Q, k=8, ef=48, filter=filt)
+    np.testing.assert_array_equal(
+        np.asarray(eng.search(req).ids), np.asarray(re.search(req).ids))
+
+
+def test_metadata_survives_delta_save(tmp_path, corpus):
+    """add() rows' metadata lands in the delta save and filters after
+    reopen; the manifest lists the column files."""
+    import json
+    import os
+
+    X, Q, meta = corpus
+    rng = np.random.default_rng(6)
+    path = str(tmp_path / "idx")
+    eng = _build(X, meta)
+    eng.save(path)
+    X2 = rng.standard_normal((10, D)).astype(np.float32)
+    eng.add(X2, metadata={"user": [55] * 10, "ts": [9e5] * 10,
+                          "source": ["delta"] * 10})
+    info = eng.save(path)
+    assert info["mode"] == "delta"
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    names = {c["name"] for c in manifest["metadata_columns"]}
+    assert names == {"user", "ts", "source"}
+    re = WebANNSEngine.open(path, config=EngineConfig(cache_capacity=128))
+    assert re.metadata.n_rows == eng.n
+    np.testing.assert_array_equal(
+        re.metadata.column("source")[-10:], ["delta"] * 10)
+    got = np.asarray(re.search(SearchRequest(
+        query=X2[2], k=3, ef=48, filter=Filter.eq("user", 55))).ids)
+    assert (got >= len(X)).all()
+
+
+def test_reopened_metadata_keeps_dtypes_and_accepts_add(tmp_path, corpus):
+    """Regression: fill-value dtype inference used to retype int64
+    columns to float64 (and str to a widened unicode) on every reopen,
+    after which add(metadata=...) with int values raised mid-mutation."""
+    X, _, meta = corpus
+    path = str(tmp_path / "idx")
+    eng = _build(X, meta)
+    eng.save(path)
+    re = WebANNSEngine.open(path, config=EngineConfig(cache_capacity=128))
+    assert re.metadata.column("user").dtype == np.int64
+    assert re.metadata.column("ts").dtype == np.float64
+    assert re.metadata.column("source").dtype.kind == "U"
+    res = re.add(np.zeros((2, D), np.float32),
+                 metadata={"user": [1, 2], "ts": [0.5, 0.5],
+                           "source": ["a", "b"]})
+    assert re.metadata.n_rows == re.n
+    assert re.metadata.column("user")[res.ids[0]] == 1
+
+
+def test_bad_metadata_add_fails_before_mutation(corpus):
+    """Regression: a kind-mismatched metadata dict used to raise AFTER
+    the vectors/graph were committed, leaving metadata.n_rows != n and
+    every later filtered search broken. It must fail atomically."""
+    X, Q, meta = corpus
+    eng = _build(X, meta)
+    n0 = eng.n
+    with pytest.raises(TypeError, match="holds int values"):
+        eng.add(np.zeros((2, D), np.float32),
+                metadata={"user": ["alice", "bob"]})
+    assert eng.n == n0  # nothing was committed
+    assert eng.metadata.n_rows == eng.n
+    ids = np.asarray(eng.search(SearchRequest(
+        query=Q[0], k=5, ef=48, filter=Filter.eq("user", 1))).ids)
+    assert (ids >= 0).all()  # filtered search still works
+
+
+def test_upsert_without_metadata_carries_it_forward(corpus):
+    """An upsert that passes no metadata must inherit the retired rows'
+    values — otherwise the replacement silently drops out of every
+    filtered view its document belonged to."""
+    X, _, meta = corpus
+    eng = _build(X, meta)
+    target = 37
+    old_user = int(eng.metadata.column("user")[target])
+    res = eng.upsert([target], X[target:target + 1] * 1.5)
+    new_id = int(res.ids[0])
+    assert int(eng.metadata.column("user")[new_id]) == old_user
+    assert eng.metadata.column("source")[new_id] == \
+        eng.metadata.column("source")[target]
+    got = np.asarray(eng.search(SearchRequest(
+        query=X[target] * 1.5, k=1, ef=48,
+        filter=Filter.eq("user", old_user))).ids)
+    assert got.tolist() == [new_id]
+    # and a bad explicit metadata dict fails BEFORE the delete
+    with pytest.raises(TypeError, match="holds int values"):
+        eng.upsert([new_id], X[:1], metadata={"user": ["oops"]})
+    assert not eng.tombstones[new_id]
+
+
+# ----------------------------------------------------------- RAG surface
+
+
+def test_rag_filtered_retrieve(corpus):
+    from repro.serve.rag import RAGPipeline
+
+    X, _, meta = corpus
+    texts = [f"doc {i}" for i in range(N)]
+    eng = _build(X, meta, texts=texts)
+
+    def embed(q):
+        return X[int(q)]
+
+    pipe = RAGPipeline(eng, embed,
+                       lambda q, ts: np.zeros(4, np.int32), k=4, ef=48)
+    filt = Filter.eq("user", 17 % 10)
+    ids, got_texts, _ = pipe.retrieve("17", filter=filt)
+    assert 17 in ids.tolist()
+    assert all(int(i) % 10 == 7 for i in ids)
+    assert got_texts[ids.tolist().index(17)] == "doc 17"
+    outs = pipe.batch(["17", "27"], filter=filt)
+    assert all(17 in o.retrieved_ids.tolist() or
+               27 in o.retrieved_ids.tolist() for o in outs)

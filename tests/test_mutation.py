@@ -415,6 +415,50 @@ def test_delta_save_smaller_than_full_save(tmp_path, corpus):
     assert delta["bytes_written"] < 0.5 * full["bytes_written"]
 
 
+# ------------------------------------------------- tombstone-aware texts
+
+
+def test_get_texts_returns_none_for_deleted_ids(corpus):
+    """Regression (ISSUE 5): DocStore.get used to serve the old text for
+    tombstoned ids, so deleted content stayed retrievable by id."""
+    X, _, _ = corpus
+    texts = [f"doc {i}" for i in range(len(X))]
+    eng = _build(X, texts=texts)
+    assert eng.get_texts(np.array([3, 4])) == ["doc 3", "doc 4"]
+    eng.delete([3])
+    assert eng.get_texts(np.array([3, 4])) == [None, "doc 4"]
+    # -1 padding and out-of-range stay None as before
+    assert eng.get_texts(np.array([-1, len(X) + 5])) == [None, None]
+
+
+def test_get_texts_after_upsert_hides_old_id(corpus):
+    X, _, _ = corpus
+    texts = [f"doc {i}" for i in range(len(X))]
+    eng = _build(X, texts=texts)
+    res = eng.upsert([7], X[7:8] * 2.0, texts=["doc 7 v2"])
+    assert eng.get_texts(np.array([7])) == [None]  # old id: deleted
+    assert eng.get_texts(res.ids) == ["doc 7 v2"]  # fresh id: new text
+
+
+def test_rag_remove_documents_forgets_texts(corpus):
+    """The GDPR path end-to-end: after remove_documents, neither
+    retrieval nor direct id lookup can surface the deleted text."""
+    from repro.serve.rag import RAGPipeline
+
+    X, _, Q = corpus
+    texts = [f"doc {i}" for i in range(len(X))]
+    eng = _build(X, texts=texts)
+    pipe = RAGPipeline(eng, lambda q: X[int(q)],
+                       lambda q, ts: np.zeros(4, np.int32), k=3)
+    victim = int(eng.search(SearchRequest(query=X[12], k=1, ef=32)).ids[0])
+    assert victim == 12
+    pipe.remove_documents([victim])
+    assert eng.get_texts(np.array([victim])) == [None]
+    ids, got, _ = pipe.retrieve(str(12))
+    assert victim not in ids.tolist()
+    assert None not in [t for i, t in zip(ids, got) if i >= 0]
+
+
 # ----------------------------------------------------------- RAG surface
 
 

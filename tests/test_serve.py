@@ -11,7 +11,11 @@ from repro.core.hnsw import build_hnsw
 from repro.data.synthetic import corpus_embeddings, corpus_texts
 from repro.models import transformer as T
 from repro.serve.rag import RAGPipeline, budget_retrieval
-from repro.serve.scheduler import ContinuousBatcher, Request
+from repro.serve.scheduler import (
+    ContinuousBatcher,
+    Request,
+    SchedulerExhausted,
+)
 from repro.serve.serve_loop import greedy_generate, make_prefill_step
 
 KEY = jax.random.PRNGKey(0)
@@ -55,7 +59,9 @@ def test_continuous_batcher_completes_requests(tiny_lm):
     rng = np.random.default_rng(0)
     batcher = ContinuousBatcher(
         decode_fn=jax.jit(
-            lambda p, s, t: T.decode_step(p, s, t, cfg, kv_chunk=8)
+            lambda p, s, t, pos, act: T.decode_step(
+                p, s, t, cfg, kv_chunk=8, positions=pos, active=act
+            )
         ),
         init_state_fn=lambda b, l: T.init_decode_state(cfg, b, l),
         params=params,
@@ -72,6 +78,127 @@ def test_continuous_batcher_completes_requests(tiny_lm):
     assert sorted(done) == list(range(6))
     for r in done.values():
         assert len(r.generated) == 4
+
+
+def test_prefill_populates_kv_cache(tiny_lm):
+    """Regression (ISSUE 5): _admit used to assign prompt tokens into
+    the next-token buffer without ever calling the decode program, so
+    the KV cache never saw ANY prompt token. The continuation must (a)
+    match the single-stream greedy reference exactly and (b) provably
+    depend on an early prompt token."""
+    cfg, params = tiny_lm
+    rng = np.random.default_rng(3)
+    p1 = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    p2 = p1.copy()
+    p2[0] = (p2[0] + 7) % cfg.vocab  # differ ONLY in the first token
+
+    def make_batcher():
+        return ContinuousBatcher(
+            decode_fn=jax.jit(
+                lambda p, s, t, pos, act: T.decode_step(
+                    p, s, t, cfg, kv_chunk=8, positions=pos, active=act
+                )
+            ),
+            init_state_fn=lambda b, l: T.init_decode_state(cfg, b, l),
+            params=params,
+            max_batch=2,
+            max_len=16,
+        )
+
+    b = make_batcher()
+    b.submit(Request(rid=0, prompt=p1, max_new=5))
+    b.submit(Request(rid=1, prompt=p2, max_new=5))
+    done = b.run_until_done()
+    ref = greedy_generate(params, cfg, jnp.asarray(np.stack([p1, p2])),
+                          n_new=5, max_len=16, kv_chunk=8)
+    assert done[0].generated == np.asarray(ref[0, 4:]).tolist()
+    assert done[1].generated == np.asarray(ref[1, 4:]).tolist()
+    # flipping prompt[0] changed the continuation — grounding works
+    assert done[0].generated != done[1].generated
+
+
+def test_staggered_slots_do_not_corrupt_each_other():
+    """Per-slot positions: a request admitted mid-flight (prefilling
+    while another slot is mid-generation) must decode exactly as if it
+    ran alone. Uses a deterministic cache-echo LM whose output at step t
+    is an exact function of the tokens its slot has stored, so any
+    cross-slot clobber or position error changes the output."""
+    V = 97
+
+    def decode_fn(params, state, tokens, positions, active):
+        # state: (B, max_len) int32 token cache (a toy KV cache)
+        B, L = state.shape
+        b_idx = jnp.arange(B)
+        pos = jnp.where(active, positions, L)
+        state = state.at[b_idx, pos].set(tokens[:, 0], mode="drop")
+        # next token = (sum of tokens written so far + first token) % V
+        written = jnp.arange(L)[None, :] <= positions[:, None]
+        s = jnp.sum(jnp.where(written, state, 0), axis=1)
+        nxt = (s + state[:, 0]) % V
+        logits = jax.nn.one_hot(nxt, V)[:, None, :]
+        return logits, state
+
+    def expected(prompt, n_new):
+        toks = list(prompt)
+        out = []
+        for _ in range(n_new):
+            nxt = (sum(toks) + toks[0]) % V
+            out.append(int(nxt))
+            toks.append(nxt)
+        return out
+
+    prompts = [
+        np.array([5, 11, 2], np.int32),
+        np.array([9], np.int32),
+        np.array([1, 2, 3, 4, 60], np.int32),
+        np.array([44, 13], np.int32),
+    ]
+    b = ContinuousBatcher(
+        decode_fn=decode_fn,
+        init_state_fn=lambda bs, ln: jnp.zeros((bs, ln), jnp.int32),
+        params=None,
+        max_batch=2,  # 4 requests through 2 slots → staggered admission
+        max_len=32,
+    )
+    for rid, p in enumerate(prompts):
+        b.submit(Request(rid=rid, prompt=p, max_new=4))
+    done = b.run_until_done()
+    for rid, p in enumerate(prompts):
+        assert done[rid].generated == expected(p, 4), f"request {rid}"
+
+
+def test_run_until_done_exhaustion_is_explicit(tiny_lm):
+    cfg, params = tiny_lm
+
+    def make_batcher():
+        return ContinuousBatcher(
+            decode_fn=jax.jit(
+                lambda p, s, t, pos, act: T.decode_step(
+                    p, s, t, cfg, kv_chunk=8, positions=pos, active=act
+                )
+            ),
+            init_state_fn=lambda b, l: T.init_decode_state(cfg, b, l),
+            params=params,
+            max_batch=2,
+            max_len=32,
+        )
+
+    b = make_batcher()
+    for rid in range(4):
+        b.submit(Request(rid=rid, prompt=np.array([1, 2], np.int32),
+                         max_new=6))
+    with pytest.raises(SchedulerExhausted, match="unfinished"):
+        b.run_until_done(max_steps=3)
+    # non-strict: partial results + the explicit flag, never silence
+    b2 = make_batcher()
+    for rid in range(4):
+        b2.submit(Request(rid=rid, prompt=np.array([1, 2], np.int32),
+                          max_new=6))
+    partial = b2.run_until_done(max_steps=3, strict=False)
+    assert b2.exhausted and len(partial) < 4
+    # a sufficient budget completes and clears the flag
+    done = b2.run_until_done()
+    assert not b2.exhausted and sorted(done) == list(range(4))
 
 
 # ------------------------------------------------------------------- RAG
