@@ -1,0 +1,143 @@
+"""Shard-count scaling bench: QPS and p50/p99 vs EngineConfig.n_shards.
+
+Runs the mesh-sharded driver (DESIGN.md §10) over a ≥100k synthetic
+corpus for shard counts {1, 2, 4, 8} and writes reports/BENCH_shard.json.
+Simulated devices come from XLA's forced host platform device count, so
+the numbers measure the sharded program's OVERHEAD trajectory (collective
++ merge cost on one CPU), not real multi-chip speedup — the JSON records
+that caveat. ``--assert-parity`` additionally checks the sharded ids are
+bit-identical to the warmed single-device driver at every shard count.
+
+  PYTHONPATH=src python -m benchmarks.bench_shard [--n 100000] [--assert-parity]
+"""
+
+from __future__ import annotations
+
+import os
+
+# must precede ANY jax import (simulated mesh for the sharded driver)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import CACHE_DIR, csv_row
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
+from repro.core.graph import HNSWGraph
+from repro.core.hnsw import build_hnsw
+from repro.data.synthetic import corpus_embeddings
+
+BENCH_JSON = os.path.join("reports", "BENCH_shard.json")
+
+
+def _get_index(n: int, d: int, M: int = 12, efc: int = 80):
+    """Graph cache keyed by corpus params (same scheme as common.get_index;
+    the 100k build is minutes of CPU, so it is built once per cache dir)."""
+    X = corpus_embeddings(n, d, n_clusters=max(8, n // 250), seed=13)
+    path = os.path.join(CACHE_DIR, f"shard_{n}_{d}_M{M}_efc{efc}")
+    if os.path.exists(os.path.join(path, "manifest.json")):
+        g = HNSWGraph.load(path)
+    else:
+        g = build_hnsw(X, M=M, ef_construction=efc, seed=0)
+        os.makedirs(CACHE_DIR, exist_ok=True)
+        g.save(path)
+    return X, g
+
+
+def bench_shard(
+    n: int = 100_000,
+    d: int = 32,
+    shard_counts=(1, 2, 4, 8),
+    n_queries: int = 64,
+    batch: int = 16,
+    k: int = 10,
+    assert_parity: bool = False,
+) -> List[str]:
+    import jax
+
+    n_dev = len(jax.devices())
+    X, g = _get_index(n, d)
+    rng = np.random.default_rng(5)
+    base = X[rng.choice(n, n_queries)]
+    Q = base + 0.25 * rng.standard_normal(base.shape).astype(np.float32)
+    batches = [Q[i:i + batch] for i in range(0, n_queries, batch)]
+
+    want = None
+    if assert_parity:
+        ref = WebANNSEngine(X, g, EngineConfig())
+        ref.warm_cache()
+        want = ref.search(SearchRequest(query=Q, k=k))
+
+    rows: List[str] = []
+    entries = []
+    for S in shard_counts:
+        if S > n_dev:
+            rows.append(csv_row(f"shard_S{S}", float("nan"),
+                                f"skipped:devices={n_dev}"))
+            continue
+        eng = WebANNSEngine(X, g, EngineConfig(n_shards=S))
+        eng.search(SearchRequest(query=batches[0], k=k))  # compile+state
+        lats = []
+        for qb in batches:
+            t0 = time.perf_counter()
+            eng.search(SearchRequest(query=qb, k=k))
+            lats.append(time.perf_counter() - t0)
+        if assert_parity:
+            got = eng.search(SearchRequest(query=Q, k=k))
+            assert np.array_equal(np.asarray(got.ids),
+                                  np.asarray(want.ids)), f"S={S}: ids"
+            assert np.array_equal(np.asarray(got.dists),
+                                  np.asarray(want.dists)), f"S={S}: dists"
+        lat = np.array(lats)
+        per_q = lat / batch
+        qps = n_queries / lat.sum()
+        entries.append({
+            "n_shards": S,
+            "qps": round(float(qps), 2),
+            "p50_ms": round(float(np.percentile(per_q, 50)) * 1e3, 4),
+            "p99_ms": round(float(np.percentile(per_q, 99)) * 1e3, 4),
+            "parity_checked": bool(assert_parity),
+        })
+        rows.append(csv_row(f"shard_S{S}",
+                            float(np.percentile(per_q, 50)) * 1e6,
+                            f"qps={qps:.1f}"))
+
+    doc = {
+        "benchmark": "bench_shard",
+        "corpus": {"n": n, "d": d, "M": 12, "efc": 80},
+        "protocol": {"n_queries": n_queries, "batch": batch, "k": k,
+                     "n_devices": n_dev},
+        "caveat": ("devices are XLA host-platform simulations sharing one "
+                   "CPU: scaling here shows sharded-driver overhead, not "
+                   "multi-chip speedup"),
+        "results": entries,
+    }
+    os.makedirs(os.path.dirname(BENCH_JSON) or ".", exist_ok=True)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--n-queries", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--assert-parity", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in bench_shard(n=args.n, d=args.d, n_queries=args.n_queries,
+                           batch=args.batch, k=args.k,
+                           assert_parity=args.assert_parity):
+        print(row, flush=True)
+    print(f"# wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -176,6 +176,16 @@ class EngineConfig:
     # candidates survive route-but-don't-return masking as filters
     # tighten. 1.0 disables the boost (tests use this to pin ef_eff).
     filter_ef_cap: float = 4.0
+    # device sharding (DESIGN.md §10): with n_shards > 1 the 'webanns'
+    # mode serves searches from the mesh-sharded driver — vector table,
+    # tier-2/3 payload, and adjacency row-sharded over a ("shard",) mesh
+    # of that many devices, beam phase per shard, candidates merged by
+    # the fused cross-shard top-k. Results are bit-identical to the
+    # WARMED single-device batched driver (the per-shard slab is 100%
+    # resident, so the warm lazy driver is the semantic twin — see
+    # tests/test_sharded_parity.py). The 'webanns-base' eager baseline
+    # stays single-device.
+    n_shards: int = 1
 
     def __post_init__(self) -> None:
         if self.mode not in ENGINE_MODES:
@@ -185,6 +195,8 @@ class EngineConfig:
                 "class, repro.core.mememo.MememoEngine, not a mode)"
             )
         self.precision = quant.canonical_precision(self.precision)
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
 
 
 # ----------------------------------------------------- typed session API
@@ -561,6 +573,9 @@ class WebANNSEngine:
         (required after add/upsert; deletes only touch the mask)."""
         self._tombs_dev = None
         self._noban_dev = None
+        # the mesh-sharded state bakes in tombstones AND the payload/
+        # adjacency, so any mutation invalidates it (DESIGN.md §10)
+        self._shard_rt = None
         if table:
             for attr in ("_table_dev", "_tscales_dev"):
                 if hasattr(self, attr):
@@ -1146,6 +1161,153 @@ class WebANNSEngine:
             return None
         return filters
 
+    # ------------------------------------------- mesh-sharded driver (§10)
+
+    def _shard_runtime(self):
+        """(mesh, ShardedEngineState) for ``config.n_shards`` devices —
+        built lazily on first sharded search, dropped by ANY mutation
+        (``_invalidate_device_state``: payload, adjacency, and tombstone
+        mask are all baked into the sharded state)."""
+        rt = getattr(self, "_shard_rt", None)
+        if rt is None:
+            from repro.core import distributed as dshard
+            from repro.launch.mesh import make_shard_mesh
+
+            mesh = make_shard_mesh(self.config.n_shards)
+            state = dshard.build_sharded_engine_state(
+                self.external.base_backend,
+                np.asarray(self.graph.neighbors),
+                self.tombstones,
+                mesh,
+                precision=self.config.precision,
+                metric=self.config.metric,
+            )
+            self._shard_rt = rt = (mesh, state)
+        return rt
+
+    def _sharded_layer(self, Qj, layer: int, entry: np.ndarray, ef: int):
+        """One layer as one shard_map program → (beam ids/dists/explored,
+        n_hops, n_dist), all replicated (B, ...) arrays."""
+        from repro.core import distributed as dshard
+
+        mesh, st = self._shard_runtime()
+        prog = dshard.sharded_layer_program(
+            mesh, ef, self.config.metric, st.precision == "int8"
+        )
+        return prog(
+            Qj, jnp.asarray(entry), st.table, st.scales,
+            st.neighbors[:, layer], st.tombstones,
+        )
+
+    def _sharded_many(
+        self, Q: np.ndarray, k: int, ef: int,
+        shared_banned: Optional[np.ndarray],
+        banned_rows: Optional[List[Optional[np.ndarray]]],
+    ) -> Tuple[np.ndarray, np.ndarray, List[QueryStats]]:
+        """Mesh-sharded batch driver body (DESIGN.md §10).
+
+        Every layer runs as ONE shard_map program — beam phase per shard
+        against its device-resident rows, candidates merged by the fused
+        cross-shard top-k — while all host logic (entry propagation,
+        filter masks, exact rerank, finalize) is copied verbatim from
+        the single-device batched driver, so (ids, dists) come back
+        bit-identical to that driver run WARM — each shard's slab is
+        100% resident, and a cold lazy driver's expansion order is
+        cache-state-dependent (tests/test_sharded_parity.py docstring
+        spells out the protocol). Traversal performs
+        ZERO tier-3 accesses (each shard's slab is 100% resident, the
+        fused-path memory model); only the exact-rerank pass fetches.
+        """
+        cfg = self.config
+        B = len(Q)
+        bstats = BatchStats(batch_size=B)
+        per_stats = [QueryStats() for _ in range(B)]
+        Qj = jnp.asarray(Q)
+        banned_mat = None
+        if shared_banned is not None:
+            banned_mat = jnp.asarray(shared_banned)
+        elif banned_rows is not None:
+            banned_np = np.zeros((B, self.n), bool)
+            for b, row in enumerate(banned_rows):
+                if row is not None:
+                    banned_np[b] = row
+            banned_mat = jnp.asarray(banned_np)
+        t_db0 = self.external.stats.modeled_time
+        entry = np.full((B, 1), self.graph.entry_point, np.int32)
+        for lc in range(self.graph.max_level, 0, -1):
+            t0 = time.perf_counter()
+            bi, bd, be, hops_a, ndist_a = self._sharded_layer(
+                Qj, lc, entry, cfg.ef_upper
+            )
+            bi.block_until_ready()
+            bstats.t_in_mem += time.perf_counter() - t0
+            best = np.asarray(bi[:, : cfg.ef_upper])
+            hops = np.asarray(hops_a)
+            ndist = np.asarray(ndist_a)
+            for b in range(B):
+                row = best[b][best[b] >= 0]
+                if len(row):
+                    entry[b, 0] = row[0]
+                per_stats[b].n_hops += int(hops[b])
+                per_stats[b].n_dist += int(ndist[b])
+        t0 = time.perf_counter()
+        bi, bd, be, hops_a, ndist_a = self._sharded_layer(
+            Qj, 0, entry, max(ef, k)
+        )
+        bi.block_until_ready()
+        bstats.t_in_mem += time.perf_counter() - t0
+        hops = np.asarray(hops_a)
+        ndist = np.asarray(ndist_a)
+        # adapt the final beam to the finalize/rerank plumbing shared
+        # with the single-device drivers (only beam + banned are read)
+        st = S.SearchState(
+            beam=S.Beam(ids=bi, dists=bd, explored=be),
+            visited=jnp.zeros((1, 1), bool),
+            banned=jnp.broadcast_to(
+                self._noban_device() if banned_mat is None else banned_mat,
+                (B, self.n),
+            ),
+            miss_ids=jnp.zeros((1, 1), jnp.int32),
+            miss_count=jnp.zeros((1,), jnp.int32),
+            n_hops=hops_a,
+            n_dist=ndist_a,
+        )
+        if self._rerank_active():
+            # ONE shared tier-3 access reranks the whole batch (§5/§7)
+            pool = min(int(bi.shape[1]),
+                       quant.rerank_pool(k, cfg.rerank_alpha))
+            if banned_mat is not None:
+                p_dists, p_ids = _finalize_cached(st, pool)
+            else:
+                p_ids = bi[:, :pool]
+                p_dists = bd[:, :pool]
+            db0 = self.external.stats.n_db
+            f0 = self.external.stats.items_fetched
+            ids, dists = self._rerank_exact_batch(
+                Q, np.asarray(p_ids), np.asarray(p_dists), k,
+            )
+            bstats.n_db += self.external.stats.n_db - db0
+            bstats.items_fetched += (
+                self.external.stats.items_fetched - f0
+            )
+            for b in range(B):  # every query demanded the shared rerank
+                per_stats[b].n_db += 1
+        elif banned_mat is not None:
+            f_dists, f_ids = _finalize_cached(st, k)
+            ids, dists = np.asarray(f_ids), np.asarray(f_dists)
+        else:
+            ids = np.asarray(bi[:, :k])
+            dists = np.asarray(bd[:, :k])
+        bstats.t_db = self.external.stats.modeled_time - t_db0
+        for b in range(B):
+            per_stats[b].n_hops += int(hops[b])
+            per_stats[b].n_dist += int(ndist[b])
+            per_stats[b].n_visited = per_stats[b].n_dist
+            per_stats[b].t_in_mem = bstats.t_in_mem / B
+            per_stats[b].t_db = bstats.t_db / B
+        self.last_batch_stats = bstats
+        return ids, dists, per_stats
+
     def _search_many(
         self, Q: np.ndarray, k: int, ef: Optional[int], batch_mode: str,
         filt=None,
@@ -1199,6 +1361,12 @@ class WebANNSEngine:
                     if sel > 0.0:
                         ef_eff = max(ef_eff, self._boost_ef(ef, sel))
                 ef = ef_eff
+        # mesh-sharded driver (DESIGN.md §10): takes precedence over the
+        # fused single-device reroute — sharded search is itself fully
+        # in-graph with device-resident per-shard payload
+        if (cfg.n_shards > 1 and cfg.mode == "webanns"
+                and batch_mode == "batched"):
+            return self._sharded_many(Q, k, ef, shared_banned, banned_rows)
         # fused engines run the whole query as one program (_query_fused);
         # the batched host driver would silently reroute them, so honor
         # cfg.fused via the sequential path until a fused batch exists
@@ -1318,6 +1486,15 @@ class WebANNSEngine:
                 raise ValueError(
                     "a single-query request takes a single Filter, not "
                     f"{type(filt).__name__}"
+                )
+            if self.config.n_shards > 1 and self.config.mode == "webanns":
+                # sharded sessions serve single queries as a B=1 batch
+                # through the mesh driver (DESIGN.md §10)
+                ids, dists, stats = self._search_many(
+                    q[None], request.k, request.ef, "batched", filt=filt,
+                )
+                return SearchResult(
+                    ids=ids[0], dists=dists[0], stats=stats[0]
                 )
             ids, dists, stats = self._search_one(
                 q, request.k, request.ef, filt=filt

@@ -199,8 +199,40 @@ class ShardedFileBackend:
             self.shard_reads += 1
         return out
 
+    def fetch_range(self, lo: int, hi: int) -> np.ndarray:
+        """Contiguous read of rows ``[lo, hi)`` touching ONLY the shard
+        files overlapping the range — the mesh-staging path
+        (``distributed.build_sharded_engine_state``) uses this so each
+        mesh shard's tier-3 load stays local to its own files
+        (``shard_reads`` counts exactly the overlapping files)."""
+        lo, hi = int(lo), int(hi)
+        out = np.empty((max(0, hi - lo), self._dim), np.float32)
+        for (start, stop, _), shard, sc in zip(
+            self._meta, self._shards, self._scales
+        ):
+            a, b = max(lo, start), min(hi, stop)
+            if a >= b:
+                continue
+            rows = shard[a - start: b - start]
+            out[a - lo: b - lo] = self._dequant(
+                rows, sc[a - start: b - start] if sc is not None else None
+            )
+            self.shard_reads += 1
+        return out
+
     def access_cost(self, n: int) -> float:
         return 0.0  # real media: cost is measured (wall), not modeled
+
+
+def mesh_shard_ranges(n_items: int, n_shards: int) -> List[tuple]:
+    """Row ranges ``[(lo, hi)]`` mapping global ids to mesh shards:
+    shard ``s`` owns ``[s·rows, min(n, (s+1)·rows))`` with
+    ``rows = ceil(n/S)`` — the one ownership rule shared by the sharded
+    state builder and the shard_map layer program (DESIGN.md §10)."""
+    rows = -(-n_items // n_shards) if n_items else 0
+    return [
+        (s * rows, min(n_items, (s + 1) * rows)) for s in range(n_shards)
+    ]
 
 
 class DeltaBackend:

@@ -30,7 +30,7 @@ from repro.kernels.gather_distance import (
     gather_distance_batch_pallas,
     gather_distance_pallas,
 )
-from repro.kernels.topk import topk_pallas
+from repro.kernels.topk import merge_topk_pallas, topk_pallas
 
 
 def _use_pallas() -> bool:
@@ -60,6 +60,17 @@ def topk(D: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         interp = jax.default_backend() != "tpu"
         return topk_pallas(D, k, interpret=interp)
     return ref.topk_ref(D, k)
+
+
+def merge_topk(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Fused cross-shard top-k merge: dedup duplicate ids (same node
+    surfacing from several shards), drop sentinels (id < 0 / non-finite
+    dist), return the k smallest as (dists, ids, src) with beam_merge's
+    lowest-input-position tie break (DESIGN.md §10)."""
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return merge_topk_pallas(dists, ids, k, interpret=interp)
+    return ref.merge_topk_ref(dists, ids, k)
 
 
 def distance_topk(Q, X, k: int, metric: str = "l2"):

@@ -124,6 +124,65 @@ def dequant_gather_distance_batch_ref(
     )(ids, Q)
 
 
+def merge_topk_ref(
+    dists: jnp.ndarray,  # (..., M) f32 candidate distances
+    ids: jnp.ndarray,  # (..., M) int32 global ids, -1 sentinel padded
+    k: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cross-shard top-k merge oracle (DESIGN.md §10).
+
+    Input is the concatenation of a beam and the all-gathered per-shard
+    candidate lists: entries with ``id < 0`` or a non-finite distance are
+    sentinels. Duplicate ids (the same node surfacing from more than one
+    shard) are deduplicated keeping the copy with the smallest
+    ``(dist, position)``. Returns the ``k`` smallest surviving entries in
+    ascending distance order with ties broken by LOWER input position —
+    the exact tie semantics of ``lax.top_k`` on negated distances, which
+    is what makes the sharded beam merge bit-identical to
+    ``search.beam_merge`` (see ``core/distributed.py``).
+
+    Returns ``(dists (..., k), ids (..., k), src (..., k))`` where ``src``
+    is each winner's input position (-1 for padding rows) — consumers use
+    it to carry side state (e.g. beam ``explored`` flags) through the
+    merge. Rows beyond the number of survivors come back (+inf, -1, -1).
+    """
+    ids = ids.astype(jnp.int32)
+    if k > dists.shape[-1]:  # fewer candidates than k: pad with sentinels
+        pad = [(0, 0)] * (dists.ndim - 1) + [(0, k - dists.shape[-1])]
+        dists = jnp.pad(dists, pad, constant_values=jnp.inf)
+        ids = jnp.pad(ids, pad, constant_values=-1)
+    d = jnp.where(
+        (ids >= 0) & jnp.isfinite(dists), dists.astype(jnp.float32), jnp.inf
+    )
+    # stable ascending sort: equal distances keep input-position order
+    order = jnp.argsort(d, axis=-1, stable=True).astype(jnp.int32)
+    d_s = jnp.take_along_axis(d, order, -1)
+    i_s = jnp.take_along_axis(ids, order, -1)
+    valid = jnp.isfinite(d_s)
+    # an entry is a duplicate if an earlier (better-ranked) valid entry
+    # carries the same id — O(M^2) pairwise form, fine for an oracle
+    same = i_s[..., :, None] == i_s[..., None, :]
+    m = d.shape[-1]
+    earlier = (
+        jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+        < jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    )
+    dup = jnp.any(
+        same & earlier & valid[..., :, None] & valid[..., None, :], axis=-1
+    )
+    keep = valid & ~dup
+    d_kept = jnp.where(keep, d_s, jnp.inf)
+    # among kept entries d_kept is ascending, so top_k's lowest-index tie
+    # break returns them in sorted order; overflow picks are masked below
+    _, sel = jax.lax.top_k(-d_kept, k)
+    out_ok = jnp.take_along_axis(keep, sel, -1)
+    return (
+        jnp.where(out_ok, jnp.take_along_axis(d_s, sel, -1), jnp.inf),
+        jnp.where(out_ok, jnp.take_along_axis(i_s, sel, -1), -1),
+        jnp.where(out_ok, jnp.take_along_axis(order, sel, -1), -1),
+    )
+
+
 def embedding_bag_ref(
     table: jnp.ndarray,  # (V, d)
     idx: jnp.ndarray,  # (B, S) int32, -1 padded

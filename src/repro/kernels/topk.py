@@ -83,3 +83,101 @@ def topk_pallas(
     negd, sel = jax.lax.top_k(-od[:B], k)
     ids = jnp.take_along_axis(oi[:B], sel, axis=1)
     return -negd, ids
+
+
+MERGE_TB = 8
+MERGE_TM = 128
+
+
+def _merge_topk_kernel(d_ref, i_ref, od_ref, oi_ref, os_ref, *, k: int):
+    """Dedup + k-smallest over one (TB, M) candidate tile.
+
+    Same iterative masked-min extraction as ``_topk_tile_kernel``, with two
+    twists: sentinel entries (id < 0 or non-finite dist) never win, and
+    after each extraction every position carrying the winner's id is
+    masked, so duplicates of one node arriving from several shards
+    collapse to their best copy. argmin's first-index tie break gives the
+    lowest-input-position order the sharded beam merge relies on.
+    """
+    d = d_ref[...].astype(jnp.float32)  # (TB, M)
+    ids = i_ref[...]  # (TB, M)
+    tb, m = d.shape
+    d = jnp.where((ids >= 0) & jnp.isfinite(d), d, jnp.inf)
+    col = jax.lax.broadcasted_iota(jnp.int32, (tb, m), 1)
+
+    def body(i, carry):
+        d_cur, od, oi, osrc = carry
+        mn = jnp.min(d_cur, axis=1)  # (TB,)
+        am = jnp.argmin(d_cur, axis=1).astype(jnp.int32)  # (TB,)
+        sel = col == am[:, None]
+        # exactly one column matches → sum pulls out ids[am] (VPU-friendly
+        # one-hot gather; per-row dynamic indexing is TPU-hostile)
+        v = jnp.sum(jnp.where(sel, ids, 0), axis=1).astype(jnp.int32)
+        ok = mn < jnp.inf
+        od = jax.lax.dynamic_update_index_in_dim(
+            od, jnp.where(ok, mn, jnp.inf), i, 1
+        )
+        oi = jax.lax.dynamic_update_index_in_dim(
+            oi, jnp.where(ok, v, -1), i, 1
+        )
+        osrc = jax.lax.dynamic_update_index_in_dim(
+            osrc, jnp.where(ok, am, -1), i, 1
+        )
+        # retire the winner and every duplicate of its id
+        hit = sel | (ok[:, None] & (ids == v[:, None]))
+        return jnp.where(hit, jnp.inf, d_cur), od, oi, osrc
+
+    od0 = jnp.full((tb, k), jnp.inf, jnp.float32)
+    oi0 = jnp.full((tb, k), -1, jnp.int32)
+    _, od, oi, osrc = jax.lax.fori_loop(0, k, body, (d, od0, oi0, oi0))
+    od_ref[...] = od
+    oi_ref[...] = oi
+    os_ref[...] = osrc
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tb", "interpret"))
+def merge_topk_pallas(
+    dists: jnp.ndarray,  # (B, M) candidate distances
+    ids: jnp.ndarray,  # (B, M) int32 global ids, -1 sentinel padded
+    k: int,
+    tb: int = MERGE_TB,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused cross-shard top-k merge; semantics of ``ref.merge_topk_ref``.
+
+    Returns (dists (B, k), ids (B, k), src (B, k)) with src = winner's
+    input position (−1 on padding rows). M is padded to a lane multiple;
+    the whole candidate row fits one block (M = ef + n_shards·degree is a
+    few hundred), so the grid only tiles the batch.
+    """
+    B, M = dists.shape
+    pb = (-B) % tb
+    pm = (-max(M, k)) % MERGE_TM + max(0, k - M)
+    Dp = jnp.pad(
+        dists.astype(jnp.float32), ((0, pb), (0, pm)),
+        constant_values=jnp.inf,
+    )
+    Ip = jnp.pad(
+        ids.astype(jnp.int32), ((0, pb), (0, pm)), constant_values=-1
+    )
+    mp = Dp.shape[1]
+    od, oi, osrc = pl.pallas_call(
+        functools.partial(_merge_topk_kernel, k=k),
+        out_shape=(
+            jax.ShapeDtypeStruct((Dp.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((Dp.shape[0], k), jnp.int32),
+            jax.ShapeDtypeStruct((Dp.shape[0], k), jnp.int32),
+        ),
+        grid=(Dp.shape[0] // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, mp), lambda i: (i, 0)),
+            pl.BlockSpec((tb, mp), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(Dp, Ip)
+    return od[:B], oi[:B], osrc[:B]

@@ -1,0 +1,217 @@
+"""Sharded engine ≡ single-device batched driver, bit-for-bit.
+
+The device-sharded beam search (EngineConfig.n_shards > 1, DESIGN.md §10)
+must return exactly the ids/dists of the single-device batched driver —
+including metadata filters, tombstoned ids, and int8 rerank. This module
+runs meaningfully under the multi-device CI lane
+(XLA_FLAGS=--xla_force_host_platform_device_count=8); with one visible
+device only the n_shards=1 cases execute and the rest skip.
+
+Property-style sweeps use hypothesis when installed; otherwise they fall
+back to a deterministic seeded parametrize sweep over the same choice
+space, so the suite never silently skips (unlike importorskip modules).
+
+Parity protocol: the single-device reference is WARMED first
+(``warm_cache()``). The sharded engine's per-shard slab is 100% resident
+by construction (the fused-path memory model), and the lazy driver's
+expansion order — hence its beam tail — legitimately depends on tier-2
+cache state (a cold first query ≠ its own warm re-run). The warm driver
+is the deterministic fixpoint both converge to, so it is the bitwise
+target (same protocol the int8 rerank parity always needed).
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
+from repro.core.hnsw import build_hnsw
+from repro.core.metadata import Filter
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: deterministic sweep
+    HAVE_HYPOTHESIS = False
+
+SHARD_COUNTS = [s for s in (1, 2, 4, 8) if s <= len(jax.devices())]
+
+
+def property_sweep(n_examples=8, **choices):
+    """@given over sampled_from(...) strategies, or — without hypothesis —
+    a seeded parametrize sweep drawing ``n_examples`` cases from the same
+    per-argument choice lists."""
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            strat = {k: st.sampled_from(v) for k, v in choices.items()}
+            return settings(max_examples=n_examples, deadline=None)(
+                given(**strat)(fn)
+            )
+        return deco
+
+    def deco(fn):
+        rng = np.random.default_rng(0)
+        cases = list(dict.fromkeys(
+            tuple(v[int(rng.integers(len(v)))] for v in choices.values())
+            for _ in range(n_examples)
+        ))
+        return pytest.mark.parametrize(",".join(choices), cases)(fn)
+    return deco
+
+
+def _corpus(seed, n=800, d=24, nq=6):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    Q = rng.standard_normal((nq, d)).astype(np.float32)
+    meta = {"cat": (np.arange(n) % 5).astype(np.int64)}
+    return X, Q, meta
+
+
+def _assert_same(ref_res, got_res, label):
+    np.testing.assert_array_equal(
+        np.asarray(got_res.ids), np.asarray(ref_res.ids),
+        err_msg=f"{label}: ids diverge",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got_res.dists), np.asarray(ref_res.dists),
+        err_msg=f"{label}: dists diverge",
+    )
+
+
+@pytest.fixture(scope="module")
+def pair_data():
+    X, Q, meta = _corpus(7)
+    ref = WebANNSEngine.build(X, M=8, ef_construction=60, seed=3,
+                              metadata=dict(meta))
+    ref.warm_cache()
+    return X, Q, meta, ref
+
+
+@pytest.mark.parametrize("S", SHARD_COUNTS)
+def test_plain_and_filtered_parity(pair_data, S):
+    X, Q, meta, ref = pair_data
+    eng = WebANNSEngine.build(X, M=8, ef_construction=60, seed=3,
+                              metadata=dict(meta),
+                              config=EngineConfig(n_shards=S))
+    req = SearchRequest(query=Q, k=10)
+    _assert_same(ref.search(req), eng.search(req), f"S={S} plain")
+    filt = Filter.in_("cat", [0, 1, 2])
+    freq = SearchRequest(query=Q, k=10, filter=filt)
+    _assert_same(ref.search(freq), eng.search(freq), f"S={S} filtered")
+    # single (d,) query routes through the same sharded batched path
+    one = SearchRequest(query=Q[0], k=10)
+    r1, g1 = ref.search(one), eng.search(one)
+    np.testing.assert_array_equal(np.asarray(g1.ids), np.asarray(r1.ids))
+    np.testing.assert_array_equal(np.asarray(g1.dists),
+                                  np.asarray(r1.dists))
+
+
+@pytest.mark.parametrize("S", SHARD_COUNTS)
+def test_tombstone_parity(pair_data, S):
+    X, Q, meta, _ = pair_data
+    dead = np.arange(0, len(X), 7)
+    ref = WebANNSEngine.build(X, M=8, ef_construction=60, seed=3)
+    ref.delete(dead)
+    ref.warm_cache()
+    eng = WebANNSEngine.build(X, M=8, ef_construction=60, seed=3,
+                              config=EngineConfig(n_shards=S))
+    eng.delete(dead)
+    req = SearchRequest(query=Q, k=10)
+    got = eng.search(req)
+    _assert_same(ref.search(req), got, f"S={S} tombstoned")
+    assert not np.isin(np.asarray(got.ids), dead).any()
+
+
+@pytest.mark.parametrize("S", SHARD_COUNTS)
+def test_int8_rerank_parity(pair_data, S):
+    X, Q, _, _ = pair_data
+    # the sharded table is 100% resident (dequantized per shard), so the
+    # single-device reference must be warmed: a cold tier-2 cache serves
+    # some load-phase distances in f32, which legitimately differ
+    ref = WebANNSEngine.build(X, M=8, ef_construction=60, seed=3,
+                              config=EngineConfig(precision="int8"))
+    ref.warm_cache()
+    eng = WebANNSEngine.build(X, M=8, ef_construction=60, seed=3,
+                              config=EngineConfig(precision="int8",
+                                                  n_shards=S))
+    req = SearchRequest(query=Q, k=10)
+    _assert_same(ref.search(req), eng.search(req), f"S={S} int8")
+
+
+@pytest.mark.parametrize("S", SHARD_COUNTS)
+def test_mutation_invalidates_shard_state(pair_data, S):
+    """add() after a sharded search must rebuild the device shards."""
+    X, Q, _, _ = pair_data
+    rng = np.random.default_rng(99)
+    extra = rng.standard_normal((16, X.shape[1])).astype(np.float32)
+    ref = WebANNSEngine.build(X, M=8, ef_construction=60, seed=3)
+    ref.warm_cache()
+    eng = WebANNSEngine.build(X, M=8, ef_construction=60, seed=3,
+                              config=EngineConfig(n_shards=S))
+    req = SearchRequest(query=Q, k=10)
+    _assert_same(ref.search(req), eng.search(req), f"S={S} pre-add")
+    ref.add(extra)
+    ref.warm_cache()
+    eng.add(extra)
+    _assert_same(ref.search(req), eng.search(req), f"S={S} post-add")
+
+
+@property_sweep(
+    n_examples=6,
+    seed=[0, 1, 2, 3, 4, 5, 6, 7],
+    n=[256, 384, 512],
+    variant=["plain", "filtered", "tombstoned"],
+)
+def test_parity_property(seed, n, variant):
+    """Random corpora/queries: every usable shard count matches the
+    single-device batched driver bit-for-bit."""
+    X, Q, meta = _corpus(seed, n=n)
+    ref = WebANNSEngine.build(X, M=8, ef_construction=50, seed=seed,
+                              metadata=dict(meta))
+    filt = Filter.in_("cat", [1, 3]) if variant == "filtered" else None
+    dead = (np.arange(0, n, 9) if variant == "tombstoned"
+            else np.zeros(0, np.int64))
+    if dead.size:
+        ref.delete(dead)
+    ref.warm_cache()
+    req = SearchRequest(query=Q, k=8, filter=filt)
+    want = ref.search(req)
+    for S in SHARD_COUNTS:
+        eng = WebANNSEngine.build(X, M=8, ef_construction=50, seed=seed,
+                                  metadata=dict(meta),
+                                  config=EngineConfig(n_shards=S))
+        if dead.size:
+            eng.delete(dead)
+        _assert_same(want, eng.search(req),
+                     f"seed={seed} n={n} {variant} S={S}")
+
+
+@pytest.mark.skipif(
+    os.environ.get("REPRO_SCALE_TEST") != "1",
+    reason="100k-corpus build is minutes of CPU; set REPRO_SCALE_TEST=1",
+)
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+def test_scale_100k_parity_all_shard_counts():
+    """Acceptance criterion: ≥100k corpus, shard counts {1,2,4,8} all
+    bit-identical to the single-device batched driver. The HNSW graph is
+    built once and shared across the five engines."""
+    from repro.data.synthetic import corpus_embeddings
+
+    N, d = 100_000, 32
+    X = corpus_embeddings(N, d, n_clusters=256, seed=13)
+    rng = np.random.default_rng(5)
+    Q = (X[rng.choice(N, 16)]
+         + 0.25 * rng.standard_normal((16, d)).astype(np.float32))
+    g = build_hnsw(X, M=12, ef_construction=80, seed=0)
+    ref = WebANNSEngine(X, g, EngineConfig())
+    ref.warm_cache()
+    req = SearchRequest(query=Q, k=10)
+    want = ref.search(req)
+    for S in (1, 2, 4, 8):
+        eng = WebANNSEngine(X, g, EngineConfig(n_shards=S))
+        _assert_same(want, eng.search(req), f"100k S={S}")
