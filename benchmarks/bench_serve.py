@@ -1,0 +1,355 @@
+"""Open-loop multi-tenant serving benchmark (DESIGN.md §11).
+
+Drives a :class:`~repro.serve.sessions.SessionManager` — many tenants,
+one shared tier-2 byte budget — with an open-loop load generator:
+seeded Poisson arrivals per tenant, a mixed operation stream (plain
+search, metadata-filtered search, add, delete, upsert; configurable
+mix), executed through the manager's typed API in arrival order against
+a single-server queue model (service starts at ``max(arrival,
+prev_completion)``; reported queue latency = completion − arrival).
+
+The run has two traffic phases: tenants draw equal rates in the first
+half, then the mix shifts (the first tenant turns hot) and the manager
+``rebalance()``s on its OBSERVED per-tenant window counters — the
+allocation trace recorded in the report must change, demonstrating the
+water-filling allocator actually follows the load. The shared budget is
+set to a fraction of the total corpus bytes chosen to sit BELOW the sum
+of per-tenant standalone optima, so the contended regime is what's
+measured.
+
+Reported per isolation mode (``engine`` and ``filter``):
+
+- sustained throughput (ops / makespan) and per-op-type p50/p99 of
+  both queue latency (wall, includes jit recompiles mutations trigger)
+  and, for searches, the repo's modeled protocol latency
+  (``QueryStats.t_query`` = in-memory compute + modeled tier-3 time);
+- per-tenant serving stats (queries, n_db, rollbacks) and the full
+  allocation trace (every allocate/rollback event);
+- a zero-cross-tenant-leakage count: every returned id of every search
+  is checked against the owning tenant's live id set, on top of the
+  manager's own ``verify_isolation`` raising path.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+        [--assert-no-leakage]
+
+Results land in ``reports/BENCH_serve.json`` (a CI artifact).
+``--smoke --assert-no-leakage`` is the CI serving smoke: tiny tenant
+count and duration, hard-fails on any leak or on a search-path
+IsolationError. The ef boost is pinned (``filter_ef_cap=1.0``) so the
+drifting live selectivity under mutations does not mint a new jit trace
+per search.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import IDB_T_PER_ITEM, IDB_T_SETUP, p99
+from repro.core import quant
+from repro.core.engine import EngineConfig, SearchRequest
+from repro.core.metadata import Filter
+from repro.data.synthetic import corpus_embeddings
+from repro.serve.sessions import SessionManager
+
+BENCH_JSON = os.path.join("reports", "BENCH_serve.json")
+
+OPS = ("search", "filtered", "add", "delete", "upsert")
+
+
+@dataclasses.dataclass
+class Op:
+    seq: int
+    tenant: str
+    kind: str
+    arrival: float  # virtual open-loop clock (s)
+
+
+def _gen_ops(
+    tenants: List[str],
+    duration: float,
+    qps: float,
+    mix: Dict[str, float],
+    hot_factor: float,
+    rng: np.random.Generator,
+) -> List[Op]:
+    """Two-phase open-loop trace: equal per-tenant Poisson rates in
+    [0, duration/2), then the first tenant runs ``hot_factor`` hotter
+    (others cooler so the aggregate rate holds) — the shift the
+    mid-run rebalance must be seen responding to."""
+    kinds = list(mix)
+    probs = np.asarray([mix[k] for k in kinds], float)
+    probs = probs / probs.sum()
+    half = duration / 2.0
+    ops: List[Op] = []
+    seq = 0
+    for phase, (t0, t1) in enumerate([(0.0, half), (half, duration)]):
+        for i, t in enumerate(tenants):
+            rate = qps
+            if phase == 1:
+                n = len(tenants)
+                rate = qps * (
+                    hot_factor if i == 0
+                    else (n - hot_factor) / max(1, n - 1)
+                )
+            clock = t0
+            while True:
+                clock += rng.exponential(1.0 / max(rate, 1e-9))
+                if clock >= t1:
+                    break
+                ops.append(Op(
+                    seq=seq, tenant=t,
+                    kind=str(rng.choice(kinds, p=probs)),
+                    arrival=clock,
+                ))
+                seq += 1
+    ops.sort(key=lambda o: (o.arrival, o.seq))
+    return ops
+
+
+def _percentiles(vals: List[float]) -> Dict[str, float]:
+    if not vals:
+        return {"count": 0}
+    return {
+        "count": len(vals),
+        "p50_ms": float(np.percentile(vals, 50) * 1e3),
+        "p99_ms": float(p99(vals) * 1e3),
+        "mean_ms": float(np.mean(vals) * 1e3),
+    }
+
+
+def run_mode(
+    isolation: str,
+    n_tenants: int,
+    n_per_tenant: int,
+    dim: int,
+    duration: float,
+    qps: float,
+    budget_frac: float,
+    mix: Dict[str, float],
+    k: int = 8,
+    ef: int = 32,
+    seed: int = 11,
+) -> dict:
+    rng = np.random.default_rng(seed)
+    tenants = [f"tenant{i}" for i in range(n_tenants)]
+    corpora = {}
+    for i, t in enumerate(tenants):
+        X = corpus_embeddings(
+            n_per_tenant, dim, n_clusters=8, seed=100 + i
+        )
+        meta = {"bucket": (np.arange(n_per_tenant) % 4).tolist()}
+        corpora[t] = (X, None, meta)
+
+    total_bytes = sum(
+        len(v[0]) * quant.bytes_per_vector(dim, "float32")
+        for v in corpora.values()
+    )
+    budget = int(total_bytes * budget_frac)
+    cfg = EngineConfig(
+        t_setup=IDB_T_SETUP, t_per_item=IDB_T_PER_ITEM,
+        filter_ef_cap=1.0,  # pin ef_eff: see module docstring
+        ef_search=ef,
+    )
+    mgr = SessionManager.build(
+        corpora, budget_bytes=budget, isolation=isolation,
+        M=12, ef_construction=60, engine_config=cfg, seed=seed,
+    )
+    t_alloc0 = time.perf_counter()
+    mgr.allocate()
+    alloc_s = time.perf_counter() - t_alloc0
+    sum_opt = mgr.allocation.sum_opt_bytes
+
+    ops = _gen_ops(tenants, duration, qps, mix, hot_factor=0.6 * n_tenants
+                   if n_tenants > 1 else 1.0, rng=rng)
+    # host-side live-id mirror so delete/upsert targets are O(1) to draw
+    live = {t: list(mgr.ids_of(t)) for t in tenants}
+
+    clock = 0.0  # queue server's next-free time (virtual)
+    queue_lat: Dict[str, List[float]] = {kk: [] for kk in OPS}
+    model_lat: List[float] = []  # searches only: QueryStats.t_query
+    leaks = 0
+    checked = 0
+    rebalanced = False
+    bench_t0 = time.perf_counter()
+    for op in ops:
+        if not rebalanced and op.arrival >= duration / 2.0:
+            mgr.rebalance()  # observed window traffic decides the split
+            rebalanced = True
+        t = op.tenant
+        kind = op.kind
+        if kind in ("delete", "upsert") and len(live[t]) <= 16:
+            kind = "search"  # keep a serving floor of rows per tenant
+        X = corpora[t][0]
+        t0 = time.perf_counter()
+        if kind in ("search", "filtered"):
+            q = X[rng.integers(len(X))] + 0.25 * rng.standard_normal(
+                dim
+            ).astype(np.float32)
+            filt = (Filter.eq("bucket", int(rng.integers(4)))
+                    if kind == "filtered" else None)
+            res = mgr.search(t, SearchRequest(
+                query=q, k=k, ef=ef, filter=filt
+            ))
+            model_lat.append(res.stats.t_query)
+            ids = np.asarray(res.ids).ravel()
+            ids = ids[ids >= 0]
+            checked += 1
+            if ids.size and not np.isin(ids, mgr.ids_of(t)).all():
+                leaks += 1
+        elif kind == "add":
+            vec = X[rng.integers(len(X))] + 0.1 * rng.standard_normal(
+                dim
+            ).astype(np.float32)
+            r = mgr.add(t, vec[None], metadata={
+                "bucket": [int(rng.integers(4))]
+            })
+            live[t].extend(int(i) for i in r.ids)
+        elif kind == "delete":
+            victim = live[t].pop(int(rng.integers(len(live[t]))))
+            mgr.delete(t, [victim])
+        else:  # upsert
+            victim = live[t].pop(int(rng.integers(len(live[t]))))
+            vec = X[rng.integers(len(X))].astype(np.float32)
+            r = mgr.upsert(t, [victim], vec[None])
+            live[t].extend(int(i) for i in r.ids)
+        service = time.perf_counter() - t0
+        start = max(op.arrival, clock)
+        clock = start + service
+        queue_lat[kind].append(clock - op.arrival)
+    bench_wall = time.perf_counter() - bench_t0
+
+    # post-run consistency: the host-side mirror must agree with the
+    # manager's authoritative live-id sets (any drift would mean a
+    # mutation escaped its tenant)
+    mirror_ok = all(
+        set(live[t]) == set(int(i) for i in mgr.ids_of(t))
+        for t in tenants
+    )
+    n_ops = len(ops)
+    makespan = max(clock, ops[-1].arrival) if ops else 0.0
+    snap = mgr.stats_snapshot()
+    alloc_events = [
+        e for e in mgr.allocation_history if e["event"] == "allocate"
+    ]
+    alloc_changed = (
+        len(alloc_events) >= 2
+        and alloc_events[-1]["items"] != alloc_events[-2]["items"]
+    )
+    return {
+        "isolation": isolation,
+        "n_tenants": n_tenants,
+        "n_per_tenant": n_per_tenant,
+        "dim": dim,
+        "budget_bytes": budget,
+        "sum_opt_bytes": sum_opt,
+        "budget_below_sum_opt": budget < sum_opt,
+        "contended": mgr.allocation.contended,
+        "allocate_seconds": alloc_s,
+        "n_ops": n_ops,
+        "sustained_qps": n_ops / makespan if makespan else 0.0,
+        "bench_wall_seconds": bench_wall,
+        "per_op_queue_latency": {
+            kk: _percentiles(v) for kk, v in queue_lat.items() if v
+        },
+        "search_model_latency": _percentiles(model_lat),
+        "per_tenant": snap["tenants"],
+        "allocation_trace": mgr.allocation_history,
+        "rebalanced": rebalanced,
+        "alloc_changed_after_rebalance": alloc_changed,
+        "leakage": {
+            "searches_checked": checked,
+            "violations": leaks,
+            "mirror_consistent": mirror_ok,
+        },
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--n-per-tenant", type=int, default=400)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--duration", type=float, default=40.0,
+                    help="virtual open-loop seconds")
+    ap.add_argument("--qps", type=float, default=1.5,
+                    help="per-tenant arrival rate (phase 1)")
+    ap.add_argument("--budget-frac", type=float, default=0.35,
+                    help="shared budget as a fraction of corpus bytes")
+    ap.add_argument("--isolation", default="both",
+                    choices=["both", "engine", "filter"])
+    ap.add_argument("--mix", default="search=0.62,filtered=0.2,add=0.08,"
+                    "delete=0.05,upsert=0.05")
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: 3 tenants, short trace")
+    ap.add_argument("--assert-no-leakage", action="store_true",
+                    help="hard-fail on any cross-tenant leak")
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help="output path ('' to disable)")
+    args = ap.parse_args(argv)
+
+    mix: Dict[str, float] = {}
+    for part in args.mix.split(","):
+        kk, v = part.split("=")
+        if kk not in OPS:
+            raise SystemExit(f"unknown op {kk!r} in --mix; have {OPS}")
+        mix[kk] = float(v)
+
+    if args.smoke:
+        args.tenants = min(args.tenants, 3)
+        args.n_per_tenant = min(args.n_per_tenant, 128)
+        args.duration = min(args.duration, 8.0)
+        args.qps = min(args.qps, 1.0)
+
+    modes = (["engine", "filter"] if args.isolation == "both"
+             else [args.isolation])
+    doc = {
+        "bench": "serve",
+        "smoke": args.smoke,
+        "seed": args.seed,
+        "mix": mix,
+        "modes": {},
+    }
+    for iso in modes:
+        doc["modes"][iso] = run_mode(
+            iso, args.tenants, args.n_per_tenant, args.dim,
+            args.duration, args.qps, args.budget_frac, mix,
+            seed=args.seed,
+        )
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json), exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, default=float)
+
+    print(f"{'mode':>8} {'ops':>5} {'qps':>7} {'search p50/p99 ms':>18} "
+          f"{'contended':>9} {'rebal':>6} {'leaks':>5}")
+    for iso, m in doc["modes"].items():
+        s = m["per_op_queue_latency"].get("search", {})
+        print(f"{iso:>8} {m['n_ops']:>5} {m['sustained_qps']:>7.2f} "
+              f"{s.get('p50_ms', 0):>8.1f}/{s.get('p99_ms', 0):<9.1f} "
+              f"{str(m['contended']):>9} "
+              f"{str(m['alloc_changed_after_rebalance']):>6} "
+              f"{m['leakage']['violations']:>5}")
+
+    if args.assert_no_leakage:
+        for iso, m in doc["modes"].items():
+            lk = m["leakage"]
+            assert lk["violations"] == 0, f"{iso}: cross-tenant leak"
+            assert lk["mirror_consistent"], (
+                f"{iso}: live-id mirror drifted — a mutation escaped "
+                "its tenant"
+            )
+        print("# serving smoke passed: zero cross-tenant leakage")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

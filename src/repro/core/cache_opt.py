@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -154,6 +154,251 @@ def optimize_memory_bytes(
     )
     res.bytes_per_item = bpi
     return res
+
+
+# ------------------------------------------- cross-tenant byte allocator
+# (DESIGN.md §11) optimize_memory_bytes extended across tenants: each
+# tenant's probe run yields its standalone optimum (the smallest cache
+# meeting its θ) plus its (C, θ) ladder; a shared budget smaller than the
+# sum of optima is then split by water-filling on the tenants' traffic
+# weights, every allocation clamped to [floor, optimum].
+
+
+@dataclasses.dataclass
+class TenantDemand:
+    """One tenant's input to the cross-tenant allocator.
+
+    ``query_test(C)`` must resize THAT tenant's cache to C items, run
+    its probe queries, and return aggregate :class:`QueryTestStats` —
+    the same contract as :func:`optimize_memory_size`. ``traffic`` is
+    the tenant's load estimate (QPS share, or observed query counts when
+    re-running on live :class:`~repro.core.store.AccessStats`); it sets
+    the tenant's water-filling weight, NOT its θ — latency targets stay
+    per-tenant, traffic only decides who wins contested bytes.
+    """
+
+    tenant: str
+    query_test: Callable[[int], QueryTestStats]
+    dim: int
+    n_items: int
+    precision: str = "float32"
+    traffic: float = 1.0
+    min_items: int = 1  # allocation floor (items)
+
+
+@dataclasses.dataclass
+class TenantAllocation:
+    tenant: str
+    c_items: int  # allocated cache capacity (items)
+    alloc_bytes: int
+    c_opt: int  # standalone optimum from the tenant's own probe run
+    opt_bytes: int
+    bytes_per_item: int
+    traffic: float
+    ladder: List[Tuple[int, float]]  # (C, θ) rollback ladder, desc. C
+    satisfied: bool = True  # alloc >= standalone optimum
+
+
+@dataclasses.dataclass
+class CrossTenantAllocation:
+    budget_bytes: int
+    reserve_bytes: int  # withheld headroom the rollback path spends
+    allocations: Dict[str, TenantAllocation]
+
+    @property
+    def total_alloc_bytes(self) -> int:
+        return sum(a.alloc_bytes for a in self.allocations.values())
+
+    @property
+    def sum_opt_bytes(self) -> int:
+        return sum(a.opt_bytes for a in self.allocations.values())
+
+    @property
+    def contended(self) -> bool:
+        """True when the budget could not satisfy every tenant's
+        standalone optimum — the regime water-filling exists for."""
+        return any(not a.satisfied for a in self.allocations.values())
+
+    def items(self) -> Dict[str, int]:
+        return {t: a.c_items for t, a in self.allocations.items()}
+
+
+def _round_to(c: int, grain: int) -> int:
+    """Round an item count UP to the shape grain (bounded below by it).
+
+    Every distinct cache capacity is a distinct jit trace of the phase
+    programs, so a fleet of tenants with arbitrary capacities would
+    compile one specialization each; snapping allocations to multiples
+    of ``grain`` collapses the shape set the way TieredStore.PAD_FLOOR
+    does for miss batches."""
+    if grain <= 1:
+        return max(1, c)
+    return max(grain, int(math.ceil(c / grain)) * grain)
+
+
+def _water_fill(
+    demands: List[TenantDemand],
+    opt_items: Dict[str, int],
+    usable_bytes: int,
+    grain: int,
+) -> Dict[str, int]:
+    """Split ``usable_bytes`` across tenants: alloc_t = clip(λ·w_t,
+    floor_t, opt_t) in bytes, λ solved by bisection so the total fills
+    the budget. Weights are traffic shares; floors and optima are per
+    tenant. Returns item allocations."""
+    from repro.core import quant
+
+    bpi = {d.tenant: quant.bytes_per_vector(d.dim, d.precision)
+           for d in demands}
+    floor_b = {
+        d.tenant: _round_to(d.min_items, grain) * bpi[d.tenant]
+        for d in demands
+    }
+    opt_b = {
+        d.tenant: _round_to(opt_items[d.tenant], grain) * bpi[d.tenant]
+        for d in demands
+    }
+    w = {d.tenant: max(d.traffic, 1e-12) for d in demands}
+
+    def total(lam: float) -> float:
+        return sum(
+            min(max(lam * w[d.tenant], floor_b[d.tenant]), opt_b[d.tenant])
+            for d in demands
+        )
+
+    lo, hi = 0.0, 1.0
+    while total(hi) < usable_bytes and hi < 1e18:
+        hi *= 2.0
+    for _ in range(80):  # bisection to byte precision
+        mid = 0.5 * (lo + hi)
+        if total(mid) < usable_bytes:
+            lo = mid
+        else:
+            hi = mid
+    lam = lo
+    out: Dict[str, int] = {}
+    for d in demands:
+        b = min(max(lam * w[d.tenant], floor_b[d.tenant]), opt_b[d.tenant])
+        c = max(d.min_items, int(b // bpi[d.tenant]))
+        out[d.tenant] = min(_round_to(c, grain), d.n_items)
+    return out
+
+
+def allocate_memory_bytes(
+    demands: List[TenantDemand],
+    budget_bytes: int,
+    p: float = 0.8,
+    t_theta: float = 0.1,
+    max_iters: int = 8,
+    reserve_frac: float = 0.1,
+    shape_grain: int = 64,
+) -> CrossTenantAllocation:
+    """Cross-tenant ``optimize_memory_bytes``: one shared byte budget,
+    many tenants, water-filling on traffic (DESIGN.md §11).
+
+    Per tenant, Algorithm 2 runs against its OWN probe set (capped at
+    the whole budget's capacity for its precision) yielding the
+    standalone optimum ``c_opt`` and a (C, θ) ladder. Then:
+
+    - budget ≥ Σ optima: every tenant gets its optimum; the surplus
+      (minus the rollback reserve) is granted proportionally to traffic,
+      capped at each tenant's corpus size.
+    - budget < Σ optima (the contended regime): water-filling — alloc_t
+      = clip(λ·traffic_t, floor_t, opt_t), λ solved so allocations fill
+      ``(1 - reserve_frac) · budget``.
+
+    ``reserve_frac`` of the budget is withheld as rollback headroom: a
+    tenant whose live n_db regresses past its ladder's θ climbs back
+    toward a bigger size by SPENDING reserve, never by evicting a
+    peer below its floor (the isolation contract tests assert).
+
+    Each tenant's ladder is re-anchored at its allocation: rungs from
+    its probe run above the allocated size survive (they are the sizes
+    rollback may climb to), and the allocation itself becomes the
+    bottom rung, inheriting θ from the nearest probed size below it.
+    """
+    if budget_bytes <= 0:
+        raise ValueError(f"budget_bytes must be > 0, got {budget_bytes}")
+    names = [d.tenant for d in demands]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenants in demands: {names}")
+    from repro.core import quant
+
+    reserve = int(budget_bytes * reserve_frac)
+    usable = budget_bytes - reserve
+
+    probe: Dict[str, CacheOptResult] = {}
+    for d in demands:
+        c0 = min(
+            d.n_items,
+            max(1, quant.capacity_for_budget(usable, d.dim, d.precision)),
+        )
+        probe[d.tenant] = optimize_memory_bytes(
+            d.query_test,
+            c0 * quant.bytes_per_vector(d.dim, d.precision),
+            d.dim,
+            precision=d.precision,
+            p=p,
+            t_theta=t_theta,
+            max_iters=max_iters,
+        )
+    opt_items = {t: r.c_best for t, r in probe.items()}
+    bpi = {d.tenant: quant.bytes_per_vector(d.dim, d.precision)
+           for d in demands}
+    sum_opt = sum(
+        _round_to(opt_items[d.tenant], shape_grain) * bpi[d.tenant]
+        for d in demands
+    )
+
+    if sum_opt <= usable:
+        # uncontended: optima + traffic-proportional surplus
+        surplus = usable - sum_opt
+        w_tot = sum(max(d.traffic, 1e-12) for d in demands)
+        alloc_items: Dict[str, int] = {}
+        for d in demands:
+            extra_b = surplus * (max(d.traffic, 1e-12) / w_tot)
+            c = _round_to(opt_items[d.tenant], shape_grain) + int(
+                extra_b // bpi[d.tenant]
+            )
+            alloc_items[d.tenant] = min(
+                _round_to(c, shape_grain), d.n_items
+            )
+    else:
+        alloc_items = _water_fill(demands, opt_items, usable, shape_grain)
+
+    allocations: Dict[str, TenantAllocation] = {}
+    for d in demands:
+        c_alloc = alloc_items[d.tenant]
+        res = probe[d.tenant]
+        # rollback ladder: probed rungs strictly above the allocation,
+        # then the allocation itself as the operating rung. θ for the
+        # bottom rung comes from the deepest probe at or below c_alloc
+        # (pessimistic: the nearest measured θ), falling back to the
+        # last accepted step.
+        accepted = res.ladder  # (C, θ) descending C
+        rungs = [(c, th) for c, th in accepted if c > c_alloc]
+        theta_alloc = accepted[-1][1] if accepted else float("inf")
+        for c, th in accepted:
+            if c <= c_alloc:
+                theta_alloc = th
+                break
+        rungs.append((c_alloc, theta_alloc))
+        allocations[d.tenant] = TenantAllocation(
+            tenant=d.tenant,
+            c_items=c_alloc,
+            alloc_bytes=c_alloc * bpi[d.tenant],
+            c_opt=opt_items[d.tenant],
+            opt_bytes=opt_items[d.tenant] * bpi[d.tenant],
+            bytes_per_item=bpi[d.tenant],
+            traffic=d.traffic,
+            ladder=rungs,
+            satisfied=c_alloc >= opt_items[d.tenant],
+        )
+    return CrossTenantAllocation(
+        budget_bytes=budget_bytes,
+        reserve_bytes=reserve,
+        allocations=allocations,
+    )
 
 
 class RollbackManager:

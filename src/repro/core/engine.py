@@ -13,9 +13,10 @@ The session API (DESIGN.md §6) is Index/Storage/Session layered:
 Index` (initialization-stage bulk load, one access per shard) over any
 :class:`repro.core.storage.StorageBackend`; ``engine.save(path)``
 persists the artifact; :meth:`WebANNSEngine.search` takes a typed
-:class:`SearchRequest` and returns a :class:`SearchResult`. The bare
-tuple-returning ``query`` / ``query_batch`` remain as thin deprecation
-shims over ``search`` (removal milestone: v0.6).
+:class:`SearchRequest` and returns a :class:`SearchResult`. (The
+pre-redesign tuple-returning ``query`` / ``query_batch`` shims were
+removed at their v0.6 milestone — ``search`` is the only query entry
+point.)
 
 Searches are FILTERABLE (DESIGN.md §9): ``SearchRequest.filter`` takes
 a :class:`repro.core.metadata.Filter` predicate (or one per query of a
@@ -57,7 +58,6 @@ import math
 import os
 import time
 import uuid as uuid_mod
-import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -803,8 +803,45 @@ class WebANNSEngine:
 
     # ------------------------------------------------------------ sizing
 
-    def resize_cache(self, capacity: int) -> None:
+    def resize_cache(self, capacity: int, warm: bool = False) -> None:
+        """Re-initialize tier 2 at ``capacity`` items. ``warm=True``
+        immediately re-populates it (uncounted init-stage load) — the
+        hook the cross-tenant allocator uses so a reallocation never
+        serves its first queries from an artificially cold cache."""
         self.store.resize(int(capacity))
+        if warm:
+            self.warm_cache()
+
+    def resize_cache_bytes(self, budget_bytes: int, warm: bool = False) -> int:
+        """Resize tier 2 to the largest capacity fitting ``budget_bytes``
+        at the session's precision (DESIGN.md §7/§11). Returns the item
+        capacity actually applied."""
+        cap = max(1, quant.capacity_for_budget(
+            int(budget_bytes), self.dim, self.config.precision
+        ))
+        cap = min(cap, self.n)
+        self.resize_cache(cap, warm=warm)
+        return cap
+
+    # ------------------------------------------------ per-tenant stats
+
+    @property
+    def access_stats(self):
+        """The live tier-3 :class:`~repro.core.store.AccessStats` — the
+        counters the session manager samples per tenant (DESIGN.md §11)."""
+        return self.external.stats
+
+    def snapshot_access_stats(self) -> dict:
+        """A plain-dict snapshot of the tier-3 counters, safe to diff
+        across calls (the manager attributes the delta between two
+        snapshots to whichever tenant's operation ran in between)."""
+        s = self.external.stats
+        return {
+            "n_db": s.n_db,
+            "items_fetched": s.items_fetched,
+            "items_used": s.items_used,
+            "modeled_time": s.modeled_time,
+        }
 
     def warm_cache(self, ids: Optional[np.ndarray] = None) -> None:
         if ids is None:
@@ -1512,56 +1549,6 @@ class WebANNSEngine:
             ids=ids, dists=dists, stats=stats,
             batch_stats=self.last_batch_stats,
         )
-
-    # ------------------------------------------- legacy tuple API (shims)
-
-    def query(
-        self, q: np.ndarray, k: int = 10, ef: Optional[int] = None
-    ) -> Tuple[np.ndarray, np.ndarray, QueryStats]:
-        """Deprecated tuple shim: prefer ``search(SearchRequest(...))``.
-
-        Kept so pre-redesign callers (tests, benchmarks, serving) work
-        unmodified; returns the bare (ids, dists, stats) tuple.
-
-        .. deprecated:: PR 2
-           Removal milestone: **v0.6 (two PRs after the mutation
-           lifecycle lands, PR 6)** — the shim emits exactly one
-           ``DeprecationWarning`` per call until then (tested in
-           ``tests/test_engine_api.py``).
-        """
-        warnings.warn(
-            "WebANNSEngine.query is deprecated and will be removed in "
-            "v0.6 (PR 6); use search(SearchRequest(query=q, k=k, ef=ef))",
-            DeprecationWarning, stacklevel=2,
-        )
-        res = self.search(SearchRequest(query=np.asarray(q), k=k, ef=ef))
-        return res.ids, res.dists, res.stats
-
-    def query_batch(
-        self, Q: np.ndarray, k: int = 10, ef: Optional[int] = None,
-        batch_mode: str = "batched",
-    ) -> Tuple[np.ndarray, np.ndarray, List[QueryStats]]:
-        """Deprecated tuple shim: prefer ``search(SearchRequest(...))``
-        with a ``(B, d)`` query (whole-batch accounting then rides on
-        ``SearchResult.batch_stats`` instead of ``last_batch_stats``).
-
-        .. deprecated:: PR 2
-           Removal milestone: **v0.6 (two PRs after the mutation
-           lifecycle lands, PR 6)** — the shim emits exactly one
-           ``DeprecationWarning`` per call until then (tested in
-           ``tests/test_engine_api.py``).
-        """
-        warnings.warn(
-            "WebANNSEngine.query_batch is deprecated and will be removed "
-            "in v0.6 (PR 6); use "
-            "search(SearchRequest(query=Q, k=k, ef=ef, batch_mode=...))",
-            DeprecationWarning, stacklevel=2,
-        )
-        res = self.search(SearchRequest(
-            query=np.asarray(Q, dtype=np.float32), k=k, ef=ef,
-            batch_mode=batch_mode,
-        ))
-        return res.ids, res.dists, res.stats
 
     def get_texts(self, ids: np.ndarray) -> List[Optional[str]]:
         """Texts for ``ids``; ``None`` for unknown, padded (-1), AND

@@ -35,6 +35,15 @@ import numpy as np
 
 _NAME_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
 
+# Dunder column names are RESERVED for the engine/serving layers: user
+# metadata dicts (build/add/upsert) may never introduce them. The one
+# reserved column in use today is the multi-tenant owner stamp
+# (DESIGN.md §11) — filter-isolation sessions compile every search's
+# tenant predicate against it, so a user-writable tenant column would
+# be a cross-tenant leak by construction.
+TENANT_COLUMN = "__tenant__"
+_RESERVED_RE = re.compile(r"^__.*__$")
+
 def _column_kind(arr: np.ndarray) -> str:
     if arr.dtype.kind in "iub":
         return "int"
@@ -95,6 +104,7 @@ class MetadataStore:
         self,
         columns: Optional[Dict[str, Sequence]] = None,
         n_rows: Optional[int] = None,
+        allow_reserved: bool = False,
     ):
         self._cols: Dict[str, np.ndarray] = {}
         if columns:
@@ -105,7 +115,7 @@ class MetadataStore:
                     f"{ {k: len(v) for k, v in columns.items()} }"
                 )
             for name, vals in columns.items():
-                self._check_name(name)
+                self._check_name(name, allow_reserved=allow_reserved)
                 self._cols[name] = _canon(vals)
         self._n = n_rows if n_rows is not None else (
             len(next(iter(self._cols.values()))) if self._cols else 0
@@ -118,11 +128,17 @@ class MetadataStore:
                 )
 
     @staticmethod
-    def _check_name(name: str) -> None:
+    def _check_name(name: str, allow_reserved: bool = False) -> None:
         if not _NAME_RE.match(name):
             raise ValueError(
                 f"invalid column name {name!r}: must match "
                 "[A-Za-z_][A-Za-z0-9_]* (it becomes a shard filename)"
+            )
+        if _RESERVED_RE.match(name) and not allow_reserved:
+            raise ValueError(
+                f"metadata column {name!r} is reserved: dunder names "
+                "belong to the engine (the multi-tenant session manager "
+                f"stamps {TENANT_COLUMN!r} itself — DESIGN.md §11)"
             )
 
     @property
@@ -147,7 +163,10 @@ class MetadataStore:
         post-append column set without mutating the store."""
         values = values or {}
         for name, vals in values.items():
-            self._check_name(name)
+            # a reserved column may be EXTENDED once it exists (upsert
+            # inherits the retired rows' full column set, tenant stamp
+            # included) but never INTRODUCED through a user value dict
+            self._check_name(name, allow_reserved=name in self._cols)
             if len(vals) != count:
                 raise ValueError(
                     f"column {name!r}: {len(vals)} values for {count} rows"
@@ -191,6 +210,43 @@ class MetadataStore:
         columns are backfilled over the old rows the same way."""
         self._cols = self._extended_columns(count, values)
         self._n += count
+
+    def assign(
+        self,
+        name: str,
+        rows: Sequence[int],
+        values: Sequence,
+        allow_reserved: bool = False,
+    ) -> None:
+        """Overwrite ``values`` at row positions ``rows`` (creating the
+        column — backfilled with its kind's fill value — if absent).
+        This is the write path the session manager uses to stamp the
+        reserved tenant column AFTER a mutation lands, so whatever a
+        caller smuggled into the value dict is overwritten by the owner
+        of record (DESIGN.md §11)."""
+        self._check_name(name, allow_reserved=allow_reserved)
+        rows = np.asarray(rows, dtype=np.int64)
+        vals = _canon(values)
+        if len(rows) != len(vals):
+            raise ValueError(
+                f"assign: {len(vals)} values for {len(rows)} rows"
+            )
+        if rows.size and (rows.min() < 0 or rows.max() >= self._n):
+            raise ValueError(
+                f"assign rows out of range [0, {self._n})"
+            )
+        if name not in self._cols:
+            self._cols[name] = _fill_array(_column_kind(vals), self._n)
+        col = self._cols[name]
+        if _column_kind(col) != _column_kind(vals):
+            raise TypeError(
+                f"column {name!r} holds {_column_kind(col)} values; "
+                f"assigned rows are {_column_kind(vals)}"
+            )
+        if col.dtype.kind == "U" and vals.dtype.itemsize > col.dtype.itemsize:
+            col = col.astype(vals.dtype)  # widen fixed-width unicode
+        col[rows] = vals
+        self._cols[name] = col
 
     def to_columns(self) -> Dict[str, np.ndarray]:
         """The raw column arrays (persistence uses this)."""

@@ -525,7 +525,9 @@ def load_metadata(path: str, manifest: dict, n_items: int):
         # even for full-length columns — fill inference must never
         # promote an int column to float on the way back in
         cols[e["name"]] = pad_column(col, n_items)
-    return MetadataStore(cols, n_rows=n_items)
+    # allow_reserved: a reopened artifact legitimately carries engine-
+    # stamped columns (the filter-isolation tenant stamp, DESIGN.md §11)
+    return MetadataStore(cols, n_rows=n_items, allow_reserved=True)
 
 
 def load_tombstones(path: str, manifest: dict, n_items: int) -> np.ndarray:

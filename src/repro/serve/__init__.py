@@ -1,1 +1,9 @@
-"""Serving substrate: prefill/decode steps, continuous batching, RAG."""
+"""Serving substrate: prefill/decode steps, continuous batching, RAG,
+and the multi-tenant session layer (DESIGN.md §11)."""
+
+from repro.serve.sessions import (  # noqa: F401
+    IsolationError,
+    SessionManager,
+    TenantStats,
+    make_session_retriever,
+)

@@ -40,6 +40,14 @@ class Request:
     query_vec: Optional[np.ndarray] = None  # (d,) float32
     retrieved_ids: Optional[np.ndarray] = None  # (k,) int32
     retrieved_dists: Optional[np.ndarray] = None  # (k,) float32
+    # multi-tenant serving (DESIGN.md §11): retrieval for this request is
+    # scoped to this tenant's slice when the batcher's retrieve_fn is
+    # tenant-aware (sessions.make_session_retriever)
+    tenant: Optional[str] = None
+    # open-loop arrival stamp: admission order is (arrival, rid), so a
+    # burst of equal-arrival submits admits in stable rid order — the
+    # determinism bench_serve replays depend on
+    arrival: float = 0.0
 
 
 class SchedulerExhausted(RuntimeError):
@@ -109,7 +117,23 @@ class ContinuousBatcher:
         self._positional_decode = n_params >= 5
 
     def submit(self, req: Request):
+        """Enqueue a request. Legal at any point in the batcher's life —
+        including after ``run_until_done`` raised
+        :class:`SchedulerExhausted` (the slots still hold the stranded
+        mid-generation requests; a later ``run_until_done`` resumes them
+        alongside the new work). What is NOT legal is resubmitting a
+        request that is still pending or holds a slot: that would reset
+        its ``generated`` list mid-flight and double-occupy slots, so it
+        raises instead of corrupting state."""
+        in_flight = any(r is req or (r is not None and r.rid == req.rid)
+                        for r in self.slots)
+        if in_flight or any(r.rid == req.rid for r in self.pending):
+            raise ValueError(
+                f"request {req.rid} is already pending or mid-generation; "
+                "resubmitting an in-flight request would corrupt its slot"
+            )
         req.generated = []
+        req.done = False
         self.pending.append(req)
 
     # ------------------------------------------------------------ decode
@@ -128,6 +152,17 @@ class ContinuousBatcher:
     # ------------------------------------------------------------- admit
 
     def _admit(self):
+        # deterministic admission: (arrival, rid) order. Submit order is
+        # a tiebreak-free proxy for arrival only when callers submit in
+        # arrival order; under bursty open-loop load (bench_serve) many
+        # requests share one arrival instant, so the queue is re-sorted
+        # here — stable FIFO by rid within an arrival — making every
+        # replay of the same trace admit identically. sorted() is stable,
+        # so requests with equal (arrival, rid) keep submit order.
+        if len(self.pending) > 1:
+            self.pending = deque(sorted(
+                self.pending, key=lambda r: (r.arrival, r.rid)
+            ))
         admitted: List[tuple] = []
         for slot in range(self.max_batch):
             if self.slots[slot] is None and self.pending:
@@ -165,7 +200,13 @@ class ContinuousBatcher:
     def _retrieve_for(self, admitted: List[Request]) -> None:
         """Batched retrieval for an admission wave: every admitted RAG
         request's query goes through ONE batched engine.search call,
-        so tier-3 misses are shared across the wave (DESIGN.md §5)."""
+        so tier-3 misses are shared across the wave (DESIGN.md §5).
+
+        A tenant-aware ``retrieve_fn`` (one accepting ``(Q, tenants)`` —
+        e.g. ``sessions.make_session_retriever``) additionally receives
+        each query's owning tenant, scoping retrieval to that tenant's
+        slice (DESIGN.md §11); a plain single-argument retriever keeps
+        the pre-multi-tenant behavior."""
         if self.retrieve_fn is None:
             return
         rag = [r for r in admitted
@@ -173,7 +214,16 @@ class ContinuousBatcher:
         if not rag:
             return
         Q = np.stack([r.query_vec for r in rag]).astype(np.float32)
-        ids, dists = self.retrieve_fn(Q)
+        try:
+            n_params = len(
+                inspect.signature(self.retrieve_fn).parameters
+            )
+        except (TypeError, ValueError):
+            n_params = 1
+        if n_params >= 2:
+            ids, dists = self.retrieve_fn(Q, [r.tenant for r in rag])
+        else:
+            ids, dists = self.retrieve_fn(Q)
         self.n_retrieval_calls += 1
         for b, req in enumerate(rag):
             req.retrieved_ids = np.asarray(ids[b])

@@ -1,0 +1,752 @@
+"""Multi-tenant session manager: many independent indexes, one process,
+one shared tier-2 byte budget (DESIGN.md §11).
+
+The north-star regime — millions of users, each with a private on-device
+index (MeMemo's per-user model) under a strict memory ceiling shared by
+the whole process (WebANNS's browser-tab constraint) — needs one
+composition layer over the pieces the engine already has: per-user
+metadata filters (§9), mutable indexes (§8), byte-budgeted caches (§7),
+and the continuous batcher. :class:`SessionManager` is that layer.
+
+Isolation modes
+---------------
+
+- ``isolation="engine"`` — every tenant owns a full
+  :class:`~repro.core.engine.WebANNSEngine` (graph, cache, storage, id
+  space). Strongest isolation: a tenant's mutations and traffic touch
+  nothing another tenant can observe except the shared byte budget,
+  which is split explicitly by the allocator.
+- ``isolation="filter"`` — all tenants share ONE engine; each row is
+  stamped with the reserved ``__tenant__`` metadata column
+  (:data:`repro.core.metadata.TENANT_COLUMN`) at mutation time, and
+  every search is compiled against ``Filter.eq("__tenant__", code) &
+  user_filter``. Cheapest resource-wise (one graph, one cache); the
+  leakage contract is enforced by the same route-but-don't-return deny
+  masks as user filters, plus the manager's post-search ownership check.
+
+Shared budget
+-------------
+
+``allocate()`` runs :func:`repro.core.cache_opt.allocate_memory_bytes`:
+per-tenant Algorithm-2 probes produce each tenant's standalone optimum
+and (C, θ) rollback ladder, then the budget is water-filled on traffic
+weights. ``rebalance()`` re-runs it with OBSERVED per-tenant traffic
+(the window counters fed by every search), so the allocation trace
+follows the load mix. Each reallocation is guarded by a
+:class:`~repro.core.cache_opt.RollbackManager` per tenant: a live n_db
+regression past the ladder's θ climbs back toward a bigger size by
+spending the withheld reserve — never by shrinking a peer below its
+allocated floor.
+
+The leakage contract
+--------------------
+
+Every id a search returns is checked against the owning tenant's live id
+set before the result leaves the manager (``verify_isolation=True``, the
+default); a violation raises :class:`IsolationError`. Mutations are
+scoped the same way: deleting or upserting an id another tenant owns
+raises instead of silently cross-writing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.cache_opt import (
+    CrossTenantAllocation,
+    QueryTestStats,
+    RollbackManager,
+    TenantDemand,
+    _round_to,
+    allocate_memory_bytes,
+)
+from repro.core.engine import (
+    EngineConfig,
+    MutationResult,
+    SearchRequest,
+    SearchResult,
+    WebANNSEngine,
+)
+from repro.core.metadata import TENANT_COLUMN, Filter, MetadataStore, _RESERVED_RE
+
+
+class IsolationError(RuntimeError):
+    """A cross-tenant boundary was about to be crossed: a search result
+    carrying a foreign id, or a mutation addressing rows the calling
+    tenant does not own. Raised BEFORE the operation's effect escapes."""
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant serving counters (the manager's AccessStats surface).
+
+    ``n_db``/``items_fetched``/``t_db`` are the tenant's attributed
+    share of the engine's tier-3 counters: the manager snapshots the
+    engine's :class:`~repro.core.store.AccessStats` around every
+    operation and books the delta to the tenant that ran it (exact —
+    operations are serialized within the process). ``window_queries``
+    counts queries since the last rebalance; it is the traffic weight
+    the next rebalance water-fills on.
+    """
+
+    searches: int = 0  # search() calls
+    queries: int = 0  # individual queries served (batch elements count)
+    mutations: int = 0
+    n_db: int = 0
+    items_fetched: int = 0
+    t_db: float = 0.0
+    rollbacks: int = 0
+    window_queries: int = 0
+
+
+def _reject_reserved(metadata: Optional[dict]) -> None:
+    if not metadata:
+        return
+    bad = [k for k in metadata if _RESERVED_RE.match(str(k))]
+    if bad:
+        raise ValueError(
+            f"metadata columns {bad} are reserved: the session manager "
+            "stamps tenant ownership itself (DESIGN.md §11)"
+        )
+
+
+class SessionManager:
+    """Host many tenants in one process under a shared tier-2 byte
+    budget. See the module docstring for the isolation modes and the
+    allocation/rollback protocol.
+
+    Typical lifecycle::
+
+        mgr = SessionManager(budget_bytes=2 << 20, isolation="engine")
+        mgr.create_tenant("alice", X_a, texts=docs_a)
+        mgr.create_tenant("bob", X_b)
+        mgr.allocate()                      # split the budget
+        res = mgr.search("alice", SearchRequest(query=q, k=10))
+        mgr.add("bob", new_rows)
+        mgr.rebalance()                     # re-split on observed traffic
+    """
+
+    ISOLATION_MODES = ("engine", "filter")
+
+    def __init__(
+        self,
+        budget_bytes: int,
+        isolation: str = "engine",
+        engine_config: Optional[EngineConfig] = None,
+        p: float = 0.8,
+        t_theta: float = 0.1,
+        reserve_frac: float = 0.1,
+        shape_grain: int = 64,
+        n_probe: int = 4,
+        probe_ef: int = 48,
+        verify_isolation: bool = True,
+        seed: int = 0,
+    ):
+        if isolation not in self.ISOLATION_MODES:
+            raise ValueError(
+                f"unknown isolation mode {isolation!r}: expected one of "
+                f"{self.ISOLATION_MODES}"
+            )
+        if budget_bytes <= 0:
+            raise ValueError(f"budget_bytes must be > 0, got {budget_bytes}")
+        self.budget_bytes = int(budget_bytes)
+        self.isolation = isolation
+        self.engine_config = engine_config or EngineConfig()
+        self.p = p
+        self.t_theta = t_theta
+        self.reserve_frac = reserve_frac
+        self.shape_grain = shape_grain
+        self.n_probe = n_probe
+        self.probe_ef = probe_ef
+        self.verify_isolation = verify_isolation
+        self._rng = np.random.default_rng(seed)
+        # tenant registries
+        self._codes: Dict[str, int] = {}  # tenant → stamp code (>= 1)
+        self._engines: Dict[str, WebANNSEngine] = {}  # engine mode only
+        self._shared: Optional[WebANNSEngine] = None  # filter mode only
+        self._probes: Dict[str, np.ndarray] = {}
+        self.stats: Dict[str, TenantStats] = {}
+        # budget state
+        self.allocation: Optional[CrossTenantAllocation] = None
+        self._alloc_items: Dict[str, int] = {}
+        self._reserve_bytes: int = 0
+        self._rollbacks: Dict[str, RollbackManager] = {}
+        self.allocation_history: List[dict] = []
+
+    # -------------------------------------------------------- registry
+
+    @property
+    def tenants(self) -> List[str]:
+        return sorted(self._codes)
+
+    def engine_for(self, tenant: str) -> WebANNSEngine:
+        """The engine serving ``tenant`` (the shared one in filter mode)."""
+        self._require(tenant)
+        if self.isolation == "engine":
+            return self._engines[tenant]
+        return self._shared
+
+    def _require(self, tenant: str) -> int:
+        if tenant not in self._codes:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; have {self.tenants}"
+            )
+        return self._codes[tenant]
+
+    def _tenant_precision_dim(self, tenant: str) -> Tuple[str, int]:
+        eng = self.engine_for(tenant)
+        return eng.config.precision, eng.dim
+
+    def _bpi(self, tenant: str) -> int:
+        from repro.core import quant
+
+        precision, dim = self._tenant_precision_dim(tenant)
+        return quant.bytes_per_vector(dim, precision)
+
+    # -------------------------------------------------- tenant creation
+
+    def create_tenant(
+        self,
+        tenant: str,
+        vectors: np.ndarray,
+        texts: Optional[List[str]] = None,
+        metadata: Optional[dict] = None,
+        M: int = 16,
+        ef_construction: int = 200,
+        seed: int = 0,
+    ) -> None:
+        """Register a tenant and ingest its corpus.
+
+        Engine mode builds the tenant a private engine; filter mode adds
+        the rows to the shared engine (building it on first use) and
+        stamps the reserved tenant column. For many tenants known up
+        front, :meth:`build` amortizes the filter-mode graph build.
+        """
+        if tenant in self._codes:
+            raise ValueError(f"tenant {tenant!r} already exists")
+        _reject_reserved(metadata)
+        vectors = np.atleast_2d(np.asarray(vectors, np.float32))
+        code = len(self._codes) + 1  # 0 is the unowned fill value
+        cfg = dataclasses.replace(
+            self.engine_config, cache_capacity=self.shape_grain
+        )
+        if self.isolation == "engine":
+            eng = WebANNSEngine.build(
+                vectors, M=M, ef_construction=ef_construction,
+                config=cfg, texts=texts, seed=seed, metadata=metadata,
+            )
+            self._engines[tenant] = eng
+        else:
+            if self._shared is None:
+                store = MetadataStore(n_rows=0, allow_reserved=True)
+                store.extend(len(vectors), metadata)
+                store.assign(
+                    TENANT_COLUMN, np.arange(len(vectors)),
+                    np.full(len(vectors), code, np.int64),
+                    allow_reserved=True,
+                )
+                self._shared = WebANNSEngine.build(
+                    vectors, M=M, ef_construction=ef_construction,
+                    config=cfg, texts=texts, seed=seed, metadata=store,
+                )
+            else:
+                res = self._shared.add(
+                    vectors, texts=texts, metadata=metadata
+                )
+                self._stamp(res.ids, code)
+        self._codes[tenant] = code
+        self.stats[tenant] = TenantStats()
+        self._probes[tenant] = self._make_probes(vectors)
+
+    @classmethod
+    def build(
+        cls,
+        corpora: Dict[str, Union[np.ndarray, Tuple]],
+        budget_bytes: int,
+        isolation: str = "engine",
+        M: int = 16,
+        ef_construction: int = 200,
+        seed: int = 0,
+        **kwargs,
+    ) -> "SessionManager":
+        """Bulk constructor: ``corpora`` maps tenant → vectors, or
+        tenant → (vectors, texts, metadata). In filter mode this builds
+        ONE offline HNSW over the concatenated corpus (fast path) rather
+        than inserting tenant after tenant incrementally."""
+        mgr = cls(budget_bytes, isolation=isolation, **kwargs)
+        norm: Dict[str, Tuple] = {}
+        for t, spec in corpora.items():
+            if isinstance(spec, tuple):
+                vecs, texts, meta = (list(spec) + [None, None])[:3]
+            else:
+                vecs, texts, meta = spec, None, None
+            _reject_reserved(meta)
+            norm[t] = (np.atleast_2d(np.asarray(vecs, np.float32)),
+                       texts, meta)
+        if isolation == "engine" or len(norm) <= 1:
+            for t, (vecs, texts, meta) in norm.items():
+                mgr.create_tenant(
+                    t, vecs, texts=texts, metadata=meta,
+                    M=M, ef_construction=ef_construction, seed=seed,
+                )
+            return mgr
+        # filter mode: one offline build over the concatenation
+        store = MetadataStore(n_rows=0, allow_reserved=True)
+        all_vecs, all_texts, codes = [], [], []
+        any_texts = any(texts is not None for _, texts, _ in norm.values())
+        for i, (t, (vecs, texts, meta)) in enumerate(norm.items()):
+            code = i + 1
+            store.extend(len(vecs), meta)
+            all_vecs.append(vecs)
+            codes.extend([code] * len(vecs))
+            if any_texts:
+                all_texts.extend(
+                    texts if texts is not None else [None] * len(vecs)
+                )
+            mgr._codes[t] = code
+            mgr.stats[t] = TenantStats()
+            mgr._probes[t] = mgr._make_probes(vecs)
+        X = np.concatenate(all_vecs)
+        store.assign(
+            TENANT_COLUMN, np.arange(len(X)),
+            np.asarray(codes, np.int64), allow_reserved=True,
+        )
+        cfg = dataclasses.replace(
+            mgr.engine_config, cache_capacity=mgr.shape_grain
+        )
+        mgr._shared = WebANNSEngine.build(
+            X, M=M, ef_construction=ef_construction, config=cfg,
+            texts=all_texts if any_texts else None, seed=seed,
+            metadata=store,
+        )
+        return mgr
+
+    def _make_probes(self, vectors: np.ndarray) -> np.ndarray:
+        n = min(self.n_probe, len(vectors))
+        idx = self._rng.choice(len(vectors), size=n, replace=False)
+        noise = 0.05 * self._rng.standard_normal(
+            (n, vectors.shape[1])
+        ).astype(np.float32)
+        return vectors[idx] + noise
+
+    def _stamp(self, ids: np.ndarray, code: int) -> None:
+        """Stamp ownership of freshly mutated rows. Runs AFTER the
+        engine-level mutation, so it overrides anything a caller
+        smuggled into the metadata dict for the reserved column."""
+        if len(ids) == 0:
+            return
+        self._shared.metadata.assign(
+            TENANT_COLUMN, ids, np.full(len(ids), code, np.int64),
+            allow_reserved=True,
+        )
+
+    # -------------------------------------------------------- ownership
+
+    def ids_of(self, tenant: str) -> np.ndarray:
+        """The tenant's LIVE ids — the set every returned id must be in."""
+        code = self._require(tenant)
+        if self.isolation == "engine":
+            eng = self._engines[tenant]
+            return np.nonzero(~eng.tombstones)[0]
+        col = self._shared.metadata.column(TENANT_COLUMN)
+        return np.nonzero((col == code) & ~self._shared.tombstones)[0]
+
+    def _owns(self, tenant: str, ids: np.ndarray) -> np.ndarray:
+        """(len(ids),) bool: which of ``ids`` the tenant owns (live)."""
+        code = self._codes[tenant]
+        ids = np.asarray(ids, np.int64)
+        eng = self.engine_for(tenant)
+        ok = (ids >= 0) & (ids < eng.n)
+        safe = np.clip(ids, 0, max(eng.n - 1, 0))
+        ok &= ~eng.tombstones[safe]
+        if self.isolation == "filter":
+            col = self._shared.metadata.column(TENANT_COLUMN)
+            ok &= col[safe] == code
+        return ok
+
+    def _verify_result(self, tenant: str, ids: np.ndarray) -> None:
+        flat = np.asarray(ids).ravel()
+        flat = flat[flat >= 0]  # -1 padding = "fewer than k matches"
+        if flat.size == 0:
+            return
+        owned = self._owns(tenant, flat)
+        if not owned.all():
+            foreign = np.unique(flat[~owned])
+            raise IsolationError(
+                f"search for tenant {tenant!r} returned foreign/dead "
+                f"ids {foreign[:8].tolist()} — cross-tenant leak"
+            )
+
+    # ----------------------------------------------------------- search
+
+    def _tenant_filter(self, tenant: str) -> Optional[Filter]:
+        if self.isolation == "engine":
+            return None
+        return Filter.eq(TENANT_COLUMN, self._codes[tenant])
+
+    def _scope_request(
+        self, tenant: str, request: SearchRequest
+    ) -> SearchRequest:
+        tf = self._tenant_filter(tenant)
+        if tf is None:
+            return request
+        f = request.filter
+        if f is None:
+            scoped: Union[Filter, List[Optional[Filter]]] = tf
+        elif isinstance(f, Filter):
+            scoped = tf & f
+        else:
+            scoped = [tf if fi is None else (tf & fi) for fi in f]
+        return dataclasses.replace(request, filter=scoped)
+
+    def search(self, tenant: str, request: SearchRequest) -> SearchResult:
+        """Serve one (possibly batched) search for ``tenant``, scoped to
+        its slice, with the tier-3 delta booked to its stats and the
+        result ownership-verified before it is returned."""
+        self._require(tenant)
+        if not self._alloc_items:
+            self.allocate()  # lazy first split: equal traffic weights
+        eng = self.engine_for(tenant)
+        st = self.stats[tenant]
+        before = eng.snapshot_access_stats()
+        res = eng.search(self._scope_request(tenant, request))
+        after = eng.snapshot_access_stats()
+        q = np.asarray(request.query)
+        n_queries = 1 if q.ndim == 1 else q.shape[0]
+        st.searches += 1
+        st.queries += n_queries
+        st.window_queries += n_queries
+        d_ndb = after["n_db"] - before["n_db"]
+        st.n_db += d_ndb
+        st.items_fetched += (
+            after["items_fetched"] - before["items_fetched"]
+        )
+        st.t_db += after["modeled_time"] - before["modeled_time"]
+        if self.verify_isolation:
+            self._verify_result(tenant, res.ids)
+        self._observe(tenant, d_ndb / max(1, n_queries))
+        return res
+
+    # -------------------------------------------------------- mutations
+
+    def add(
+        self,
+        tenant: str,
+        vectors: np.ndarray,
+        texts: Optional[List[str]] = None,
+        metadata: Optional[dict] = None,
+    ) -> MutationResult:
+        code = self._require(tenant)
+        _reject_reserved(metadata)
+        self.stats[tenant].mutations += 1
+        res = self.engine_for(tenant).add(
+            vectors, texts=texts, metadata=metadata
+        )
+        if self.isolation == "filter":
+            self._stamp(res.ids, code)
+        return res
+
+    def _check_mutation_ids(self, tenant: str, ids) -> np.ndarray:
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        owned = self._owns(tenant, ids)
+        if not owned.all():
+            raise IsolationError(
+                f"tenant {tenant!r} addressed ids it does not own: "
+                f"{np.unique(ids[~owned])[:8].tolist()}"
+            )
+        return ids
+
+    def delete(self, tenant: str, ids) -> MutationResult:
+        """Tombstone ``ids`` — refused unless ``tenant`` owns them all."""
+        self._require(tenant)
+        ids = self._check_mutation_ids(tenant, ids)
+        self.stats[tenant].mutations += 1
+        return self.engine_for(tenant).delete(ids)
+
+    def upsert(
+        self,
+        tenant: str,
+        ids,
+        vectors: np.ndarray,
+        texts: Optional[List[str]] = None,
+        metadata: Optional[dict] = None,
+    ) -> MutationResult:
+        """Replace rows ``tenant`` owns; replacements are re-stamped to
+        the same tenant regardless of the metadata dict's contents."""
+        code = self._require(tenant)
+        _reject_reserved(metadata)
+        ids = self._check_mutation_ids(tenant, ids)
+        self.stats[tenant].mutations += 1
+        res = self.engine_for(tenant).upsert(
+            ids, vectors, texts=texts, metadata=metadata
+        )
+        if self.isolation == "filter":
+            self._stamp(res.ids, code)
+        return res
+
+    def get_texts(self, tenant: str, ids) -> List[Optional[str]]:
+        """Tenant-scoped text lookup: foreign ids come back ``None``."""
+        self._require(tenant)
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        owned = self._owns(tenant, ids)
+        texts = self.engine_for(tenant).get_texts(ids)
+        return [t if owned[i] else None for i, t in enumerate(texts)]
+
+    # --------------------------------------------------- budget control
+
+    def _probe_query_test(
+        self, tenant: str
+    ) -> Callable[[int], QueryTestStats]:
+        """Algorithm-2 probe closure for one tenant: resize (the
+        tenant's cache in engine mode, the shared cache in filter mode),
+        run the tenant's probe queries through its scoped view, return
+        aggregate stats. Probe traffic is NOT booked to tenant stats."""
+        eng = self.engine_for(tenant)
+        probes = self._probes[tenant]
+        filt = self._tenant_filter(tenant)
+
+        def query_test(c: int) -> QueryTestStats:
+            # snap the probe capacity to the shape grain: every distinct
+            # cache capacity is a distinct jit trace of the phase
+            # programs, and the secant search would otherwise visit
+            # arbitrary sizes — grain-snapping bounds compiles to
+            # n/grain per tenant (same rationale as _round_to for the
+            # final allocation)
+            c = min(_round_to(int(c), self.shape_grain), eng.n)
+            eng.resize_cache(c, warm=True)
+            agg = []
+            for q in probes:
+                agg.append(eng.search(SearchRequest(
+                    query=q, k=4, ef=self.probe_ef, filter=filt,
+                )).stats)
+            n_db = float(np.mean([s.n_db for s in agg]))
+            n_q = float(np.mean([max(s.n_visited, 1) for s in agg]))
+            t_q = float(np.mean([s.t_query for s in agg]))
+            t_db = eng.external.access_cost(self.probe_ef)
+            return QueryTestStats(
+                n_db=n_db, n_q=n_q, t_query=t_q, t_db=t_db
+            )
+
+        return query_test
+
+    def _demands(
+        self, traffic: Optional[Dict[str, float]]
+    ) -> List[TenantDemand]:
+        out = []
+        for t in self.tenants:
+            eng = self.engine_for(t)
+            if traffic and t in traffic:
+                w = float(traffic[t])
+            else:
+                w = float(max(1, self.stats[t].window_queries))
+            precision, dim = self._tenant_precision_dim(t)
+            n_items = (
+                eng.n_live if self.isolation == "filter" else eng.n
+            )
+            out.append(TenantDemand(
+                tenant=t,
+                query_test=self._probe_query_test(t),
+                dim=dim,
+                n_items=max(1, n_items),
+                precision=precision,
+                traffic=w,
+                min_items=self.shape_grain,
+            ))
+        return out
+
+    def allocate(
+        self, traffic: Optional[Dict[str, float]] = None
+    ) -> CrossTenantAllocation:
+        """Split the budget across tenants (water-filling on traffic —
+        provided, observed-window, or equal on first call) and apply it:
+        per-tenant cache capacities in engine mode, the summed shared
+        capacity in filter mode. Rebuilds each tenant's RollbackManager
+        from its fresh ladder. Records the allocation in
+        ``allocation_history`` (the bench's allocation trace)."""
+        if not self._codes:
+            raise ValueError("no tenants to allocate for")
+        alloc = allocate_memory_bytes(
+            self._demands(traffic),
+            self.budget_bytes,
+            p=self.p,
+            t_theta=self.t_theta,
+            reserve_frac=self.reserve_frac,
+            shape_grain=self.shape_grain,
+        )
+        self.allocation = alloc
+        self._alloc_items = alloc.items()
+        # floors (shape grain × tenant count) can exceed a tiny budget —
+        # allocations honor floors first, so the reserve just runs dry
+        self._reserve_bytes = max(
+            0, self.budget_bytes - alloc.total_alloc_bytes
+        )
+        self._apply_capacities()
+        self._rollbacks = {}
+        for t, a in alloc.allocations.items():
+            self._rollbacks[t] = RollbackManager(
+                a.ladder, resize=self._make_rollback_resize(t)
+            )
+        self.allocation_history.append({
+            "event": "allocate",
+            "traffic": {
+                t: a.traffic for t, a in alloc.allocations.items()
+            },
+            "items": dict(self._alloc_items),
+            "bytes": {
+                t: a.alloc_bytes for t, a in alloc.allocations.items()
+            },
+            "opt_items": {
+                t: a.c_opt for t, a in alloc.allocations.items()
+            },
+            "reserve_bytes": self._reserve_bytes,
+            "contended": alloc.contended,
+        })
+        return alloc
+
+    def allocate_equal(
+        self, traffic: Optional[Dict[str, float]] = None
+    ) -> Dict[str, int]:
+        """Probe-free split: the usable budget divided in traffic
+        proportion (equal by default), grain-rounded — no Algorithm-2
+        probes, no rollback ladders. The cold-bootstrap path (and the
+        cheap one for tests): before any traffic exists there is
+        nothing to probe against, so a plain proportional split is as
+        good as water-filling and costs zero query tests."""
+        if not self._codes:
+            raise ValueError("no tenants to allocate for")
+        reserve = int(self.budget_bytes * self.reserve_frac)
+        usable = self.budget_bytes - reserve
+        w = {
+            t: float((traffic or {}).get(t, 1.0)) for t in self.tenants
+        }
+        w_tot = sum(w.values())
+        self._alloc_items = {}
+        spent = 0
+        for t in self.tenants:
+            bpi = self._bpi(t)
+            c = int(usable * w[t] / w_tot) // bpi
+            c = min(
+                _round_to(c, self.shape_grain), self.engine_for(t).n
+            )
+            self._alloc_items[t] = c
+            spent += c * bpi
+        self._reserve_bytes = max(0, self.budget_bytes - spent)
+        self._apply_capacities()
+        self._rollbacks = {}  # no ladders without probes
+        self.allocation_history.append({
+            "event": "allocate_equal",
+            "traffic": w,
+            "items": dict(self._alloc_items),
+            "reserve_bytes": self._reserve_bytes,
+        })
+        return dict(self._alloc_items)
+
+    def rebalance(
+        self, traffic: Optional[Dict[str, float]] = None
+    ) -> CrossTenantAllocation:
+        """Re-run the allocator on observed traffic (or ``traffic``
+        overrides) and reset the observation window."""
+        alloc = self.allocate(traffic)
+        for st in self.stats.values():
+            st.window_queries = 0
+        return alloc
+
+    def _apply_capacities(self) -> None:
+        if self.isolation == "engine":
+            for t, c in self._alloc_items.items():
+                self._engines[t].resize_cache(c, warm=True)
+        else:
+            total = sum(self._alloc_items.values())
+            self._shared.resize_cache(
+                min(total, self._shared.n), warm=True
+            )
+
+    def _make_rollback_resize(self, tenant: str) -> Callable[[int], None]:
+        def resize(c_target: int) -> None:
+            self._grow_allocation(tenant, int(c_target))
+
+        return resize
+
+    def _grow_allocation(self, tenant: str, c_target: int) -> None:
+        """Rollback spend path: grow ``tenant``'s allocation toward
+        ``c_target`` using ONLY the reserve — peers' floors are never
+        touched. A dry reserve grants what it can (possibly nothing)."""
+        cur = self._alloc_items.get(tenant, 0)
+        delta = c_target - cur
+        if delta <= 0:
+            return
+        bpi = self._bpi(tenant)
+        grant = min(delta, self._reserve_bytes // bpi)
+        if grant <= 0:
+            return
+        self._alloc_items[tenant] = cur + grant
+        self._reserve_bytes -= grant * bpi
+        self.stats[tenant].rollbacks += 1
+        self._apply_capacities()
+        self.allocation_history.append({
+            "event": "rollback",
+            "tenant": tenant,
+            "items": dict(self._alloc_items),
+            "reserve_bytes": self._reserve_bytes,
+        })
+
+    def _observe(self, tenant: str, n_db_per_query: float) -> None:
+        rb = self._rollbacks.get(tenant)
+        if rb is not None:
+            rb.observe(n_db_per_query)
+
+    # ------------------------------------------------------- reporting
+
+    def stats_snapshot(self) -> dict:
+        """JSON-able per-tenant serving stats + the current allocation."""
+        return {
+            "tenants": {
+                t: dataclasses.asdict(self.stats[t]) for t in self.tenants
+            },
+            "alloc_items": dict(self._alloc_items),
+            "reserve_bytes": self._reserve_bytes,
+            "budget_bytes": self.budget_bytes,
+            "isolation": self.isolation,
+        }
+
+
+def make_session_retriever(
+    manager: SessionManager, k: int = 4, ef: int = 64
+) -> Callable[[np.ndarray, Sequence[Optional[str]]], Tuple]:
+    """Tenant-aware retrieval hook for :class:`ContinuousBatcher`
+    (DESIGN.md §11): the batcher passes the admission wave's query
+    matrix plus each query's owning tenant; queries are grouped by
+    tenant and served through one scoped batched search per tenant, so
+    RAG retrieval composes with session isolation."""
+
+    def retrieve(
+        Q: np.ndarray, tenants: Sequence[Optional[str]]
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        Q = np.asarray(Q, np.float32)
+        if len(tenants) != len(Q):
+            raise ValueError(
+                f"{len(tenants)} tenants for {len(Q)} queries"
+            )
+        missing = [t for t in tenants if t is None]
+        if missing:
+            raise ValueError(
+                "tenant-scoped retrieval requires Request.tenant on "
+                "every RAG request served by a session retriever"
+            )
+        ids = np.full((len(Q), k), -1, np.int64)
+        dists = np.full((len(Q), k), np.inf, np.float32)
+        by_tenant: Dict[str, List[int]] = {}
+        for i, t in enumerate(tenants):
+            by_tenant.setdefault(t, []).append(i)
+        for t, rows in by_tenant.items():
+            res = manager.search(t, SearchRequest(
+                query=Q[rows], k=k, ef=ef,
+            ))
+            ids[rows] = np.asarray(res.ids, np.int64)
+            dists[rows] = np.asarray(res.dists, np.float32)
+        return ids, dists
+
+    return retrieve

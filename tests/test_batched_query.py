@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.engine import BatchStats, EngineConfig, WebANNSEngine
+from repro.core.engine import (BatchStats, EngineConfig, SearchRequest,
+                              WebANNSEngine)
 from repro.core.hnsw import exact_search
 from repro.core.store import (
     TieredStore,
@@ -26,6 +27,14 @@ from repro.core.store import (
 )
 from repro.kernels import ref
 from repro.kernels.gather_distance import gather_distance_batch_pallas
+
+
+def tuple_query_batch(eng, Q, k=10, ef=None, batch_mode="batched"):
+    """Tuple view of a batched search (the removed shims' shape)."""
+    res = eng.search(
+        SearchRequest(query=Q, k=k, ef=ef, batch_mode=batch_mode)
+    )
+    return res.ids, res.dists, res.stats
 
 
 @pytest.fixture(scope="module")
@@ -52,10 +61,10 @@ def test_batched_matches_loop_exactly(small_dataset, small_graph,
     X, _ = small_dataset
     cap = max(16, int(len(X) * ratio))
     loop = _fresh(X, small_graph, cap)
-    i1, d1, s1 = loop.query_batch(overlap_queries, k=10, ef=48,
+    i1, d1, s1 = tuple_query_batch(loop, overlap_queries, k=10, ef=48,
                                   batch_mode="loop")
     bat = _fresh(X, small_graph, cap)
-    i2, d2, s2 = bat.query_batch(overlap_queries, k=10, ef=48)
+    i2, d2, s2 = tuple_query_batch(bat, overlap_queries, k=10, ef=48)
     np.testing.assert_array_equal(i1, i2)
     np.testing.assert_array_equal(d1, d2)
     assert len(s2) == len(overlap_queries)
@@ -66,9 +75,9 @@ def test_batched_eager_mode_parity(small_dataset, small_graph,
     """webanns-base (eager, trigger=1) must also be mode-agnostic."""
     X, _ = small_dataset
     cfg = EngineConfig(mode="webanns-base", cache_capacity=128)
-    i1, d1, _ = WebANNSEngine(X, small_graph, cfg).query_batch(
+    i1, d1, _ = tuple_query_batch(WebANNSEngine(X, small_graph, cfg),
         overlap_queries[:4], k=5, ef=32, batch_mode="loop")
-    i2, d2, _ = WebANNSEngine(X, small_graph, cfg).query_batch(
+    i2, d2, _ = tuple_query_batch(WebANNSEngine(X, small_graph, cfg),
         overlap_queries[:4], k=5, ef=32)
     np.testing.assert_array_equal(i1, i2)
     np.testing.assert_array_equal(d1, d2)
@@ -81,7 +90,7 @@ def test_batched_recall_reasonable(clustered_dataset):
     X, Q = clustered_dataset
     g = build_hnsw(X, M=8, ef_construction=60, seed=0)
     eng = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X) // 4))
-    ids, _, _ = eng.query_batch(Q, k=10, ef=64)
+    ids, _, _ = tuple_query_batch(eng, Q, k=10, ef=64)
     hits = 0
     for b in range(len(Q)):
         ex, _ = exact_search(X, Q[b], 10)
@@ -99,9 +108,9 @@ def test_batched_fewer_tier3_accesses(small_dataset, small_graph,
     X, _ = small_dataset
     cap = max(16, len(X) // 10)
     loop = _fresh(X, small_graph, cap)
-    loop.query_batch(overlap_queries, k=10, ef=48, batch_mode="loop")
+    tuple_query_batch(loop, overlap_queries, k=10, ef=48, batch_mode="loop")
     bat = _fresh(X, small_graph, cap)
-    bat.query_batch(overlap_queries, k=10, ef=48)
+    tuple_query_batch(bat, overlap_queries, k=10, ef=48)
     assert bat.external.stats.n_db < loop.external.stats.n_db
     assert bat.external.stats.items_fetched < loop.external.stats.items_fetched
     # whole-batch accounting is exposed and consistent
@@ -118,7 +127,7 @@ def test_per_query_demand_vs_batch_accounting(small_dataset, small_graph,
     shared fetches, i.e. >= the batch's true access count."""
     X, _ = small_dataset
     eng = _fresh(X, small_graph, max(16, len(X) // 10))
-    _, _, stats = eng.query_batch(overlap_queries, k=10, ef=48)
+    _, _, stats = tuple_query_batch(eng, overlap_queries, k=10, ef=48)
     assert sum(s.n_db for s in stats) >= eng.last_batch_stats.n_db
     assert all(s.n_dist > 0 for s in stats)
 

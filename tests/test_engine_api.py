@@ -1,5 +1,5 @@
 """Session-layer API (DESIGN.md §6): config validation, the typed
-SearchRequest/SearchResult surface, the legacy tuple shims, and the
+SearchRequest/SearchResult surface, the removed legacy shims, and the
 open/save acceptance contract — a reopened disk-backed engine must be
 bit-identical to the in-memory engine in all of loop/batched/fused
 modes while tier-3 fetches are actually served from shards."""
@@ -107,60 +107,21 @@ def test_search_rejects_bad_batch_mode(engine, small_dataset):
         engine.search(SearchRequest(query=Q[:2], batch_mode="turbo"))
 
 
-# ------------------------------------------------------ legacy tuple shims
+# --------------------------------------------- legacy tuple shims: GONE
 
 
-def test_query_shim_matches_search(small_dataset, small_graph):
-    X, Q = small_dataset
+def test_tuple_shims_are_removed(small_dataset, small_graph):
+    """The v0.6 milestone the shims' DeprecationWarnings promised: the
+    tuple-returning ``query``/``query_batch`` attributes no longer
+    exist at all — search(SearchRequest) is the only query entry
+    point. (AttributeError, not a warning: code still calling the
+    shims must fail loudly, not keep limping.)"""
+    X, _ = small_dataset
     eng = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=128))
-    res = eng.search(SearchRequest(query=Q[1], k=5, ef=48))
-    with pytest.deprecated_call():
-        ids, dists, stats = eng.query(Q[1], k=5, ef=48)
-    np.testing.assert_array_equal(ids, res.ids)
-    np.testing.assert_array_equal(dists, res.dists)
-    assert isinstance(stats, QueryStats)
-
-
-def test_shims_emit_exactly_one_warning_per_call_with_milestone(
-    small_dataset, small_graph
-):
-    """The deprecation contract: each tuple-shim call emits EXACTLY one
-    DeprecationWarning (no double-emission through the search() core),
-    and the message names the concrete removal milestone (v0.6)."""
-    import warnings
-
-    X, Q = small_dataset
-    eng = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=128))
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        eng.query(Q[0], k=3, ef=32)
-    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)]
-    assert len(dep) == 1, [str(r.message) for r in dep]
-    assert "v0.6" in str(dep[0].message)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        eng.query_batch(Q[:2], k=3, ef=32)
-    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)]
-    assert len(dep) == 1, [str(r.message) for r in dep]
-    assert "v0.6" in str(dep[0].message)
-    # two calls → two warnings: the shim never suppresses repeats itself
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        eng.query(Q[0], k=3, ef=32)
-        eng.query(Q[1], k=3, ef=32)
-    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)]
-    assert len(dep) == 2
-
-
-def test_query_batch_shim_matches_search(small_dataset, small_graph):
-    X, Q = small_dataset
-    eng = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=128))
-    res = eng.search(SearchRequest(query=Q[:4], k=5, ef=48))
-    with pytest.deprecated_call():
-        ids, dists, stats = eng.query_batch(Q[:4], k=5, ef=48)
-    np.testing.assert_array_equal(ids, res.ids)
-    np.testing.assert_array_equal(dists, res.dists)
-    assert len(stats) == 4
+    assert not hasattr(eng, "query")
+    assert not hasattr(eng, "query_batch")
+    assert not hasattr(WebANNSEngine, "query")
+    assert not hasattr(WebANNSEngine, "query_batch")
 
 
 # ------------------------------------------- open/save acceptance contract

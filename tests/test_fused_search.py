@@ -6,8 +6,14 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.hnsw import build_hnsw
+
+
+def tuple_query(eng, q, k=10, ef=None):
+    """Tuple view of the typed API (the removed v0.6 shims' shape)."""
+    res = eng.search(SearchRequest(query=q, k=k, ef=ef))
+    return res.ids, res.dists, res.stats
 
 
 @pytest.mark.parametrize("ratio", [0.1, 0.3, 1.0])
@@ -19,8 +25,8 @@ def test_fused_matches_host_driver(small_dataset, small_graph, ratio):
         X, small_graph, EngineConfig(cache_capacity=cap, fused=True)
     )
     for q in Q[:5]:
-        ih, dh, sh = host.query(q, k=10, ef=64)
-        iff, df, sf = fused.query(q, k=10, ef=64)
+        ih, dh, sh = tuple_query(host, q, k=10, ef=64)
+        iff, df, sf = tuple_query(fused, q, k=10, ef=64)
         np.testing.assert_array_equal(ih, iff)
         np.testing.assert_allclose(dh, df, rtol=1e-5)
         assert sh.n_db == sf.n_db  # identical access pattern
@@ -32,11 +38,11 @@ def test_fused_counts_accesses(small_dataset, small_graph):
         X, small_graph,
         EngineConfig(cache_capacity=len(X) // 10, fused=True),
     )
-    _, _, s = eng.query(Q[0], k=10, ef=64)
+    _, _, s = tuple_query(eng, Q[0], k=10, ef=64)
     assert s.n_db > 0 and s.items_fetched > 0
     assert s.t_db > 0  # cost model applied
     # repeated query hits the (retained) cache
-    _, _, s2 = eng.query(Q[0], k=10, ef=64)
+    _, _, s2 = tuple_query(eng, Q[0], k=10, ef=64)
     assert s2.n_db <= s.n_db
 
 
@@ -54,7 +60,7 @@ def test_property_fused_equals_host(n, cap_frac, seed):
     cap = max(4, int(n * cap_frac))
     host = WebANNSEngine(X, g, EngineConfig(cache_capacity=cap))
     fused = WebANNSEngine(X, g, EngineConfig(cache_capacity=cap, fused=True))
-    ih, _, sh = host.query(q, k=5, ef=32)
-    iff, _, sf = fused.query(q, k=5, ef=32)
+    ih, _, sh = tuple_query(host, q, k=5, ef=32)
+    iff, _, sf = tuple_query(fused, q, k=5, ef=32)
     np.testing.assert_array_equal(ih, iff)
     assert sh.n_db == sf.n_db

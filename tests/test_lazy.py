@@ -11,8 +11,14 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.hnsw import build_hnsw, exact_search
+
+
+def tuple_query(eng, q, k=10, ef=None):
+    """Tuple view of the typed API (the removed v0.6 shims' shape)."""
+    res = eng.search(SearchRequest(query=q, k=k, ef=ef))
+    return res.ids, res.dists, res.stats
 
 
 @pytest.fixture(scope="module")
@@ -32,8 +38,8 @@ def test_lazy_equals_full_memory(engines, ratio):
         X, g, EngineConfig(cache_capacity=max(8, int(len(X) * ratio)))
     )
     for q in Q[:6]:
-        i_f, d_f, _ = full.query(q, k=10, ef=64)
-        i_l, d_l, _ = lazy.query(q, k=10, ef=64)
+        i_f, d_f, _ = tuple_query(full, q, k=10, ef=64)
+        i_l, d_l, _ = tuple_query(lazy, q, k=10, ef=64)
         np.testing.assert_array_equal(i_f, i_l)
         np.testing.assert_allclose(d_f, d_l, rtol=1e-5)
 
@@ -43,7 +49,7 @@ def test_zero_redundancy(engines):
     X, Q, g, _ = engines
     lazy = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X) // 10))
     for q in Q[:4]:
-        lazy.query(q, k=10, ef=64)
+        tuple_query(lazy, q, k=10, ef=64)
     assert lazy.external.stats.redundancy() == 0.0
 
 
@@ -57,8 +63,8 @@ def test_lazy_fewer_accesses_than_eager(engines):
     )
     n_lazy = n_eager = 0
     for q in Q[:4]:
-        _, _, s_l = lazy.query(q, k=10, ef=64)
-        _, _, s_e = eager.query(q, k=10, ef=64)
+        _, _, s_l = tuple_query(lazy, q, k=10, ef=64)
+        _, _, s_e = tuple_query(eager, q, k=10, ef=64)
         n_lazy += s_l.n_db
         n_eager += s_e.n_db
     assert n_lazy < n_eager / 2, (n_lazy, n_eager)
@@ -67,7 +73,7 @@ def test_lazy_fewer_accesses_than_eager(engines):
 def test_full_memory_no_db_access(engines):
     X, Q, g, full = engines
     before = full.external.stats.n_db
-    full.query(Q[0], k=10, ef=64)
+    tuple_query(full, Q[0], k=10, ef=64)
     assert full.external.stats.n_db == before
 
 
@@ -75,7 +81,7 @@ def test_miss_list_bounded_by_trigger(engines):
     """Intra-layer trigger: |L| at each load is < ef + max_degree."""
     X, Q, g, _ = engines
     lazy = WebANNSEngine(X, g, EngineConfig(cache_capacity=16))
-    _, _, s = lazy.query(Q[0], k=10, ef=32)
+    _, _, s = tuple_query(lazy, Q[0], k=10, ef=32)
     bound = 32 + g.max_degree
     # items per access can never exceed the trigger bound
     assert s.items_fetched <= s.n_db * bound
@@ -86,8 +92,8 @@ def test_warm_cache_reduces_accesses(engines):
     cold = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X) // 2))
     warm = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X) // 2))
     warm.warm_cache()
-    _, _, s_c = cold.query(Q[0], k=10, ef=64)
-    _, _, s_w = warm.query(Q[0], k=10, ef=64)
+    _, _, s_c = tuple_query(cold, Q[0], k=10, ef=64)
+    _, _, s_w = tuple_query(warm, Q[0], k=10, ef=64)
     assert s_w.n_db <= s_c.n_db
 
 
@@ -95,8 +101,8 @@ def test_repeated_queries_hit_cache(engines):
     """Second identical query touches only cached vectors (locality)."""
     X, Q, g, _ = engines
     eng = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X)))
-    _, _, s1 = eng.query(Q[0], k=10, ef=64)
-    _, _, s2 = eng.query(Q[0], k=10, ef=64)
+    _, _, s1 = tuple_query(eng, Q[0], k=10, ef=64)
+    _, _, s2 = tuple_query(eng, Q[0], k=10, ef=64)
     assert s1.n_db > 0 and s2.n_db == 0
 
 
@@ -118,8 +124,8 @@ def test_property_lazy_equals_full(n, cap_frac, ef, seed):
     lazy = WebANNSEngine(
         X, g, EngineConfig(cache_capacity=max(4, int(n * cap_frac)))
     )
-    i_f, _, _ = full.query(q, k=5, ef=ef)
-    i_l, _, s = lazy.query(q, k=5, ef=ef)
+    i_f, _, _ = tuple_query(full, q, k=5, ef=ef)
+    i_l, _, s = tuple_query(lazy, q, k=5, ef=ef)
     np.testing.assert_array_equal(i_f, i_l)
     assert s.n_db >= 1
 
@@ -130,7 +136,7 @@ def test_results_match_exact_search_quality(engines):
     lazy = WebANNSEngine(X, g, EngineConfig(cache_capacity=len(X) // 5))
     hits = 0
     for q in Q:
-        ids, _, _ = lazy.query(q, k=10, ef=64)
+        ids, _, _ = tuple_query(lazy, q, k=10, ef=64)
         ex, _ = exact_search(X, q, 10)
         hits += len(set(ids.tolist()) & set(ex.tolist()))
     assert hits / (10 * len(Q)) > 0.85

@@ -4,9 +4,15 @@ paper attributes to it (redundancy, access counts)."""
 import numpy as np
 import pytest
 
-from repro.core.engine import EngineConfig, WebANNSEngine
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.hnsw import exact_search
 from repro.core.mememo import MememoEngine, _dist_interpreted, _dist_numpy
+
+
+def tuple_query(eng, q, k=10, ef=None):
+    """Tuple view of the typed API (the removed v0.6 shims' shape)."""
+    res = eng.search(SearchRequest(query=q, k=k, ef=ef))
+    return res.ids, res.dists, res.stats
 
 
 def test_interpreted_distance_matches_numpy():
@@ -40,7 +46,7 @@ def test_mememo_redundancy_exceeds_webanns(small_dataset, small_graph):
     web = WebANNSEngine(X, small_graph, EngineConfig(cache_capacity=cap))
     for q in Q[:5]:
         mem.query(q, k=10, ef=64)
-        web.query(q, k=10, ef=64)
+        tuple_query(web, q, k=10, ef=64)
     r_mem = mem.external.stats.redundancy()
     r_web = web.external.stats.redundancy()
     assert r_mem > 0.5  # paper: >50% redundant under memory pressure
@@ -55,7 +61,7 @@ def test_mememo_more_db_accesses_than_webanns(small_dataset, small_graph):
     n_mem = n_web = 0
     for q in Q[:5]:
         _, _, sm = mem.query(q, k=10, ef=64)
-        _, _, sw = web.query(q, k=10, ef=64)
+        _, _, sw = tuple_query(web, q, k=10, ef=64)
         n_mem += sm.n_db
         n_web += sw.n_db
     assert n_web < n_mem

@@ -240,3 +240,102 @@ def test_budget_retrieval_splits_hbm(rag_setup):
     assert 1 <= cache_items <= X.shape[0]
     assert kv_bytes == budget - cache_items * X.shape[1] * 4
     assert kv_bytes > 0  # optimizer freed memory for the KV cache
+
+
+# ------------------------------------- admission determinism + resubmit
+
+
+def _echo_batcher(max_batch=2, retrieve_fn=None):
+    """Cache-echo toy batcher (same LM as the staggered-slot test):
+    cheap, deterministic, no transformer params."""
+
+    def decode_fn(params, state, tokens, positions, active):
+        B, L = state.shape
+        state = state.at[jnp.arange(B),
+                         jnp.where(active, positions, L)].set(
+            tokens[:, 0], mode="drop")
+        logits = jax.nn.one_hot(tokens[:, 0] % 11, 11)[:, None, :]
+        return logits, state
+
+    return ContinuousBatcher(
+        decode_fn=decode_fn,
+        init_state_fn=lambda bs, ln: jnp.zeros((bs, ln), jnp.int32),
+        params=None, max_batch=max_batch, max_len=32,
+        retrieve_fn=retrieve_fn,
+    )
+
+
+def test_submit_after_exhaustion_resumes_stranded_work():
+    """SchedulerExhausted is a pause, not a poisoned state: submitting
+    MORE work afterwards is legal, and the next run_until_done finishes
+    both the stranded mid-generation requests and the new ones."""
+    b = _echo_batcher(max_batch=2)
+    for rid in range(4):
+        b.submit(Request(rid=rid, prompt=np.array([1, 2], np.int32),
+                         max_new=6))
+    with pytest.raises(SchedulerExhausted):
+        b.run_until_done(max_steps=3)
+    b.submit(Request(rid=99, prompt=np.array([3], np.int32), max_new=2))
+    done = b.run_until_done()
+    assert sorted(done) == [0, 1, 2, 3, 99]
+    assert not b.exhausted
+
+
+def test_resubmitting_in_flight_request_raises():
+    b = _echo_batcher(max_batch=2)
+    req = Request(rid=7, prompt=np.array([1, 2], np.int32), max_new=8)
+    b.submit(req)
+    with pytest.raises(ValueError, match="already pending"):
+        b.submit(req)  # still queued
+    # strand it mid-generation in a slot, then try again
+    with pytest.raises(SchedulerExhausted):
+        b.run_until_done(max_steps=2)
+    assert any(r is req for r in b.slots)
+    with pytest.raises(ValueError, match="already pending"):
+        b.submit(Request(rid=7, prompt=np.array([9], np.int32)))
+    # completed rids may be reused (the request is out of the machine)
+    done = b.run_until_done()
+    assert 7 in done
+    b.submit(Request(rid=7, prompt=np.array([4], np.int32), max_new=1))
+    assert sorted(b.run_until_done()) == [7]
+
+
+def test_admission_order_is_arrival_then_rid():
+    """Bursty open-loop submits arrive out of order and with ties: the
+    admission queue must order by (arrival, rid) — earlier arrivals
+    first, stable FIFO by rid within one arrival instant — so a replay
+    of the same trace admits identically regardless of submit order."""
+    b = _echo_batcher(max_batch=2)
+    # submit order is scrambled on purpose
+    b.submit(Request(rid=3, prompt=np.array([1], np.int32),
+                     max_new=1, arrival=2.0))
+    b.submit(Request(rid=2, prompt=np.array([1], np.int32),
+                     max_new=1, arrival=1.0))
+    b.submit(Request(rid=5, prompt=np.array([1], np.int32),
+                     max_new=1, arrival=1.0))
+    b.submit(Request(rid=1, prompt=np.array([1], np.int32),
+                     max_new=1, arrival=1.0))
+    b._admit()
+    # equal arrival 1.0 → rid order wins; arrival 2.0 waits
+    assert [r.rid for r in b.slots] == [1, 2]
+    assert [r.rid for r in b.pending] == [5, 3]
+
+
+def test_plain_single_arg_retriever_still_works():
+    """A pre-multi-tenant retrieve_fn (Q-only) keeps working: the
+    batcher inspects the signature and only passes tenants to
+    two-argument retrievers."""
+    seen = {}
+
+    def retrieve(Q):
+        seen["shape"] = Q.shape
+        k = 2
+        return (np.zeros((len(Q), k), np.int64),
+                np.zeros((len(Q), k), np.float32))
+
+    b = _echo_batcher(max_batch=2, retrieve_fn=retrieve)
+    b.submit(Request(rid=0, prompt=np.array([1], np.int32), max_new=1,
+                     query_vec=np.ones(8, np.float32), tenant="a"))
+    done = b.run_until_done()
+    assert seen["shape"] == (1, 8)
+    assert done[0].retrieved_ids.shape == (2,)
