@@ -199,7 +199,7 @@ def bench_batch(
 
 def bench_precision(
     datasets: Sequence[str] = ("arxiv-1k",),
-    precisions: Sequence[str] = ("float32", "float16", "int8"),
+    precisions: Sequence[str] = ("float32", "float16", "int8", "pq"),
     n_queries: int = 32,
     batch_size: int = 8,
     cache_ratio: float = 0.25,
@@ -207,16 +207,20 @@ def bench_precision(
     json_path: Optional[str] = None,
     assert_parity: bool = False,
 ) -> List[str]:
-    """Precision sweep at a FIXED tier-2 byte budget (DESIGN.md §7).
+    """Precision sweep at a FIXED tier-2 byte budget (DESIGN.md §7, §12).
 
     The budget is what a float32 cache of ``cache_ratio·N`` items costs;
     each precision re-spends it via ``quant.capacity_for_budget`` (int8
-    holds ~4× the float32 items). Reported per precision: effective
-    capacity (and its ratio over float32), recall@10 against the
-    brute-force baseline, p50/p99 per batched call, and tier-3 accesses
-    per query. ``assert_parity`` turns the headline acceptance claims
-    into hard failures (CI smoke): int8 capacity ≥ 2× float32 AND int8
-    recall@10 ≥ 0.95× float32 recall@10.
+    holds ~4× the float32 items; pq with M=dim/8 subspaces ~32×).
+    Reported per precision: effective capacity (and its ratio over
+    float32), recall@10 against the brute-force baseline, p50/p99 per
+    batched call, and tier-3 accesses per query. ``assert_parity`` turns
+    the headline acceptance claims into hard failures (CI smoke): int8
+    capacity ≥ 2× float32 AND int8 recall@10 ≥ 0.95× float32 recall@10;
+    when 'pq' is in the sweep, additionally pq capacity ≥ 2× int8 AND
+    post-rerank pq recall@10 ≥ 0.95× float32 recall@10 (the exact
+    rerank is what restores recall over the coarse ADC distances —
+    DESIGN.md §12).
     """
     rows: List[str] = []
     entries: List[dict] = []
@@ -237,9 +241,16 @@ def bench_precision(
         passes = max(1, -(-8 // max(1, len(starts))))
         for prec in precisions:
             prec = quant.canonical_precision(prec)
-            cap = quant.capacity_for_budget(budget, dim, prec)
+            # pq lane: M=16 codes + a 4x rerank pool — the measured knee
+            # where post-rerank recall reaches the scalar precisions on
+            # these corpora (bench_pq.py sweeps the knee itself)
+            pq_kw = (dict(pq_subspaces=16, rerank_alpha=4.0)
+                     if prec == "pq" else {})
+            cap = quant.capacity_for_budget(
+                budget, dim, prec,
+                n_subspaces=pq_kw.get("pq_subspaces"))
             eng = WebANNSEngine(X, g, EngineConfig(
-                cache_capacity=cap, precision=prec,
+                cache_capacity=cap, precision=prec, **pq_kw,
                 t_setup=IDB_T_SETUP, t_per_item=IDB_T_PER_ITEM))
             preds = np.zeros((len(starts) * batch_size, 10), np.int64)
             for w, lo in enumerate(starts):  # warm-up pass owns compiles
@@ -293,6 +304,19 @@ def bench_precision(
                 f"{ds}: int8 recall {r8:.3f} < 0.95 x float32 {r32:.3f}"
             rows.append(f"# parity OK ({ds}): int8 {cap_x:.2f}x capacity, "
                         f"recall {r8:.3f} vs f32 {r32:.3f}")
+            if (ds, "pq") in recalls:
+                rpq = recalls[(ds, "pq")]
+                cap_x_pq = [e for e in entries
+                            if e["dataset"] == ds and e["precision"] == "pq"
+                            ][0]["capacity_x_float32"]
+                assert cap_x_pq >= 2.0 * cap_x, (
+                    f"{ds}: pq capacity {cap_x_pq:.2f}x float32 "
+                    f"< 2x int8's {cap_x:.2f}x")
+                assert rpq >= 0.95 * r32, \
+                    f"{ds}: pq recall {rpq:.3f} < 0.95 x float32 {r32:.3f}"
+                rows.append(
+                    f"# parity OK ({ds}): pq {cap_x_pq:.2f}x capacity, "
+                    f"post-rerank recall {rpq:.3f} vs f32 {r32:.3f}")
     if json_path:
         _merge_json(json_path, "precision_entries", entries)
         rows.append(f"# wrote {json_path} ({len(entries)} precision entries)")
@@ -305,11 +329,14 @@ if __name__ == "__main__":
                     help="batch-throughput mode (fetch amortization sweep)")
     ap.add_argument("--precision", action="store_true",
                     help="precision sweep at a fixed tier-2 byte budget "
-                         "(float32 / float16 / int8 — DESIGN.md §7)")
+                         "(float32 / float16 / int8 / pq — DESIGN.md "
+                         "§7, §12)")
     ap.add_argument("--assert-parity", action="store_true",
                     help="with --precision: fail unless int8 reaches >=2x "
-                         "float32 capacity AND >=0.95x its recall@10 "
-                         "(the CI smoke contract)")
+                         "float32 capacity AND >=0.95x its recall@10, and "
+                         "pq reaches >=2x int8 capacity AND >=0.95x the "
+                         "float32 recall@10 post-rerank (the CI smoke "
+                         "contract)")
     ap.add_argument("--datasets", nargs="*", default=None)
     ap.add_argument("--batch-sizes", type=int, nargs="*",
                     default=(1, 2, 4, 8, 16, 32))

@@ -133,6 +133,7 @@ def optimize_memory_bytes(
     p: float = 0.8,
     t_theta: float = 0.1,
     max_iters: int = 32,
+    n_subspaces: Optional[int] = None,
 ) -> CacheOptResult:
     """Byte-budgeted Algorithm 2: precision is part of the cost model.
 
@@ -140,15 +141,19 @@ def optimize_memory_bytes(
     ceiling depends on bytes-per-vector, so quantization directly
     multiplies the search space the optimizer can exploit: ``C0 =
     budget_bytes / bytes_per_vector(dim, precision)`` (~4× more int8
-    candidates than float32 under the same budget). ``query_test``
-    still takes an item count — the returned result carries
-    ``bytes_per_item`` so ladders from different precisions compare in
-    bytes (``c_best_bytes``).
+    candidates than float32 under the same budget, dim/M × more for
+    precision='pq' with M-byte codes). ``query_test`` still takes an
+    item count — the returned result carries ``bytes_per_item`` so
+    ladders from different precisions compare in bytes
+    (``c_best_bytes``). ``n_subspaces`` only matters for
+    precision='pq' (bytes/item = M).
     """
     from repro.core import quant
 
-    bpi = quant.bytes_per_vector(dim, precision)
-    c0 = quant.capacity_for_budget(budget_bytes, dim, precision)
+    bpi = quant.bytes_per_vector(dim, precision, n_subspaces=n_subspaces)
+    c0 = quant.capacity_for_budget(
+        budget_bytes, dim, precision, n_subspaces=n_subspaces
+    )
     res = optimize_memory_size(
         query_test, c0, p=p, t_theta=t_theta, max_iters=max_iters
     )
@@ -184,6 +189,9 @@ class TenantDemand:
     precision: str = "float32"
     traffic: float = 1.0
     min_items: int = 1  # allocation floor (items)
+    # PQ subspace count M (bytes/item = M when precision='pq'); ignored
+    # for other precisions. None → quant.DEFAULT_PQ_SUBSPACES.
+    n_subspaces: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -248,8 +256,12 @@ def _water_fill(
     tenant. Returns item allocations."""
     from repro.core import quant
 
-    bpi = {d.tenant: quant.bytes_per_vector(d.dim, d.precision)
-           for d in demands}
+    bpi = {
+        d.tenant: quant.bytes_per_vector(
+            d.dim, d.precision, n_subspaces=d.n_subspaces
+        )
+        for d in demands
+    }
     floor_b = {
         d.tenant: _round_to(d.min_items, grain) * bpi[d.tenant]
         for d in demands
@@ -279,8 +291,14 @@ def _water_fill(
     out: Dict[str, int] = {}
     for d in demands:
         b = min(max(lam * w[d.tenant], floor_b[d.tenant]), opt_b[d.tenant])
-        c = max(d.min_items, int(b // bpi[d.tenant]))
-        out[d.tenant] = min(_round_to(c, grain), d.n_items)
+        # snap DOWN to the grain (floors already rounded up): rounding
+        # up here could overshoot the budget by up to grain·bpi per
+        # tenant whenever the water level lands mid-grain
+        floor_c = _round_to(d.min_items, grain)
+        c = int(b // bpi[d.tenant])
+        if grain > 1:
+            c = (c // grain) * grain
+        out[d.tenant] = min(max(floor_c, c), d.n_items)
     return out
 
 
@@ -331,20 +349,33 @@ def allocate_memory_bytes(
     for d in demands:
         c0 = min(
             d.n_items,
-            max(1, quant.capacity_for_budget(usable, d.dim, d.precision)),
+            max(
+                1,
+                quant.capacity_for_budget(
+                    usable, d.dim, d.precision, n_subspaces=d.n_subspaces
+                ),
+            ),
         )
         probe[d.tenant] = optimize_memory_bytes(
             d.query_test,
-            c0 * quant.bytes_per_vector(d.dim, d.precision),
+            c0
+            * quant.bytes_per_vector(
+                d.dim, d.precision, n_subspaces=d.n_subspaces
+            ),
             d.dim,
             precision=d.precision,
             p=p,
             t_theta=t_theta,
             max_iters=max_iters,
+            n_subspaces=d.n_subspaces,
         )
     opt_items = {t: r.c_best for t, r in probe.items()}
-    bpi = {d.tenant: quant.bytes_per_vector(d.dim, d.precision)
-           for d in demands}
+    bpi = {
+        d.tenant: quant.bytes_per_vector(
+            d.dim, d.precision, n_subspaces=d.n_subspaces
+        )
+        for d in demands
+    }
     sum_opt = sum(
         _round_to(opt_items[d.tenant], shape_grain) * bpi[d.tenant]
         for d in demands

@@ -64,7 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quant
+from repro.core import pq, quant
 from repro.core import search as S
 from repro.core.graph import PAD, HNSWGraph, random_levels
 from repro.core.hnsw import build_hnsw, insert_hnsw
@@ -162,14 +162,20 @@ class EngineConfig:
     # the tier-3 payload device-resident — the TPU-native endpoint;
     # False = host-driven phase loop (the paper's Wasm/JS split).
     fused: bool = False
-    # tier-2 slab precision (DESIGN.md §7): 'float32' | 'float16' |
-    # 'int8'. Quantized modes hold 2–4x more vectors per byte; search
-    # runs on dequantized values, then an exact-rerank pass re-scores
-    # the top k·α candidates against full-precision tier-3 vectors
-    # (ONE extra access) so recall@k is preserved. rerank_alpha <= 0
-    # disables the rerank (quantized distances returned as-is).
+    # tier-2 slab precision (DESIGN.md §7, §12): 'float32' | 'float16' |
+    # 'int8' | 'pq'. Quantized modes hold 2–4x ('pq': 10–30x) more
+    # vectors per byte; search runs on dequantized/decoded values, then
+    # an exact-rerank pass re-scores the top k·α candidates against
+    # full-precision tier-3 vectors (ONE extra access) so recall@k is
+    # preserved. rerank_alpha <= 0 disables the rerank (quantized
+    # distances returned as-is).
     precision: str = "float32"
     rerank_alpha: float = 2.0
+    # PQ geometry (precision='pq' only): number of subspaces M — each
+    # cached row is M uint8 codes, so bytes/row = M (DESIGN.md §12).
+    # Must divide the vector dimension. The codebook is trained once at
+    # session construction (or adopted from a pq artifact) and FROZEN.
+    pq_subspaces: int = 8
     # selectivity-adaptive ef boost for filtered search (DESIGN.md §9):
     # with a filter of live selectivity s the layer-0 beam widens to
     # ef_eff = ef * min(filter_ef_cap, sqrt(1/s)) so enough ALLOWED
@@ -197,6 +203,17 @@ class EngineConfig:
         self.precision = quant.canonical_precision(self.precision)
         if self.n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.precision == "pq":
+            if self.pq_subspaces < 1:
+                raise ValueError(
+                    f"pq_subspaces must be >= 1, got {self.pq_subspaces}"
+                )
+            if self.n_shards > 1:
+                raise ValueError(
+                    "precision='pq' is served by the loop/batched/fused "
+                    "drivers; the mesh-sharded driver (n_shards > 1) "
+                    "does not carry PQ code slabs yet"
+                )
 
 
 # ----------------------------------------------------- typed session API
@@ -358,6 +375,7 @@ class WebANNSEngine:
         insert_params = None
         self._uuid: Optional[str] = None
         self._last_save_path: Optional[str] = None
+        codebook = None
         if isinstance(source, Index):
             if graph is not None:
                 raise ValueError(
@@ -367,6 +385,7 @@ class WebANNSEngine:
             tombstones = source.tombstones
             level_state = source.level_state
             insert_params = source.insert_params
+            codebook = source.codebook
             if metadata is None:
                 metadata = source.metadata
             self._uuid = source.uuid
@@ -386,9 +405,32 @@ class WebANNSEngine:
             simulate_latency=self.config.simulate_latency,
         )
         self.n, self.dim = self.external.n_items, self.external.dim
+        # PQ codebook lifecycle (DESIGN.md §12): adopt the artifact's
+        # frozen codebook when reopening, else train once here; frozen
+        # thereafter — mutations re-encode through it so codes written
+        # at different times stay mutually comparable.
+        if codebook is None:
+            codebook = getattr(self.external.base_backend, "codebook", None)
+        self.pq_codebook: Optional[pq.PQCodebook] = None
+        if self.config.precision == "pq":
+            if codebook is None:
+                codebook = pq.train_pq(
+                    self.external.vectors,
+                    n_subspaces=self.config.pq_subspaces,
+                    seed=0,
+                )
+            self.pq_codebook = codebook
+            # an adopted artifact codebook is authoritative over the
+            # configured M — keep the budget math consistent with it
+            if self.pq_codebook.n_subspaces != self.config.pq_subspaces:
+                self.config = dataclasses.replace(
+                    self.config,
+                    pq_subspaces=self.pq_codebook.n_subspaces,
+                )
         cap = self.config.cache_capacity or self.n
         self.store = TieredStore(self.external, cap, self.config.eviction,
-                                 precision=self.config.precision)
+                                 precision=self.config.precision,
+                                 codebook=self.pq_codebook)
         self.neighbors = jnp.asarray(graph.neighbors)
         # Text-embedding separation (paper §4.1): texts live in a separate
         # id-indexed store, never loaded during queries.
@@ -544,6 +586,7 @@ class WebANNSEngine:
                 self.insert_ef_construction, self.insert_heuristic
             ),
             metadata=self.metadata,
+            codebook=self.pq_codebook,
         )
 
     # --------------------------------------------------- mutation lifecycle
@@ -577,7 +620,7 @@ class WebANNSEngine:
         # adjacency, so any mutation invalidates it (DESIGN.md §10)
         self._shard_rt = None
         if table:
-            for attr in ("_table_dev", "_tscales_dev"):
+            for attr in ("_table_dev", "_tscales_dev", "_tcodebook_dev"):
                 if hasattr(self, attr):
                     delattr(self, attr)
 
@@ -817,7 +860,9 @@ class WebANNSEngine:
         at the session's precision (DESIGN.md §7/§11). Returns the item
         capacity actually applied."""
         cap = max(1, quant.capacity_for_budget(
-            int(budget_bytes), self.dim, self.config.precision
+            int(budget_bytes), self.dim, self.config.precision,
+            n_subspaces=(self.pq_codebook.n_subspaces
+                         if self.pq_codebook is not None else None),
         ))
         cap = min(cap, self.n)
         self.resize_cache(cap, warm=warm)
@@ -1056,7 +1101,19 @@ class WebANNSEngine:
             # quantized modes keep the device-resident tier-3 payload
             # QUANTIZED (~4x less device memory); the fused program
             # dequantizes inside the bulk-load gather (DESIGN.md §7)
-            if cfg.precision != "float32":
+            if cfg.precision == "pq":
+                # DRAM-free mode (§12): the device table is (N, M) uint8
+                # codes + the shared codebook — NO f32/int8 vector slab
+                # exists on device; the fused program decodes inside the
+                # bulk-load gather (ADC by the subspace decomposition)
+                self._table_dev = jnp.asarray(pq.encode_np(
+                    self.external.vectors, self.pq_codebook.centroids
+                ))
+                self._tscales_dev = None
+                self._tcodebook_dev = jnp.asarray(
+                    self.pq_codebook.centroids, jnp.float32
+                )
+            elif cfg.precision != "float32":
                 payload, scales = quant.quantize_np(
                     self.external.vectors, cfg.precision
                 )
@@ -1079,6 +1136,7 @@ class WebANNSEngine:
             self.store.cache, k=k_run, ef=ef, metric=cfg.metric,
             eviction=self.store.eviction, table_scales=self._tscales_dev,
             tombstones=self._tombs_device(), banned=banned,
+            table_codebook=getattr(self, "_tcodebook_dev", None),
         )
         ids.block_until_ready()
         stats.t_in_mem = time.perf_counter() - t0

@@ -92,6 +92,10 @@ class Index:
     # per-id metadata columns behind filtered search (DESIGN.md §9);
     # None = the index carries no metadata
     metadata: Optional[object] = None  # MetadataStore
+    # frozen PQ codebook (DESIGN.md §12): required to save at
+    # precision="pq"; adopted from the artifact on load so a reopening
+    # engine never retrains
+    codebook: Optional[object] = None  # PQCodebook
 
     @property
     def n_items(self) -> int:
@@ -215,7 +219,8 @@ class Index:
         os.makedirs(path, exist_ok=True)
         self.graph.save(path, shard_bytes=shard_bytes)
         save_vector_shards(path, self.backend.vectors,
-                           shard_bytes=shard_bytes, precision=precision)
+                           shard_bytes=shard_bytes, precision=precision,
+                           codebook=self.codebook)
         save_tombstones(
             path,
             self.tombstones if self.tombstones is not None
@@ -306,6 +311,7 @@ class Index:
             level_state=level_state,
             insert_params=insert_params,
             metadata=load_metadata(path, manifest, backend.n_items),
+            codebook=backend.codebook,  # None unless a pq artifact
         )
 
 
@@ -315,6 +321,8 @@ def _artifact_bytes(path: str, manifest: dict) -> int:
     files = {"manifest.json", "levels.npy"}
     if manifest.get("tombstones_file"):
         files.add(manifest["tombstones_file"])
+    if manifest.get("codebook_file"):
+        files.add(manifest["codebook_file"])
     for col in manifest.get("metadata_columns", []):
         files.add(col["file"])
     for layer_shards in manifest.get("shards", []):

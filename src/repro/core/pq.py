@@ -1,0 +1,349 @@
+"""Product-quantization codec + ADC lookup tables (DESIGN.md §12).
+
+The int8 codec (§7) buys ~4× tier-2 capacity; PQ buys 10–30×: a vector
+is split into M contiguous subspaces of ``dsub = dim / M`` dims, each
+quantized to one of 256 per-subspace centroids, so a row is M uint8
+codes (M bytes) plus an amortized shared codebook. This is the codec
+behind ``EngineConfig(precision="pq")`` — the DRAM-free "all-in-storage"
+mode (AiSAQ, PAPERS.md) where tier 2 holds ONLY codes and the exact
+rerank pass restores recall from full-precision tier 3.
+
+Distance semantics (the load-bearing identity). For a decoded vector
+``x̂ = concat_m centroids[m, code_m]``:
+
+- ``l2(q, x̂)² = Σ_m ‖q_m − c_m‖²``
+- ``q · x̂     = Σ_m  q_m · c_m``
+- ``‖x̂‖²      = Σ_m ‖c_m‖²``
+
+i.e. the distance TO THE DECODED VECTOR decomposes exactly over
+subspaces — the classic asymmetric-distance computation (ADC): build a
+per-query lookup table ``lut[m, k]`` of subspace terms once, then each
+candidate's distance is an M-entry LUT accumulation. Decoding codes in
+``cache_lookup`` therefore computes mathematically the same distance as
+the ADC kernels (``kernels/adc_gather_distance.py``), which are the
+TPU-native fused form — bit-matched to :func:`adc_distance_np` here.
+
+Surface mirrors ``core/quant.py``: jnp (jittable — the cache insert
+path) and numpy (host-side — the shard codec) twins for encode/decode,
+plus per-vector residual-energy error bounds and ``PQCodebook``
+save/load. The codebook is FROZEN after training: mutations re-encode
+through it (re-encoding a decoded vector is stable — the nearest
+centroid of a centroid is itself), so codes written at different times
+stay mutually comparable and persisted artifacts never need a
+corpus-wide re-encode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_CENTROIDS = 256  # one uint8 code per subspace, by construction
+
+
+@dataclasses.dataclass(frozen=True)
+class PQCodebook:
+    """Trained product-quantization codebook (frozen across mutations).
+
+    ``centroids`` is ``(M, 256, dsub)`` float32 — M per-subspace
+    codebooks of 256 centroids each, covering vectors of dimension
+    ``M * dsub``.
+    """
+
+    centroids: np.ndarray  # (M, K, dsub) float32
+
+    @property
+    def n_subspaces(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def n_centroids(self) -> int:
+        return int(self.centroids.shape[1])
+
+    @property
+    def dsub(self) -> int:
+        return int(self.centroids.shape[2])
+
+    @property
+    def dim(self) -> int:
+        return self.n_subspaces * self.dsub
+
+    def nbytes(self) -> int:
+        """Resident bytes of the shared codebook (amortized, not
+        charged per cached row — see ``quant.bytes_per_vector``)."""
+        return int(np.asarray(self.centroids).nbytes)
+
+    def save(self, path: str) -> None:
+        """Serialize to one ``.npz`` (the ``codebook.npz`` artifact)."""
+        np.savez(path, centroids=np.asarray(self.centroids, np.float32))
+
+    @classmethod
+    def load(cls, path: str) -> "PQCodebook":
+        with np.load(path) as z:
+            cent = np.asarray(z["centroids"], np.float32)
+        if cent.ndim != 3:
+            raise ValueError(
+                f"codebook centroids must be (M, K, dsub), got {cent.shape}"
+            )
+        return cls(centroids=cent)
+
+
+def _split(vecs: jnp.ndarray, M: int) -> jnp.ndarray:
+    """(..., d) → (..., M, dsub) contiguous subspace view."""
+    d = vecs.shape[-1]
+    if d % M:
+        raise ValueError(
+            f"dim {d} is not divisible by n_subspaces {M} — pick M "
+            f"dividing the vector dimension"
+        )
+    return vecs.reshape(*vecs.shape[:-1], M, d // M)
+
+
+# ---------------------------------------------------------------- training
+
+
+def _lloyd_step(Xs: jnp.ndarray, cent: jnp.ndarray) -> jnp.ndarray:
+    """One Lloyd iteration for all M subspaces at once (vmapped).
+
+    Empty clusters keep their previous centroid (the standard guard; a
+    duplicate centroid only ever loses argmin ties to its first copy,
+    so encode stays deterministic).
+    """
+
+    def one(x, c):  # x (N, dsub), c (K, dsub)
+        x2 = jnp.sum(x * x, axis=-1)
+        c2 = jnp.sum(c * c, axis=-1)
+        d2 = x2[:, None] - 2.0 * (x @ c.T) + c2[None, :]
+        assign = jnp.argmin(d2, axis=1)  # (N,)
+        oh = jax.nn.one_hot(assign, c.shape[0], dtype=jnp.float32)
+        counts = jnp.sum(oh, axis=0)  # (K,)
+        sums = oh.T @ x  # (K, dsub)
+        return jnp.where(
+            counts[:, None] > 0,
+            sums / jnp.maximum(counts, 1.0)[:, None],
+            c,
+        )
+
+    return jax.vmap(one)(Xs, cent)
+
+
+def train_pq(
+    vectors: np.ndarray,
+    n_subspaces: int = 8,
+    n_iters: int = 15,
+    seed: int = 0,
+) -> PQCodebook:
+    """Train an (M × 256)-centroid codebook by per-subspace k-means.
+
+    Pure JAX and seeded: initialization samples rows with a
+    ``jax.random`` key and ``n_iters`` Lloyd steps run as one jitted
+    program per iteration, so the same (corpus, M, seed) always yields
+    the same codebook on a given backend.
+    """
+    X = np.atleast_2d(np.asarray(vectors, np.float32))
+    N, d = X.shape
+    M = int(n_subspaces)
+    K = N_CENTROIDS
+    Xs = jnp.asarray(
+        np.ascontiguousarray(_split(X, M).transpose(1, 0, 2))
+    )  # (M, N, dsub)
+    key = jax.random.PRNGKey(seed)
+    # init: sample rows per subspace (with replacement when N < 256 —
+    # the duplicates resolve into distinct clusters or stay frozen)
+    idx = jax.random.randint(key, (M, K), 0, N)
+    cent = Xs[jnp.arange(M)[:, None], idx]  # (M, K, dsub)
+    step = jax.jit(_lloyd_step)
+    for _ in range(int(n_iters)):
+        cent = step(Xs, cent)
+    return PQCodebook(centroids=np.asarray(cent, np.float32))
+
+
+# ------------------------------------------------------------- jnp codec
+
+
+def encode_jnp(vecs: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Encode ``(..., d)`` float rows → ``(..., M)`` uint8 codes.
+
+    Jittable (the cache-insert path). Nearest centroid per subspace via
+    the expanded quadratic form — (…, M, K) scratch, never (…, M, K,
+    dsub). Ties break to the LOWEST centroid index (argmin), which is
+    what makes re-encoding a decoded vector stable even when k-means
+    leaves duplicate centroids.
+    """
+    cent = jnp.asarray(centroids, jnp.float32)
+    M = cent.shape[0]
+    xs = _split(vecs.astype(jnp.float32), M)  # (..., M, dsub)
+    x2 = jnp.sum(xs * xs, axis=-1)  # (..., M)
+    c2 = jnp.sum(cent * cent, axis=-1)  # (M, K)
+    xc = jnp.einsum("...md,mkd->...mk", xs, cent)
+    d2 = x2[..., None] - 2.0 * xc + c2
+    return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
+
+
+def decode_jnp(codes: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`encode_jnp` → ``(..., d)`` float32. Jittable.
+    An exact gather (no arithmetic), so np/jnp decodes are bit-identical.
+    """
+    cent = jnp.asarray(centroids, jnp.float32)
+    M = cent.shape[0]
+    parts = cent[jnp.arange(M), codes.astype(jnp.int32)]  # (..., M, dsub)
+    return parts.reshape(*codes.shape[:-1], M * cent.shape[2])
+
+
+# ----------------------------------------------------------- numpy codec
+
+
+def encode_np(vecs: np.ndarray, centroids: np.ndarray) -> np.ndarray:
+    """Host-side encoder (shard codec), chunked so the (n, M, K)
+    distance scratch stays small for corpus-sized inputs."""
+    cent = np.asarray(centroids, np.float32)
+    M = cent.shape[0]
+    vecs = np.asarray(vecs, np.float32)
+    lead = vecs.shape[:-1]
+    flat = vecs.reshape(-1, vecs.shape[-1])
+    c2 = np.sum(cent * cent, axis=-1)  # (M, K)
+    out = np.empty((flat.shape[0], M), np.uint8)
+    chunk = 4096
+    for lo in range(0, flat.shape[0], chunk):
+        xs = np.asarray(_split(flat[lo: lo + chunk], M))  # (n, M, dsub)
+        x2 = np.sum(xs * xs, axis=-1)  # (n, M)
+        xc = np.einsum("nmd,mkd->nmk", xs, cent)
+        d2 = x2[..., None] - 2.0 * xc + c2[None]
+        out[lo: lo + chunk] = np.argmin(d2, axis=-1).astype(np.uint8)
+    return out.reshape(*lead, M)
+
+
+def decode_np(codes: np.ndarray, centroids: np.ndarray) -> np.ndarray:
+    cent = np.asarray(centroids, np.float32)
+    M = cent.shape[0]
+    codes = np.asarray(codes)
+    parts = cent[np.arange(M), codes.astype(np.int64)]  # (..., M, dsub)
+    return parts.reshape(*codes.shape[:-1], M * cent.shape[2])
+
+
+# ---------------------------------------------------------- error bounds
+
+
+def residual_energy(
+    vecs: np.ndarray, codebook: PQCodebook
+) -> np.ndarray:
+    """Per-vector squared reconstruction error ``‖x − x̂‖²``.
+
+    This is THE error bound of the codec: for l2, the triangle
+    inequality gives ``|l2(q, x) − l2(q, x̂)| ≤ ‖x − x̂‖`` for every
+    query q, so the ADC distance of a row is within
+    ``sqrt(residual_energy)`` of its true distance — the quantity the
+    exact-rerank pool size trades against (asserted in tests).
+    """
+    vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+    dec = decode_np(encode_np(vecs, codebook.centroids), codebook.centroids)
+    diff = vecs - dec
+    return np.sum(diff * diff, axis=-1)
+
+
+# ----------------------------------------------------- ADC lookup tables
+
+
+def _lut_shapes(metric: str) -> int:
+    """Number of stacked tables per query: cos needs a second
+    squared-norm table; l2/ip accumulate a single one."""
+    return 2 if metric == "cos" else 1
+
+
+def build_lut_np(
+    q: np.ndarray, centroids: np.ndarray, metric: str = "l2"
+) -> np.ndarray:
+    """Per-query ADC table ``(L, M, K)`` float32 (q vs ALL centroids).
+
+    - l2:  ``lut[0, m, k] = ‖q_m − c_mk‖²``; distance = Σ_m entries.
+    - ip:  ``lut[0, m, k] = −(q_m · c_mk)``; distance = Σ_m entries.
+    - cos: q is normalized here; ``lut[0] = q_m · c_mk`` and
+      ``lut[1] = ‖c_mk‖²`` accumulate to (s1, s2) with the final
+      distance ``−s1 / (√s2 + 1e-30)`` applied by the consumer.
+    """
+    cent = np.asarray(centroids, np.float32)
+    M = cent.shape[0]
+    q = np.asarray(q, np.float32)
+    if metric == "cos":
+        q = q / (np.linalg.norm(q) + np.float32(1e-30))
+    qs = np.asarray(_split(q, M))  # (M, dsub)
+    if metric == "l2":
+        diff = qs[:, None, :] - cent
+        return np.sum(diff * diff, axis=-1)[None].astype(np.float32)
+    s1 = np.einsum("md,mkd->mk", qs, cent).astype(np.float32)
+    if metric == "ip":
+        return -s1[None]
+    if metric == "cos":
+        s2 = np.sum(cent * cent, axis=-1).astype(np.float32)
+        return np.stack([s1, s2])
+    raise ValueError(metric)
+
+
+def build_lut_jnp(
+    q: jnp.ndarray, centroids: jnp.ndarray, metric: str = "l2"
+) -> jnp.ndarray:
+    """Jittable twin of :func:`build_lut_np` (same (L, M, K) layout)."""
+    cent = jnp.asarray(centroids, jnp.float32)
+    M = cent.shape[0]
+    q = jnp.asarray(q, jnp.float32)
+    if metric == "cos":
+        q = q / (jnp.linalg.norm(q) + 1e-30)
+    qs = _split(q, M)  # (M, dsub)
+    if metric == "l2":
+        diff = qs[:, None, :] - cent
+        return jnp.sum(diff * diff, axis=-1)[None]
+    s1 = jnp.einsum("md,mkd->mk", qs, cent)
+    if metric == "ip":
+        return -s1[None]
+    if metric == "cos":
+        s2 = jnp.sum(cent * cent, axis=-1)
+        return jnp.stack([s1, s2])
+    raise ValueError(metric)
+
+
+def adc_distance_np(
+    codes: np.ndarray,  # (N, M) uint8
+    lut: np.ndarray,  # (L, M, K) float32 — build_lut_np output
+    ids: np.ndarray,  # (B,) int32, -1 padded
+    metric: str = "l2",
+) -> np.ndarray:
+    """THE numpy oracle the Pallas ADC kernels bit-match.
+
+    Gathers each candidate's code row, selects its M LUT entries
+    (an exact gather), and accumulates over subspaces SEQUENTIALLY in
+    float32 — the same left-to-right order the kernel's ``fori_loop``
+    and the jnp ref use, so all three produce bit-identical sums.
+    +inf for padded ids (the gather-kernel contract).
+    """
+    codes = np.asarray(codes)
+    lut = np.asarray(lut, np.float32)
+    ids = np.asarray(ids)
+    M = codes.shape[1]
+    safe = np.clip(ids, 0, codes.shape[0] - 1)
+    c = codes[safe].astype(np.int64)  # (B, M)
+    sel = lut[:, np.arange(M)[None, :], c]  # (L, B, M) exact gather
+    acc = np.zeros(sel.shape[:2], np.float32)  # (L, B)
+    for m in range(M):  # sequential f32 accumulation (bit-match contract)
+        acc += sel[:, :, m]
+    if metric == "cos":
+        d = -acc[0] / (np.sqrt(acc[1]) + np.float32(1e-30))
+    else:
+        d = acc[0]
+    return np.where(ids >= 0, d, np.float32(np.inf)).astype(np.float32)
+
+
+def adc_distance_batch_np(
+    codes: np.ndarray,  # (N, M)
+    luts: np.ndarray,  # (B, L, M, K) — one table per query
+    ids: np.ndarray,  # (B, K_ids) int32, -1 padded
+    metric: str = "l2",
+) -> np.ndarray:
+    """Batched numpy oracle: one LUT per id row → (B, K_ids) distances."""
+    return np.stack([
+        adc_distance_np(codes, luts[b], ids[b], metric)
+        for b in range(len(ids))
+    ])

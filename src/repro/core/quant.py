@@ -35,16 +35,21 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
-PRECISIONS = ("float32", "float16", "int8")
+PRECISIONS = ("float32", "float16", "int8", "pq")
 
 _ALIASES = {
     "float32": "float32", "fp32": "float32", "f32": "float32",
     "float16": "float16", "fp16": "float16", "f16": "float16",
     "int8": "int8", "i8": "int8",
+    "pq": "pq", "pq8": "pq", "product": "pq",
 }
 
 # one f32 scale per vector rides along with int8 payloads
 SCALE_BYTES = 4
+
+# default number of PQ subspaces when a caller asks for "pq" capacity
+# without saying how many — matches EngineConfig.pq_subspaces
+DEFAULT_PQ_SUBSPACES = 8
 
 
 def canonical_precision(precision: str) -> str:
@@ -63,26 +68,47 @@ def slab_dtype(precision: str):
         "float32": jnp.float32,
         "float16": jnp.float16,
         "int8": jnp.int8,
+        "pq": jnp.uint8,  # one code byte per subspace
     }[canonical_precision(precision)]
 
 
-def bytes_per_vector(dim: int, precision: str) -> int:
-    """Resident bytes of ONE cached/persisted vector (incl. its scale)."""
+def bytes_per_vector(
+    dim: int, precision: str, n_subspaces: int = None
+) -> int:
+    """Resident bytes of ONE cached/persisted vector (incl. its scale).
+
+    For ``"pq"`` a row is M uint8 codes (one per subspace), independent
+    of ``dim`` — pass ``n_subspaces`` (defaults to
+    :data:`DEFAULT_PQ_SUBSPACES`). The shared codebook is amortized
+    across the corpus and not charged per row.
+    """
     p = canonical_precision(precision)
     if p == "float32":
         return 4 * dim
     if p == "float16":
         return 2 * dim
+    if p == "pq":
+        m = DEFAULT_PQ_SUBSPACES if n_subspaces is None else int(n_subspaces)
+        if m <= 0:
+            raise ValueError(f"n_subspaces must be > 0, got {m}")
+        return m
     return dim + SCALE_BYTES  # int8 payload + f32 scale
 
 
-def capacity_for_budget(budget_bytes: int, dim: int, precision: str) -> int:
+def capacity_for_budget(
+    budget_bytes: int, dim: int, precision: str, n_subspaces: int = None
+) -> int:
     """How many vectors a byte budget holds at ``precision`` (≥ 1).
 
     This is the lever :func:`repro.core.cache_opt.optimize_memory_bytes`
-    exploits: at a fixed budget, int8 holds ~4× the float32 capacity.
+    exploits: at a fixed budget, int8 holds ~4× the float32 capacity and
+    PQ holds ``4·dim / M``× (10–30× at typical M).
     """
-    return max(1, int(budget_bytes) // bytes_per_vector(dim, precision))
+    return max(
+        1,
+        int(budget_bytes)
+        // bytes_per_vector(dim, precision, n_subspaces=n_subspaces),
+    )
 
 
 # ------------------------------------------------------------- jnp codec
@@ -97,6 +123,11 @@ def quantize_jnp(
     returned pair always has the same pytree structure.
     """
     p = canonical_precision(precision)
+    if p == "pq":
+        raise ValueError(
+            "pq rows are encoded through a trained codebook — use "
+            "repro.core.pq.encode_np/encode_jnp, not quantize_*"
+        )
     vecs = vecs.astype(jnp.float32)
     ones = jnp.ones(vecs.shape[:-1], jnp.float32)
     if p == "float32":
@@ -128,6 +159,11 @@ def quantize_np(
     """Host-side codec (shard persistence); bit-identical to the jnp one
     (both round half-to-even via ``round``)."""
     p = canonical_precision(precision)
+    if p == "pq":
+        raise ValueError(
+            "pq rows are encoded through a trained codebook — use "
+            "repro.core.pq.encode_np/encode_jnp, not quantize_*"
+        )
     vecs = np.asarray(vecs, np.float32)
     ones = np.ones(vecs.shape[:-1], np.float32)
     if p == "float32":

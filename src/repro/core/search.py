@@ -421,6 +421,7 @@ def search_layer_lazy_fused(
     table_scales: Optional[jnp.ndarray] = None,  # (N,) — int8 payload
     tombstones: Optional[jnp.ndarray] = None,  # (N,) bool — deleted ids
     banned: Optional[jnp.ndarray] = None,  # (N,) bool — filter deny mask
+    table_codebook: Optional[jnp.ndarray] = None,  # (M,256,dsub) — pq
 ):
     """One layer of Algorithm 1 with the WHOLE phase loop in-graph.
 
@@ -440,6 +441,14 @@ def search_layer_lazy_fused(
     ``ops.dequant_gather_distance``); here the jnp oracle form keeps
     the whole loop traceable off-TPU. Tier 3 then costs ~4× less
     device memory and the bulk load moves ~4× fewer bytes.
+
+    With ``table_codebook`` the payload is PRODUCT-QUANTIZED ((N, M)
+    uint8 codes — DESIGN.md §12, the DRAM-free mode): the bulk load
+    decodes codes through the frozen codebook, which by the subspace
+    decomposition computes exactly the ADC distances of the fused
+    code-gather kernel (``kernels/adc_gather_distance.py``, dispatched
+    via ``ops.adc_gather_distance``). No f32/int8 copy of the payload
+    exists anywhere on device — tier 3 costs M bytes/row.
 
     On real hardware ``table`` lives in host/remote memory
     (``memory_kind='pinned_host'`` or a remote shard — DESIGN.md §2);
@@ -473,9 +482,14 @@ def search_layer_lazy_fused(
         # ONE bulk access for the whole miss list (no-op when empty);
         # quantized payloads dequantize in-graph (the fused-kernel path)
         safe = jnp.clip(state.miss_ids, 0, n - 1)
-        rows = table[safe].astype(jnp.float32)
-        if table_scales is not None:
-            rows = rows * table_scales[safe][:, None]
+        if table_codebook is not None:  # pq codes: decode-on-gather (§12)
+            from repro.core.pq import decode_jnp
+
+            rows = decode_jnp(table[safe], table_codebook)
+        else:
+            rows = table[safe].astype(jnp.float32)
+            if table_scales is not None:
+                rows = rows * table_scales[safe][:, None]
         vecs = jnp.where((state.miss_ids >= 0)[:, None], rows, 0.0)
         cache = cache_insert(cache, state.miss_ids, vecs, policy=eviction)
         state = load_phase(q, state, state.miss_ids, vecs, metric)
@@ -511,6 +525,7 @@ def lazy_knn_search_fused(
     table_scales: Optional[jnp.ndarray] = None,
     tombstones: Optional[jnp.ndarray] = None,
     banned: Optional[jnp.ndarray] = None,
+    table_codebook: Optional[jnp.ndarray] = None,
 ):
     """Whole lazy KNN query (all layers) as ONE jitted program.
 
@@ -533,7 +548,7 @@ def lazy_knn_search_fused(
         st, cache, db, fc = search_layer_lazy_fused(
             q, neighbors[lc], table, cache, entry_ids, 1, metric,
             eviction=eviction, table_scales=table_scales,
-            tombstones=tombstones,
+            tombstones=tombstones, table_codebook=table_codebook,
         )
         n_db, n_fetch = n_db + db, n_fetch + fc
         entry_ids = st.beam.ids[:1]
@@ -541,6 +556,7 @@ def lazy_knn_search_fused(
         q, neighbors[0], table, cache, entry_ids, max(ef, k), metric,
         eviction=eviction, table_scales=table_scales,
         tombstones=tombstones, banned=banned,
+        table_codebook=table_codebook,
     )
     n_db, n_fetch = n_db + db, n_fetch + fc
     if banned is not None:

@@ -37,10 +37,12 @@ from typing import List, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.core import quant
+from repro.core import pq, quant
 
 VECTOR_SHARD_PREFIX = "vectors_s"
 VECTOR_SCALE_PREFIX = "vector_scales_s"
+VECTOR_CODES_PREFIX = "codes_s"  # PQ code shards (DESIGN.md §12)
+CODEBOOK_FILE = "codebook.npz"  # one frozen codebook per directory
 TOMBSTONE_FILE = "tombstones.npy"
 METADATA_PREFIX = "metadata_"
 
@@ -127,6 +129,14 @@ class ShardedFileBackend:
     fused path) is codec-oblivious. ``"float16"`` shards need no scales.
     The int8 codec is re-quantization stable (see ``core/quant.py``), so
     tier-2 re-quantizing these fetches on insert is lossless.
+
+    ``"pq"`` artifacts (DESIGN.md §12) hold ``codes_s{s}.npy`` uint8
+    code shards plus ONE ``codebook.npz`` named by the manifest's
+    ``codebook_file`` key; ``fetch`` decodes through it (protocol stays
+    float32), and the loaded :class:`~repro.core.pq.PQCodebook` is
+    exposed as ``.codebook`` so a reopening engine can adopt the frozen
+    codebook instead of retraining. Re-encoding a decoded row is stable,
+    so a pq tier-2 cache re-encoding these fetches never drifts.
     """
 
     def __init__(self, path: str, mmap: bool = True):
@@ -142,6 +152,12 @@ class ShardedFileBackend:
         self.precision = quant.canonical_precision(
             manifest.get("vector_dtype", "float32")
         )
+        self.codebook: Optional[pq.PQCodebook] = None
+        if self.precision == "pq":
+            self.codebook = pq.PQCodebook.load(
+                os.path.join(path, manifest.get("codebook_file",
+                                                CODEBOOK_FILE))
+            )
         self._meta = [
             (int(s["start"]), int(s["stop"]), s["file"])
             for s in manifest["vector_shards"]
@@ -173,6 +189,8 @@ class ShardedFileBackend:
     def _dequant(self, rows: np.ndarray, scales) -> np.ndarray:
         if self.precision == "int8":
             return rows.astype(np.float32) * np.asarray(scales)[:, None]
+        if self.precision == "pq":
+            return pq.decode_np(np.asarray(rows), self.codebook.centroids)
         return np.asarray(rows, np.float32)
 
     @property
@@ -375,6 +393,7 @@ def save_vector_shards(
     vectors: np.ndarray,
     shard_bytes: int = 64 * 1024 * 1024,
     precision: str = "float32",
+    codebook=None,
 ) -> List[dict]:
     """Write ``vectors`` as chunked ``.npy`` shards under ``path`` and
     merge a ``vector_shards`` section into ``path/manifest.json``
@@ -388,23 +407,57 @@ def save_vector_shards(
     can dequantize on fetch. Shard row counts are computed from the
     *encoded* bytes/row, so a fixed ``shard_bytes`` holds ~4× more
     int8 rows per shard.
+
+    ``"pq"`` (DESIGN.md §12) writes ``codes_s{s}.npy`` uint8 code
+    shards — M bytes/row, so 10–30× more rows per shard — plus ONE
+    ``codebook.npz`` referenced by the manifest's ``codebook_file``
+    key. The trained :class:`~repro.core.pq.PQCodebook` (or raw
+    centroids) is required: a directory holds exactly one frozen
+    codebook, and delta appends re-encode through it.
     """
     precision = quant.canonical_precision(precision)
     vectors = np.asarray(vectors, dtype=np.float32)
     os.makedirs(path, exist_ok=True)
-    row_bytes = quant.bytes_per_vector(int(vectors.shape[1]), precision)
+    cent = None
+    extra = {}
+    if precision == "pq":
+        if codebook is None:
+            raise ValueError(
+                "pq shards need the trained codebook — pass the "
+                "PQCodebook (see repro.core.pq.train_pq)"
+            )
+        cent = np.asarray(
+            getattr(codebook, "centroids", codebook), np.float32
+        )
+        pq.PQCodebook(centroids=cent).save(
+            os.path.join(path, CODEBOOK_FILE)
+        )
+        extra["codebook_file"] = CODEBOOK_FILE
+        row_bytes = quant.bytes_per_vector(
+            int(vectors.shape[1]), precision, n_subspaces=cent.shape[0]
+        )
+    else:
+        row_bytes = quant.bytes_per_vector(int(vectors.shape[1]), precision)
     rows_per_shard = max(1, shard_bytes // max(1, row_bytes))
     shards: List[dict] = []
     for s, start in enumerate(range(0, vectors.shape[0], rows_per_shard)):
         stop = min(vectors.shape[0], start + rows_per_shard)
-        fn = f"{VECTOR_SHARD_PREFIX}{s}.npy"
-        payload, scales = quant.quantize_np(vectors[start:stop], precision)
-        np.save(os.path.join(path, fn), payload)
-        entry = {"file": fn, "start": start, "stop": stop}
-        if precision == "int8":
-            sfn = f"{VECTOR_SCALE_PREFIX}{s}.npy"
-            np.save(os.path.join(path, sfn), scales)
-            entry["scales_file"] = sfn
+        entry = {"start": start, "stop": stop}
+        if precision == "pq":
+            fn = f"{VECTOR_CODES_PREFIX}{s}.npy"
+            np.save(os.path.join(path, fn),
+                    pq.encode_np(vectors[start:stop], cent))
+        else:
+            fn = f"{VECTOR_SHARD_PREFIX}{s}.npy"
+            payload, scales = quant.quantize_np(
+                vectors[start:stop], precision
+            )
+            np.save(os.path.join(path, fn), payload)
+            if precision == "int8":
+                sfn = f"{VECTOR_SCALE_PREFIX}{s}.npy"
+                np.save(os.path.join(path, sfn), scales)
+                entry["scales_file"] = sfn
+        entry["file"] = fn
         shards.append(entry)
     update_manifest(
         path,
@@ -412,6 +465,7 @@ def save_vector_shards(
             "dim": int(vectors.shape[1]),
             "vector_dtype": precision,
             "vector_shards": shards,
+            **extra,
         },
     )
     return shards
@@ -445,26 +499,42 @@ def append_vector_shards(
             f"{manifest['dim']}"
         )
     start0 = int(shards[-1]["stop"]) if shards else 0
-    row_bytes = quant.bytes_per_vector(new_vectors.shape[1], precision)
+    cent = None
+    if precision == "pq":
+        # delta rows re-encode through the directory's FROZEN codebook
+        # (§12) so base and delta codes stay mutually comparable
+        cent = pq.PQCodebook.load(
+            os.path.join(path, manifest.get("codebook_file",
+                                            CODEBOOK_FILE))
+        ).centroids
+        row_bytes = quant.bytes_per_vector(
+            new_vectors.shape[1], precision, n_subspaces=cent.shape[0]
+        )
+    else:
+        row_bytes = quant.bytes_per_vector(new_vectors.shape[1], precision)
     rows_per_shard = max(1, shard_bytes // max(1, row_bytes))
     written = 0
     s_idx = len(shards)
     for off in range(0, new_vectors.shape[0], rows_per_shard):
         chunk = new_vectors[off: off + rows_per_shard]
-        fn = f"{VECTOR_SHARD_PREFIX}{s_idx}.npy"
-        payload, scales = quant.quantize_np(chunk, precision)
-        np.save(os.path.join(path, fn), payload)
-        written += os.path.getsize(os.path.join(path, fn))
         entry = {
-            "file": fn,
             "start": start0 + off,
             "stop": start0 + off + chunk.shape[0],
         }
-        if precision == "int8":
-            sfn = f"{VECTOR_SCALE_PREFIX}{s_idx}.npy"
-            np.save(os.path.join(path, sfn), scales)
-            written += os.path.getsize(os.path.join(path, sfn))
-            entry["scales_file"] = sfn
+        if precision == "pq":
+            fn = f"{VECTOR_CODES_PREFIX}{s_idx}.npy"
+            np.save(os.path.join(path, fn), pq.encode_np(chunk, cent))
+        else:
+            fn = f"{VECTOR_SHARD_PREFIX}{s_idx}.npy"
+            payload, scales = quant.quantize_np(chunk, precision)
+            np.save(os.path.join(path, fn), payload)
+            if precision == "int8":
+                sfn = f"{VECTOR_SCALE_PREFIX}{s_idx}.npy"
+                np.save(os.path.join(path, sfn), scales)
+                written += os.path.getsize(os.path.join(path, sfn))
+                entry["scales_file"] = sfn
+        written += os.path.getsize(os.path.join(path, fn))
+        entry["file"] = fn
         shards.append(entry)
         s_idx += 1
     update_manifest(path, {"vector_shards": shards})

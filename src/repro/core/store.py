@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quant
+from repro.core import pq, quant
 from repro.core.storage import (  # noqa: F401  (re-exported, DESIGN.md §6)
     DeltaBackend,
     InMemoryBackend,
@@ -57,16 +57,22 @@ class CacheState:
     """Tier-2 cache: fixed-capacity slab + id→slot map (jittable pytree).
 
     ``slab`` holds vectors at the cache's precision (float32 / float16 /
-    int8); ``scales`` carries the per-row dequantization scale — only
-    int8 slabs need one, so the float precisions carry a (0,) leaf and
-    pay neither the 4 bytes/row nor the insert-time scatter. The slab
-    dtype is part of every jitted op's trace signature, so each
-    precision compiles its own (cheap) specialization and the float32
-    path is byte-identical to the pre-quantization cache.
+    int8 / pq); ``scales`` carries the per-row dequantization scale —
+    only int8 slabs need one, so the other precisions carry a (0,) leaf
+    and pay neither the 4 bytes/row nor the insert-time scatter. At
+    ``"pq"`` the slab is (capacity, M) uint8 PQ codes — M bytes per row,
+    the DRAM-free mode (DESIGN.md §12) — and ``codebook`` carries the
+    frozen (M, 256, dsub) centroids inserts encode through and lookups
+    decode through; the other precisions carry a (0, 0, 0) leaf so the
+    pytree structure is uniform. The slab dtype is part of every jitted
+    op's trace signature, so each precision compiles its own (cheap)
+    specialization and the float32 path is byte-identical to the
+    pre-quantization cache.
     """
 
-    slab: jnp.ndarray  # (capacity, d) f32/f16/int8 — cached vectors
-    scales: jnp.ndarray  # (capacity,) f32 dequant scales; (0,) if float
+    slab: jnp.ndarray  # (capacity, d) f32/f16/int8 — or (capacity, M) u8
+    scales: jnp.ndarray  # (capacity,) f32 dequant scales; (0,) if not int8
+    codebook: jnp.ndarray  # (M, 256, dsub) f32 PQ centroids; (0,0,0) else
     slot_of: jnp.ndarray  # (N,) int32 — slot of id, -1 if absent
     id_of: jnp.ndarray  # (capacity,) int32 — id in slot, -1 if empty
     clock: jnp.ndarray  # () int32 — insertion cursor (FIFO) / tick (LRU)
@@ -82,23 +88,52 @@ class CacheState:
             jnp.dtype(jnp.float32): "float32",
             jnp.dtype(jnp.float16): "float16",
             jnp.dtype(jnp.int8): "int8",
+            jnp.dtype(jnp.uint8): "pq",
         }[jnp.dtype(self.slab.dtype)]
 
     def nbytes(self) -> int:
-        """Resident tier-2 payload bytes (slab + scales when quantized)."""
+        """Resident tier-2 payload bytes (slab + scales when quantized).
+        For pq slabs the row width IS the subspace count, so the shared
+        codebook is not charged per row (it amortizes across the corpus
+        — same accounting as ``quant.bytes_per_vector``)."""
         cap, dim = self.slab.shape
+        if self.precision == "pq":
+            return cap * int(dim)  # dim == n_subspaces for a code slab
         return cap * quant.bytes_per_vector(int(dim), self.precision)
 
 
 def cache_init(
-    n_items: int, capacity: int, dim: int, precision: str = "float32"
+    n_items: int,
+    capacity: int,
+    dim: int,
+    precision: str = "float32",
+    codebook: Optional[np.ndarray] = None,
 ) -> CacheState:
     capacity = int(max(1, capacity))
     precision = quant.canonical_precision(precision)
     n_scales = capacity if precision == "int8" else 0
+    if precision == "pq":
+        if codebook is None:
+            raise ValueError(
+                "a pq cache needs its trained codebook — pass the "
+                "(M, 256, dsub) centroids (see repro.core.pq.train_pq)"
+            )
+        cent = jnp.asarray(
+            getattr(codebook, "centroids", codebook), jnp.float32
+        )
+        if cent.shape[0] * cent.shape[2] != int(dim):
+            raise ValueError(
+                f"codebook covers dim {cent.shape[0] * cent.shape[2]}, "
+                f"cache holds dim {dim}"
+            )
+        row_width = cent.shape[0]  # M code bytes per cached row
+    else:
+        cent = jnp.zeros((0, 0, 0), jnp.float32)
+        row_width = dim
     return CacheState(
-        slab=jnp.zeros((capacity, dim), quant.slab_dtype(precision)),
+        slab=jnp.zeros((capacity, row_width), quant.slab_dtype(precision)),
         scales=jnp.ones((n_scales,), jnp.float32),
+        codebook=cent,
         slot_of=jnp.full((n_items,), -1, jnp.int32),
         id_of=jnp.full((capacity,), -1, jnp.int32),
         clock=jnp.zeros((), jnp.int32),
@@ -125,6 +160,12 @@ def cache_lookup(
     vecs = cache.slab[safe_slots]
     if vecs.dtype == jnp.int8:
         vecs = vecs.astype(jnp.float32) * cache.scales[safe_slots][..., None]
+    elif vecs.dtype == jnp.uint8:
+        # pq slab: decode codes through the frozen codebook. By the
+        # subspace decomposition (DESIGN.md §12) the distances the
+        # drivers then compute on the decoded rows ARE the ADC distances
+        # — this is the jnp twin of kernels/adc_gather_distance.py.
+        vecs = pq.decode_jnp(vecs, cache.codebook)
     elif vecs.dtype != jnp.float32:
         vecs = vecs.astype(jnp.float32)
     return present, vecs
@@ -283,16 +324,22 @@ def cache_insert(
     # 2) write new vectors / maps (mode='drop' ignores out-of-range rows)
     i_idx = jnp.where(need, ids, n_items)
     slot_of = slot_of.at[i_idx].set(slots, mode="drop")
-    payload, row_scales = quant.quantize_jnp(vecs, cache.precision)
-    slab = cache.slab.at[slots, :].set(payload, mode="drop")
     scales = cache.scales  # float slabs: (0,) leaf, nothing to write
-    if cache.precision == "int8":
-        scales = scales.at[slots].set(row_scales, mode="drop")
+    if cache.precision == "pq":
+        # encode through the frozen codebook (re-encoding a decoded row
+        # is stable, so refetch-after-eviction never drifts — §12)
+        payload = pq.encode_jnp(vecs, cache.codebook)
+    else:
+        payload, row_scales = quant.quantize_jnp(vecs, cache.precision)
+        if cache.precision == "int8":
+            scales = scales.at[slots].set(row_scales, mode="drop")
+    slab = cache.slab.at[slots, :].set(payload, mode="drop")
     id_of = cache.id_of.at[slots].set(ids, mode="drop")
     last_used = cache.last_used.at[slots].set(new_clock, mode="drop")
     return CacheState(
         slab=slab,
         scales=scales,
+        codebook=cache.codebook,
         slot_of=slot_of,
         id_of=id_of,
         clock=new_clock,
@@ -471,12 +518,15 @@ class TieredStore:
         capacity: int,
         eviction: str = "fifo",
         precision: str = "float32",
+        codebook=None,  # PQCodebook / (M, 256, dsub) centroids; pq only
     ):
         self.external = external
         self.eviction = _EVICTION_NAMES[eviction]
         self.precision = quant.canonical_precision(precision)
+        self.codebook = codebook
         self.cache = cache_init(
-            external.n_items, capacity, external.dim, self.precision
+            external.n_items, capacity, external.dim, self.precision,
+            codebook=codebook,
         )
         self.hits = 0
         self.misses = 0
@@ -490,10 +540,12 @@ class TieredStore:
         return self.cache.nbytes()
 
     def resize(self, capacity: int) -> None:
-        """Re-initialize tier 2 with a new capacity (cache-size optimizer)."""
+        """Re-initialize tier 2 with a new capacity (cache-size optimizer).
+        The codebook survives the resize — it is frozen corpus state,
+        not cache contents."""
         self.cache = cache_init(
             self.external.n_items, capacity, self.external.dim,
-            self.precision,
+            self.precision, codebook=self.codebook,
         )
         self.hits = 0
         self.misses = 0

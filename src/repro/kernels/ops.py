@@ -20,6 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.adc_gather_distance import (
+    adc_gather_distance_batch_pallas,
+    adc_gather_distance_pallas,
+)
 from repro.kernels.dequant_gather_distance import (
     dequant_gather_distance_batch_pallas,
     dequant_gather_distance_pallas,
@@ -114,6 +118,27 @@ def dequant_gather_distance_batch(table, scales, ids, Q, metric: str = "l2"):
             table, scales, ids, Q, metric=metric, interpret=interp)
     return ref.dequant_gather_distance_batch_ref(table, scales, ids, Q,
                                                  metric)
+
+
+def adc_gather_distance(codes, lut, ids, metric: str = "l2"):
+    """PQ-coded fused code-gather + LUT-accumulate (ADC): (N, M) uint8
+    codes × an (L, M, 256) per-query table → (B,) f32 distances
+    (DESIGN.md §12). Build the table with ``repro.core.pq.build_lut_*``."""
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return adc_gather_distance_pallas(
+            codes, lut, ids, metric=metric, interpret=interp)
+    return ref.adc_gather_distance_ref(codes, lut, ids, metric)
+
+
+def adc_gather_distance_batch(codes, luts, ids, metric: str = "l2"):
+    """Batched ADC: (B, K) ids × (B, L, M, 256) per-query tables →
+    (B, K) f32 distances (batched lazy load, §12)."""
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return adc_gather_distance_batch_pallas(
+            codes, luts, ids, metric=metric, interpret=interp)
+    return ref.adc_gather_distance_batch_ref(codes, luts, ids, metric)
 
 
 def embedding_bag(table, idx, weights=None, combiner: str = "sum"):

@@ -124,6 +124,48 @@ def dequant_gather_distance_batch_ref(
     )(ids, Q)
 
 
+def adc_gather_distance_ref(
+    codes: jnp.ndarray,  # (N, M) uint8 PQ codes
+    lut: jnp.ndarray,  # (L, M, K) f32 per-query ADC table
+    ids: jnp.ndarray,  # (B,) int32, -1 padded
+    metric: str = "l2",
+) -> jnp.ndarray:
+    """Fused code-gather + LUT-accumulate oracle; +inf for padded ids.
+
+    Bit-match contract with ``adc_gather_distance_pallas`` AND the numpy
+    oracle ``repro.core.pq.adc_distance_np``: the LUT entry select is an
+    exact gather and the subspace accumulation is an unrolled
+    left-to-right float32 chain — the same addition sequence all three
+    implementations run.
+    """
+    M = codes.shape[1]
+    safe = jnp.clip(ids, 0, codes.shape[0] - 1)
+    c = codes[safe].astype(jnp.int32)  # (B, M)
+    sel = lut.astype(jnp.float32)[
+        :, jnp.arange(M)[None, :], c
+    ]  # (L, B, M) exact gather
+    acc = jnp.zeros(sel.shape[:2], jnp.float32)
+    for m in range(M):  # sequential f32 accumulation (bit-match order)
+        acc = acc + sel[:, :, m]
+    if metric == "cos":
+        d = -acc[0] / (jnp.sqrt(acc[1]) + 1e-30)
+    else:
+        d = acc[0]
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def adc_gather_distance_batch_ref(
+    codes: jnp.ndarray,  # (N, M) uint8 PQ codes
+    luts: jnp.ndarray,  # (B, L, M, K) — one table per query
+    ids: jnp.ndarray,  # (B, K_ids) int32, -1 padded
+    metric: str = "l2",
+) -> jnp.ndarray:
+    """Batched ADC oracle (one LUT per id row) → (B, K_ids) distances."""
+    return jax.vmap(
+        lambda l, i: adc_gather_distance_ref(codes, l, i, metric)
+    )(luts, ids)
+
+
 def merge_topk_ref(
     dists: jnp.ndarray,  # (..., M) f32 candidate distances
     ids: jnp.ndarray,  # (..., M) int32 global ids, -1 sentinel padded

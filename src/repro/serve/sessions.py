@@ -200,11 +200,25 @@ class SessionManager:
         eng = self.engine_for(tenant)
         return eng.config.precision, eng.dim
 
+    def _tenant_subspaces(self, tenant: str) -> Optional[int]:
+        """PQ subspace count M for a precision='pq' tenant (bytes/item
+        = M), None otherwise. The engine's trained/adopted codebook is
+        authoritative over the config value."""
+        eng = self.engine_for(tenant)
+        if eng.config.precision != "pq":
+            return None
+        cb = getattr(eng, "pq_codebook", None)
+        if cb is not None:
+            return cb.n_subspaces
+        return eng.config.pq_subspaces
+
     def _bpi(self, tenant: str) -> int:
         from repro.core import quant
 
         precision, dim = self._tenant_precision_dim(tenant)
-        return quant.bytes_per_vector(dim, precision)
+        return quant.bytes_per_vector(
+            dim, precision, n_subspaces=self._tenant_subspaces(tenant)
+        )
 
     # -------------------------------------------------- tenant creation
 
@@ -217,6 +231,7 @@ class SessionManager:
         M: int = 16,
         ef_construction: int = 200,
         seed: int = 0,
+        config: Optional[EngineConfig] = None,
     ) -> None:
         """Register a tenant and ingest its corpus.
 
@@ -224,14 +239,25 @@ class SessionManager:
         the rows to the shared engine (building it on first use) and
         stamps the reserved tenant column. For many tenants known up
         front, :meth:`build` amortizes the filter-mode graph build.
+
+        ``config`` overrides the manager-wide engine config for THIS
+        tenant (engine mode only — filter mode shares one engine, so a
+        per-tenant precision has nothing to attach to): it is how a
+        precision='pq' tenant and an int8 tenant coexist under one
+        budget, each charged its own bytes/item by the allocator.
         """
         if tenant in self._codes:
             raise ValueError(f"tenant {tenant!r} already exists")
+        if config is not None and self.isolation != "engine":
+            raise ValueError(
+                "per-tenant config requires isolation='engine': filter "
+                "mode shares one engine across tenants"
+            )
         _reject_reserved(metadata)
         vectors = np.atleast_2d(np.asarray(vectors, np.float32))
         code = len(self._codes) + 1  # 0 is the unowned fill value
         cfg = dataclasses.replace(
-            self.engine_config, cache_capacity=self.shape_grain
+            config or self.engine_config, cache_capacity=self.shape_grain
         )
         if self.isolation == "engine":
             eng = WebANNSEngine.build(
@@ -270,13 +296,27 @@ class SessionManager:
         M: int = 16,
         ef_construction: int = 200,
         seed: int = 0,
+        configs: Optional[Dict[str, EngineConfig]] = None,
         **kwargs,
     ) -> "SessionManager":
         """Bulk constructor: ``corpora`` maps tenant → vectors, or
         tenant → (vectors, texts, metadata). In filter mode this builds
         ONE offline HNSW over the concatenated corpus (fast path) rather
-        than inserting tenant after tenant incrementally."""
+        than inserting tenant after tenant incrementally. ``configs``
+        maps tenant → per-tenant :class:`EngineConfig` override (engine
+        mode only; see :meth:`create_tenant`)."""
         mgr = cls(budget_bytes, isolation=isolation, **kwargs)
+        if configs:
+            if isolation != "engine":
+                raise ValueError(
+                    "per-tenant configs require isolation='engine': "
+                    "filter mode shares one engine across tenants"
+                )
+            unknown = sorted(set(configs) - set(corpora))
+            if unknown:
+                raise ValueError(
+                    f"configs for unknown tenants: {unknown}"
+                )
         norm: Dict[str, Tuple] = {}
         for t, spec in corpora.items():
             if isinstance(spec, tuple):
@@ -291,6 +331,7 @@ class SessionManager:
                 mgr.create_tenant(
                     t, vecs, texts=texts, metadata=meta,
                     M=M, ef_construction=ef_construction, seed=seed,
+                    config=(configs or {}).get(t),
                 )
             return mgr
         # filter mode: one offline build over the concatenation
@@ -554,6 +595,7 @@ class SessionManager:
                 precision=precision,
                 traffic=w,
                 min_items=self.shape_grain,
+                n_subspaces=self._tenant_subspaces(t),
             ))
         return out
 

@@ -1,0 +1,532 @@
+"""Product-quantization subsystem (DESIGN.md §12).
+
+Covers the ISSUE-9 contract: the PQ codec (train/encode/decode,
+residual-energy error accounting, codebook persistence), the ADC
+gather+LUT-accumulate kernels bit-matched against their numpy oracle,
+uint8 code caches, the DRAM-free fused driver, pq-vs-int8 recall parity
+with exact rerank, the pq shard codec round-trip across all three
+drivers, delta appends / mutations through a frozen codebook, and the
+pq-aware byte allocator.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pq, quant
+from repro.core.cache_opt import QueryTestStats, optimize_memory_bytes
+from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
+from repro.core.storage import DeltaBackend, ShardedFileBackend, save_vector_shards
+from repro.core.store import (
+    EVICT_LRU,
+    ExternalStore,
+    TieredStore,
+    cache_init,
+    cache_insert,
+    cache_lookup,
+)
+from repro.data.synthetic import corpus_embeddings
+from repro.kernels import ops, ref
+from repro.kernels.adc_gather_distance import (
+    adc_gather_distance_batch_pallas,
+    adc_gather_distance_pallas,
+)
+
+RNG = np.random.default_rng(11)
+
+
+def _train(n=200, d=16, m=4, seed=0):
+    X = RNG.standard_normal((n, d)).astype(np.float32)
+    return X, pq.train_pq(X, n_subspaces=m, n_iters=8, seed=seed)
+
+
+# ------------------------------------------------------------- the codec
+
+
+def test_pq_round_trip_and_residual_energy():
+    """decode(encode(x)) reconstructs within the per-vector residual
+    energy the codec itself reports — the error bound IS the residual."""
+    X, cb = _train()
+    codes = pq.encode_np(X, cb.centroids)
+    assert codes.dtype == np.uint8 and codes.shape == (200, 4)
+    dec = pq.decode_np(codes, cb.centroids)
+    res = pq.residual_energy(X, cb)
+    np.testing.assert_allclose(
+        ((X - dec) ** 2).sum(-1), res, rtol=1e-4, atol=1e-5)
+    # training actually compressed: mean residual well under signal energy
+    assert res.mean() < (X ** 2).sum(-1).mean()
+
+
+def test_pq_more_subspaces_reconstruct_better():
+    X = RNG.standard_normal((300, 32)).astype(np.float32)
+    errs = []
+    for m in (2, 8):
+        cb = pq.train_pq(X, n_subspaces=m, n_iters=8, seed=0)
+        errs.append(pq.residual_energy(X, cb).mean())
+    assert errs[1] < errs[0]
+
+
+def test_pq_np_jnp_codecs_agree():
+    X, cb = _train()
+    cn = pq.encode_np(X, cb.centroids)
+    cj = np.asarray(pq.encode_jnp(jnp.asarray(X), jnp.asarray(cb.centroids)))
+    assert np.array_equal(cn, cj)
+    dn = pq.decode_np(cn, cb.centroids)
+    dj = np.asarray(pq.decode_jnp(jnp.asarray(cn), jnp.asarray(cb.centroids)))
+    assert np.array_equal(dn, dj)
+
+
+def test_pq_reencode_decoded_stable():
+    """Re-encoding a decoded vector is stable — the property that keeps
+    upsert-through-the-frozen-codebook idempotent (DESIGN.md §12)."""
+    X, cb = _train()
+    codes = pq.encode_np(X, cb.centroids)
+    dec = pq.decode_np(codes, cb.centroids)
+    codes2 = pq.encode_np(dec, cb.centroids)
+    # ties can flip the code, but never the reconstruction
+    assert np.array_equal(pq.decode_np(codes2, cb.centroids), dec)
+
+
+def test_pq_train_seeded_deterministic():
+    X = RNG.standard_normal((150, 8)).astype(np.float32)
+    a = pq.train_pq(X, n_subspaces=2, n_iters=5, seed=7)
+    b = pq.train_pq(X, n_subspaces=2, n_iters=5, seed=7)
+    assert np.array_equal(a.centroids, b.centroids)
+
+
+def test_pq_codebook_save_load_roundtrip(tmp_path):
+    _, cb = _train()
+    p = str(tmp_path / "cb.npz")
+    cb.save(p)
+    cb2 = pq.PQCodebook.load(p)
+    assert np.array_equal(cb.centroids, cb2.centroids)
+    assert cb2.n_subspaces == 4 and cb2.dim == 16
+
+
+def test_pq_dim_not_divisible_raises():
+    X = RNG.standard_normal((50, 10)).astype(np.float32)
+    with pytest.raises(ValueError):
+        pq.train_pq(X, n_subspaces=3)
+
+
+# ------------------------------------------------------------ budget math
+
+
+@pytest.mark.parametrize("m", [8, 16, 32])
+def test_pq_bytes_and_budget_accounting(m):
+    dim = 64
+    assert quant.bytes_per_vector(dim, "pq", n_subspaces=m) == m
+    budget = 256 * 1000  # 1000 float32 vectors' worth at d=64
+    cap = quant.capacity_for_budget(budget, dim, "pq", n_subspaces=m)
+    assert cap == budget // m
+    # the acceptance lever: pq stretches the budget (dim+4)/M times
+    # farther than int8
+    assert cap >= ((dim + 4) // m) * quant.capacity_for_budget(
+        budget, dim, "int8")
+
+
+def test_pq_default_subspaces_and_aliases():
+    assert quant.canonical_precision("PQ8") == "pq"
+    assert quant.canonical_precision("product") == "pq"
+    assert quant.bytes_per_vector(64, "pq") == quant.DEFAULT_PQ_SUBSPACES
+    assert quant.slab_dtype("pq") == jnp.uint8
+    with pytest.raises(ValueError):
+        quant.bytes_per_vector(64, "pq", n_subspaces=0)
+
+
+def test_pq_scalar_codec_entrypoints_refuse():
+    """quantize/dequantize are per-row scalar codecs; pq routes through
+    repro.core.pq (vector codec with a trained codebook)."""
+    X = RNG.standard_normal((4, 8)).astype(np.float32)
+    with pytest.raises(ValueError):
+        quant.quantize_np(X, "pq")
+    with pytest.raises(ValueError):
+        quant.quantize_jnp(jnp.asarray(X), "pq")
+
+
+# --------------------------------------------------- ADC kernels vs oracle
+
+
+def _adc_fixture(metric, m=4, n=60, d=16):
+    X, cb = _train(n=n, d=d, m=m)
+    codes = pq.encode_np(X, cb.centroids)
+    q = X[5]
+    lut = pq.build_lut_np(q, cb.centroids, metric)
+    ids = np.array([0, 17, -1, n - 1, 3], np.int32)
+    return X, cb, codes, q, lut, ids
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_adc_kernel_bitmatches_numpy_oracle(metric):
+    """The Pallas kernel (interpret mode), the jnp ref, and the numpy
+    oracle share one unrolled f32 accumulation order — outputs are
+    BIT-identical, not merely close."""
+    _, _, codes, _, lut, ids = _adc_fixture(metric)
+    want = pq.adc_distance_np(codes, lut, ids, metric)
+    got_ref = np.asarray(ref.adc_gather_distance_ref(
+        jnp.asarray(codes), jnp.asarray(lut), jnp.asarray(ids), metric))
+    got_ker = np.asarray(adc_gather_distance_pallas(
+        jnp.asarray(codes), jnp.asarray(lut), jnp.asarray(ids),
+        metric=metric, interpret=True))
+    assert np.array_equal(got_ref, want)
+    assert np.array_equal(got_ker, want)
+    assert np.isinf(want[2])  # -1 id → +inf
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_adc_batch_kernel_bitmatches_numpy_oracle(metric):
+    X, cb, codes, _, _, _ = _adc_fixture(metric)
+    Q = X[:3]
+    luts = np.stack([pq.build_lut_np(q, cb.centroids, metric) for q in Q])
+    ids = np.array([[0, 5, -1, 59], [1, 2, 3, -1], [-1, -1, -1, -1]],
+                   np.int32)
+    want = pq.adc_distance_batch_np(codes, luts, ids, metric)
+    got_ref = np.asarray(ref.adc_gather_distance_batch_ref(
+        jnp.asarray(codes), jnp.asarray(luts), jnp.asarray(ids), metric))
+    got_ker = np.asarray(adc_gather_distance_batch_pallas(
+        jnp.asarray(codes), jnp.asarray(luts), jnp.asarray(ids),
+        metric=metric, interpret=True))
+    assert np.array_equal(got_ref, want)
+    assert np.array_equal(got_ker, want)
+    assert np.isinf(want[2]).all()
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_adc_equals_distance_to_decoded(metric):
+    """Decode≡ADC: the LUT-accumulated distance IS the distance to the
+    decoded vector — the equivalence that lets the cache serve decoded
+    rows to the unchanged drivers (DESIGN.md §12)."""
+    X, cb, codes, q, lut, ids = _adc_fixture(metric)
+    adc = pq.adc_distance_np(codes, lut, ids, metric)
+    dec = pq.decode_np(codes, cb.centroids)
+    want = np.asarray(ref.gather_distance_ref(
+        jnp.asarray(dec), jnp.asarray(ids),
+        jnp.asarray(q / np.linalg.norm(q) if metric == "cos" else q),
+        metric))
+    np.testing.assert_allclose(adc[ids >= 0], want[ids >= 0],
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_lut_np_jnp_twins_agree():
+    X, cb = _train()
+    for metric in ("l2", "ip", "cos"):
+        ln = pq.build_lut_np(X[0], cb.centroids, metric)
+        lj = np.asarray(pq.build_lut_jnp(
+            jnp.asarray(X[0]), jnp.asarray(cb.centroids), metric))
+        np.testing.assert_allclose(ln, lj, rtol=1e-5, atol=1e-6)
+
+
+def test_adc_ops_dispatch():
+    """kernels.ops routes to ref off-TPU (or pallas-interpret under
+    REPRO_FORCE_PALLAS) — either way it must equal the oracle."""
+    _, _, codes, _, lut, ids = _adc_fixture("l2")
+    out = np.asarray(ops.adc_gather_distance(
+        jnp.asarray(codes), jnp.asarray(lut), jnp.asarray(ids)))
+    assert np.array_equal(out, pq.adc_distance_np(codes, lut, ids, "l2"))
+
+
+# ----------------------------------------------------- pq cache semantics
+
+
+def test_pq_cache_insert_lookup_decodes():
+    X, cb = _train(n=100, d=16, m=4)
+    c = cache_init(100, 50, 16, precision="pq", codebook=cb)
+    assert c.slab.dtype == jnp.uint8 and c.slab.shape == (50, 4)
+    assert c.nbytes() == 50 * 4  # M bytes per slot
+    ids = jnp.array([3, 7, 11], jnp.int32)
+    c = cache_insert(c, ids, jnp.asarray(X[:3]))
+    present, out = cache_lookup(c, jnp.array([3, 7, 11, 5], jnp.int32))
+    assert np.asarray(present).tolist() == [True, True, True, False]
+    assert out.dtype == jnp.float32  # lookups always serve f32
+    want = pq.decode_np(pq.encode_np(X[:3], cb.centroids), cb.centroids)
+    np.testing.assert_allclose(np.asarray(out[:3]), want, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_pq_cache_requires_codebook():
+    with pytest.raises(ValueError):
+        cache_init(50, 8, 16, precision="pq")
+
+
+def test_pq_cache_eviction_matches_float32():
+    """Eviction bookkeeping is precision-independent (same contract the
+    int8 slab holds)."""
+    _, cb = _train(n=50, d=16, m=4)
+    cpq = cache_init(50, 3, 16, precision="pq", codebook=cb)
+    c32 = cache_init(50, 3, 16)
+    for i in (1, 2, 3, 4, 9):
+        v = jnp.full((1, 16), float(i) + 0.25, jnp.float32)
+        cpq = cache_insert(cpq, jnp.array([i], jnp.int32), v,
+                           policy=EVICT_LRU)
+        c32 = cache_insert(c32, jnp.array([i], jnp.int32), v,
+                           policy=EVICT_LRU)
+    probe = jnp.arange(12, dtype=jnp.int32)
+    ppq, _ = cache_lookup(cpq, probe)
+    p32, _ = cache_lookup(c32, probe)
+    assert np.array_equal(np.asarray(ppq), np.asarray(p32))
+
+
+def test_tiered_store_pq_bytes_and_resize():
+    X, cb = _train(n=40, d=16, m=4)
+    ts = TieredStore(ExternalStore(X), capacity=8, precision="pq",
+                     codebook=cb)
+    ids = np.array([1, 3, 5], np.int32)
+    np.testing.assert_allclose(ts.gather(ids), X[ids], rtol=1e-6)
+    assert ts.external.stats.n_db == 1
+    out2 = ts.gather(ids)  # hits: decoded codes
+    assert ts.external.stats.n_db == 1
+    want = pq.decode_np(pq.encode_np(X[ids], cb.centroids), cb.centroids)
+    np.testing.assert_allclose(out2, want, rtol=1e-5, atol=1e-6)
+    assert ts.cache_bytes() == 8 * 4  # M bytes per slot, 16x under f32
+    ts.resize(4)
+    assert ts.cache.slab.dtype == jnp.uint8  # precision survives resize
+    assert np.array_equal(np.asarray(ts.cache.codebook),
+                          cb.centroids)  # so does the codebook
+
+
+# ------------------------------------------------- engine recall & parity
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    X = corpus_embeddings(500, 32, n_clusters=8, seed=3)
+    eng = WebANNSEngine.build(
+        X, M=10, ef_construction=60,
+        config=EngineConfig(cache_capacity=125))
+    rng = np.random.default_rng(5)
+    Q = X[rng.choice(500, 10)] + 0.1 * rng.standard_normal(
+        (10, 32)).astype(np.float32)
+    return X, eng.graph, Q
+
+
+def _pq_cfg(**kw):
+    kw.setdefault("cache_capacity", 125)
+    kw.setdefault("precision", "pq")
+    kw.setdefault("pq_subspaces", 8)
+    kw.setdefault("rerank_alpha", 4.0)
+    return EngineConfig(**kw)
+
+
+def _recall10(X, ids_batch, Q):
+    from repro.core.eval import brute_force_topk, recall_at_k
+
+    return recall_at_k(ids_batch, brute_force_topk(X, Q, 10))
+
+
+def test_pq_recall_parity_with_rerank(small_index):
+    """The acceptance headline: post-rerank pq recall@10 keeps pace with
+    float32 AND int8 under the same item count."""
+    X, g, Q = small_index
+    f32 = WebANNSEngine(X, g, EngineConfig(cache_capacity=125))
+    i8 = WebANNSEngine(X, g, EngineConfig(cache_capacity=125,
+                                          precision="int8"))
+    ppq = WebANNSEngine(X, g, _pq_cfg())
+    ids32 = np.stack([f32.search(SearchRequest(query=q, k=10, ef=64)).ids
+                      for q in Q])
+    ids8 = np.stack([i8.search(SearchRequest(query=q, k=10, ef=64)).ids
+                     for q in Q])
+    idspq = np.stack([ppq.search(SearchRequest(query=q, k=10, ef=64)).ids
+                      for q in Q])
+    r32 = _recall10(X, ids32, Q)
+    r8 = _recall10(X, ids8, Q)
+    rpq = _recall10(X, idspq, Q)
+    assert rpq >= 0.95 * r32, (rpq, r32)
+    assert rpq >= 0.95 * r8, (rpq, r8)
+
+
+def test_pq_rerank_distances_are_exact(small_index):
+    X, g, Q = small_index
+    eng = WebANNSEngine(X, g, _pq_cfg())
+    res = eng.search(SearchRequest(query=Q[0], k=5, ef=64))
+    diff = X[res.ids] - Q[0][None, :]
+    np.testing.assert_allclose(res.dists, (diff * diff).sum(-1), rtol=1e-5)
+
+
+def test_pq_batched_loop_parity(small_index):
+    X, g, Q = small_index
+    rb = WebANNSEngine(X, g, _pq_cfg()).search(
+        SearchRequest(query=Q, k=10, ef=64, batch_mode="batched"))
+    rl = WebANNSEngine(X, g, _pq_cfg()).search(
+        SearchRequest(query=Q, k=10, ef=64, batch_mode="loop"))
+    assert np.array_equal(rb.ids, rl.ids)
+    np.testing.assert_allclose(rb.dists, rl.dists, rtol=1e-6)
+
+
+def test_fused_pq_matches_host_driver(small_index):
+    X, g, Q = small_index
+    host = WebANNSEngine(X, g, _pq_cfg())
+    fused = WebANNSEngine(X, g, _pq_cfg(fused=True))
+    rh = host.search(SearchRequest(query=Q[0], k=10, ef=64))
+    rf = fused.search(SearchRequest(query=Q[0], k=10, ef=64))
+    assert np.array_equal(np.sort(rh.ids), np.sort(rf.ids))
+
+
+def test_fused_pq_device_table_is_codes(small_index):
+    """DRAM-free: the fused driver's device-resident payload is the
+    (N, M) uint8 code slab + one codebook — no float32/int8 vector
+    table on device (DESIGN.md §12)."""
+    X, g, Q = small_index
+    fused = WebANNSEngine(X, g, _pq_cfg(fused=True))
+    fused.search(SearchRequest(query=Q[0], k=5, ef=64))
+    assert fused._table_dev.dtype == jnp.uint8
+    assert fused._table_dev.shape == (500, 8)
+    assert fused._tscales_dev is None
+    assert fused._tcodebook_dev is not None
+    assert fused._table_dev.nbytes < X.nbytes / 8  # 32*4/8 = 16x here
+
+
+def test_pq_sharded_driver_rejected():
+    with pytest.raises(ValueError):
+        EngineConfig(precision="pq", n_shards=2)
+
+
+def test_pq_engine_adopts_artifact_subspace_count(small_index, tmp_path):
+    """A reopened pq artifact's codebook is authoritative: a config
+    asking for a different M is synced to the stored codebook rather
+    than silently re-encoding with the wrong geometry."""
+    X, g, Q = small_index
+    eng = WebANNSEngine(X, g, _pq_cfg(pq_subspaces=16))
+    path = str(tmp_path / "idx16")
+    eng.save(path)
+    reopened = WebANNSEngine.open(path, config=_pq_cfg(pq_subspaces=8))
+    assert reopened.pq_codebook.n_subspaces == 16
+    assert reopened.config.pq_subspaces == 16
+
+
+# ------------------------------------------------ persistence round-trip
+
+
+def test_pq_shards_save_load_query_all_drivers(tmp_path, small_index):
+    """build → save → reopen → parity across loop/batched/fused drivers
+    over the SAME artifact. (A pq artifact serves DECODED tier-3, so the
+    reference is the reopened session, not the pre-save one — the same
+    documented trade as int8 saves.)"""
+    X, g, Q = small_index
+    mem = WebANNSEngine(X, g, _pq_cfg())
+    path = str(tmp_path / "idx")
+    mem.save(path)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    assert man["vector_dtype"] == "pq"
+    assert man["codebook_file"] == "codebook.npz"
+    assert os.path.exists(os.path.join(path, "codebook.npz"))
+    assert any(f.startswith("codes_s") for f in os.listdir(path))
+
+    loop = WebANNSEngine.open(path, config=_pq_cfg())
+    batched = WebANNSEngine.open(path, config=_pq_cfg())
+    fused = WebANNSEngine.open(path, config=_pq_cfg(fused=True))
+    be = loop.external.base_backend
+    assert isinstance(be, ShardedFileBackend) and be.precision == "pq"
+    assert np.array_equal(be.codebook.centroids, mem.pq_codebook.centroids)
+
+    rl = loop.search(SearchRequest(query=Q, k=10, ef=64, batch_mode="loop"))
+    rb = batched.search(SearchRequest(query=Q, k=10, ef=64,
+                                      batch_mode="batched"))
+    assert np.array_equal(rl.ids, rb.ids)
+    for i, q in enumerate(Q):
+        rf = fused.search(SearchRequest(query=q, k=10, ef=64))
+        assert np.array_equal(np.sort(rl.ids[i]), np.sort(rf.ids))
+    # recall survives — measured against the DECODED corpus, which is
+    # what the artifact actually stores (tier-3 serves decoded rows, so
+    # the exact rerank is exact w.r.t. the decoded payload)
+    cent = mem.pq_codebook.centroids
+    dec = pq.decode_np(pq.encode_np(X, cent), cent)
+    assert _recall10(dec, np.asarray(rl.ids), Q) >= 0.9
+
+
+def test_pq_shards_are_much_smaller(tmp_path, small_index):
+    X, g, _ = small_index
+    _, cb = (X, pq.train_pq(X, n_subspaces=8, n_iters=8, seed=0))
+    save_vector_shards(str(tmp_path / "p"), X, precision="pq", codebook=cb)
+    save_vector_shards(str(tmp_path / "f"), X, precision="float32")
+    size = lambda p, pre: sum(
+        os.path.getsize(os.path.join(p, f)) for f in os.listdir(p)
+        if f.startswith(pre))
+    assert size(str(tmp_path / "p"), "codes_s") < \
+        size(str(tmp_path / "f"), "vectors_s") / 8
+
+
+def test_pq_save_requires_codebook(tmp_path):
+    X = RNG.standard_normal((20, 8)).astype(np.float32)
+    with pytest.raises(ValueError):
+        save_vector_shards(str(tmp_path), X, precision="pq")
+
+
+def test_pq_sharded_backend_fetch_decodes(tmp_path):
+    X = RNG.standard_normal((100, 16)).astype(np.float32)
+    cb = pq.train_pq(X, n_subspaces=4, n_iters=8, seed=0)
+    save_vector_shards(str(tmp_path), X, shard_bytes=4 * 30,
+                       precision="pq", codebook=cb)
+    be = ShardedFileBackend(str(tmp_path))
+    assert len(be._shards) > 1  # actually sharded
+    ids = np.array([0, 31, 64, 99])
+    want = pq.decode_np(pq.encode_np(X[ids], cb.centroids), cb.centroids)
+    np.testing.assert_allclose(be.fetch(ids), want, rtol=1e-5, atol=1e-6)
+
+
+def test_pq_delta_append_reencodes_through_frozen_codebook(
+        tmp_path, small_index):
+    """DeltaBackend appends under precision='pq' write uint8 codes
+    produced by the DIRECTORY's codebook — rows stay mutually comparable
+    with the base epoch (DESIGN.md §12)."""
+    X, g, Q = small_index
+    eng = WebANNSEngine(X, g, _pq_cfg())
+    path = str(tmp_path / "idx")
+    eng.save(path)
+    reopened = WebANNSEngine.open(path, config=_pq_cfg())
+    frozen = reopened.pq_codebook.centroids.copy()
+    new = RNG.standard_normal((10, 32)).astype(np.float32)
+    reopened.add(new)
+    reopened.save(path)  # delta epoch
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    assert man["vector_dtype"] == "pq"
+    again = WebANNSEngine.open(path, config=_pq_cfg())
+    assert isinstance(again.external.base_backend, DeltaBackend) or \
+        again.n == 510  # either representation, all rows present
+    # the appended rows fetch as decode(encode(new, frozen))
+    want = pq.decode_np(pq.encode_np(new, frozen), frozen)
+    got = again.external.base_backend.fetch(np.arange(500, 510))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # and the codebook did not drift
+    assert np.array_equal(again.pq_codebook.centroids, frozen)
+
+
+def test_pq_mutation_roundtrip_through_frozen_codebook(small_index):
+    """add/delete/upsert on a live pq engine re-encode through the
+    engine's frozen codebook; search keeps serving."""
+    X, g, Q = small_index
+    eng = WebANNSEngine(X, g, _pq_cfg())
+    frozen = eng.pq_codebook.centroids.copy()
+    new = RNG.standard_normal((5, 32)).astype(np.float32)
+    res = eng.add(new)
+    assert len(res.ids) == 5
+    eng.delete(res.ids[:2])
+    repl = RNG.standard_normal((2, 32)).astype(np.float32)
+    res2 = eng.upsert(res.ids[2:4], repl)
+    out = eng.search(SearchRequest(query=repl[0], k=5, ef=64))
+    assert np.asarray(res2.ids)[0] in np.asarray(out.ids)
+    deleted = set(np.asarray(res.ids)[:2].tolist())
+    assert not deleted & set(np.asarray(out.ids).tolist())
+    assert np.array_equal(eng.pq_codebook.centroids, frozen)
+
+
+# ----------------------------------------------- bytes-aware cache sizing
+
+
+def test_optimize_memory_bytes_pq_lever():
+    """At the same byte budget the pq optimizer starts from (dim+4)/M
+    times the int8 capacity."""
+    def query_test(c):
+        return QueryTestStats(n_db=max(1.0, 200.0 / max(c, 1)),
+                              n_q=200.0, t_query=0.01, t_db=1e-3)
+
+    budget = 64 * 4 * 256
+    r8 = optimize_memory_bytes(query_test, budget, dim=64,
+                               precision="int8")
+    rpq = optimize_memory_bytes(query_test, budget, dim=64,
+                                precision="pq", n_subspaces=8)
+    assert rpq.c0 >= 8 * r8.c0
+    assert rpq.bytes_per_item == 8
+    assert rpq.c_best_bytes is not None and rpq.c_best_bytes <= budget

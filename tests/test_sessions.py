@@ -452,3 +452,67 @@ def test_session_retriever_scopes_rag_requests():
                       max_new=1, query_vec=q[0]))
     with pytest.raises(ValueError, match="tenant"):
         b2.run_until_done()
+
+
+# --------------------------------------- mixed-precision budget (§12)
+
+
+def test_allocator_charges_pq_tenant_m_bytes_per_item():
+    """A precision='pq' tenant costs M bytes/item in the shared budget,
+    not dim+4 — the allocator must not over-charge it 8x."""
+    demands = [
+        dataclasses.replace(_fake_demand("pq_t", 512, 1.0),
+                            precision="pq", n_subspaces=8),
+        dataclasses.replace(_fake_demand("i8_t", 512, 1.0),
+                            precision="int8"),
+    ]
+    alloc = allocate_memory_bytes(
+        demands, budget_bytes=1 << 16, shape_grain=16)
+    assert alloc.allocations["pq_t"].bytes_per_item == 8
+    assert alloc.allocations["i8_t"].bytes_per_item == DIM + 4
+    assert alloc.total_alloc_bytes <= alloc.budget_bytes
+
+
+def test_session_manager_mixed_pq_int8_budget():
+    """One budget, a pq tenant and an int8 tenant (per-tenant configs):
+    the manager books each at its own bytes/item and both keep serving
+    with full isolation."""
+    mgr = SessionManager.build(
+        {"pq_t": _corpus(1), "i8_t": _corpus(2)},
+        budget_bytes=int(2 * N * bytes_per_vector(DIM, "float32")),
+        isolation="engine", M=8, ef_construction=40, shape_grain=16,
+        configs={
+            "pq_t": EngineConfig(precision="pq", pq_subspaces=8,
+                                 rerank_alpha=4.0),
+            "i8_t": EngineConfig(precision="int8"),
+        },
+    )
+    assert mgr._bpi("pq_t") == 8
+    assert mgr._bpi("i8_t") == DIM + 4
+    assert mgr.engine_for("pq_t").config.precision == "pq"
+    alloc = mgr.allocate()
+    assert alloc.allocations["pq_t"].bytes_per_item == 8
+    assert alloc.allocations["i8_t"].bytes_per_item == DIM + 4
+    assert alloc.total_alloc_bytes <= mgr.budget_bytes
+    # the pq tenant's byte bill reflects codes, not scalar rows
+    a = alloc.allocations["pq_t"]
+    assert a.alloc_bytes == a.c_items * 8
+    # both serve, ownership intact
+    for t, seed in (("pq_t", 1), ("i8_t", 2)):
+        res = mgr.search(t, SearchRequest(
+            query=_corpus(seed)[0], k=5, ef=32))
+        got = _flat_ids(res)
+        assert got.size and np.isin(got, mgr.ids_of(t)).all()
+
+
+def test_per_tenant_config_rejected_in_filter_mode():
+    mgr = SessionManager(budget_bytes=1 << 20, isolation="filter")
+    with pytest.raises(ValueError, match="isolation='engine'"):
+        mgr.create_tenant("a", _corpus(1),
+                          config=EngineConfig(precision="pq"))
+    with pytest.raises(ValueError, match="isolation='engine'"):
+        SessionManager.build(
+            {"a": _corpus(1), "b": _corpus(2)},
+            budget_bytes=1 << 20, isolation="filter",
+            configs={"a": EngineConfig(precision="pq")},
+        )
