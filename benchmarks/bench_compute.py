@@ -14,7 +14,7 @@ Fig. 1b: >40% distance, ~50% sort/management).
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import List
 
 import jax
 import jax.numpy as jnp

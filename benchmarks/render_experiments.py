@@ -8,9 +8,6 @@ and regenerates the tables between them.
 
 from __future__ import annotations
 
-import glob
-import json
-import os
 import re
 
 from benchmarks.roofline import load_cells, markdown_table, shortlist

@@ -1,16 +1,7 @@
 """BST: Behavior Sequence Transformer (Alibaba) [arXiv:1905.06874]."""
 
-from repro.configs.base import (
-    ANNS_SHAPES,
-    ArchSpec,
-    GNN_SHAPES,
-    LM_SHAPES,
-    RECSYS_SHAPES,
-    register,
-)
-from repro.models.gnn import GNNConfig
+from repro.configs.base import ArchSpec, RECSYS_SHAPES, register
 from repro.models.recsys import RecsysConfig
-from repro.models.transformer import LMConfig
 
 register(ArchSpec(
     arch_id="bst",

@@ -1,15 +1,6 @@
 """DeepSeekMoE-16B [arXiv:2401.06066]: 2 shared + 64 routed experts, top-6, fine-grained."""
 
-from repro.configs.base import (
-    ANNS_SHAPES,
-    ArchSpec,
-    GNN_SHAPES,
-    LM_SHAPES,
-    RECSYS_SHAPES,
-    register,
-)
-from repro.models.gnn import GNNConfig
-from repro.models.recsys import RecsysConfig
+from repro.configs.base import ArchSpec, LM_SHAPES, register
 from repro.models.transformer import LMConfig
 
 register(ArchSpec(

@@ -1,15 +1,6 @@
 """Mistral-Large 123B dense decoder (88L, d=12288)."""
 
-from repro.configs.base import (
-    ANNS_SHAPES,
-    ArchSpec,
-    GNN_SHAPES,
-    LM_SHAPES,
-    RECSYS_SHAPES,
-    register,
-)
-from repro.models.gnn import GNNConfig
-from repro.models.recsys import RecsysConfig
+from repro.configs.base import ArchSpec, LM_SHAPES, register
 from repro.models.transformer import LMConfig
 
 register(ArchSpec(

@@ -1,16 +1,7 @@
 """NequIP O(3)-equivariant interatomic potential [arXiv:2101.03164]."""
 
-from repro.configs.base import (
-    ANNS_SHAPES,
-    ArchSpec,
-    GNN_SHAPES,
-    LM_SHAPES,
-    RECSYS_SHAPES,
-    register,
-)
+from repro.configs.base import ArchSpec, GNN_SHAPES, register
 from repro.models.gnn import GNNConfig
-from repro.models.recsys import RecsysConfig
-from repro.models.transformer import LMConfig
 
 register(ArchSpec(
     arch_id="nequip",

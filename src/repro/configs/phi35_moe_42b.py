@@ -1,15 +1,6 @@
 """Phi-3.5-MoE 42B (6.6B active): 16 experts top-2, GQA kv=8."""
 
-from repro.configs.base import (
-    ANNS_SHAPES,
-    ArchSpec,
-    GNN_SHAPES,
-    LM_SHAPES,
-    RECSYS_SHAPES,
-    register,
-)
-from repro.models.gnn import GNNConfig
-from repro.models.recsys import RecsysConfig
+from repro.configs.base import ArchSpec, LM_SHAPES, register
 from repro.models.transformer import LMConfig
 
 register(ArchSpec(

@@ -1,15 +1,6 @@
 """Qwen2.5-14B dense decoder, GQA kv=8 with QKV bias."""
 
-from repro.configs.base import (
-    ANNS_SHAPES,
-    ArchSpec,
-    GNN_SHAPES,
-    LM_SHAPES,
-    RECSYS_SHAPES,
-    register,
-)
-from repro.models.gnn import GNNConfig
-from repro.models.recsys import RecsysConfig
+from repro.configs.base import ArchSpec, LM_SHAPES, register
 from repro.models.transformer import LMConfig
 
 register(ArchSpec(

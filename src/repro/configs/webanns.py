@@ -1,16 +1,6 @@
 """The paper's own config: WebANNS HNSW engine over a Wiki-480k-like payload."""
 
-from repro.configs.base import (
-    ANNS_SHAPES,
-    ArchSpec,
-    GNN_SHAPES,
-    LM_SHAPES,
-    RECSYS_SHAPES,
-    register,
-)
-from repro.models.gnn import GNNConfig
-from repro.models.recsys import RecsysConfig
-from repro.models.transformer import LMConfig
+from repro.configs.base import ANNS_SHAPES, ArchSpec, register
 
 register(ArchSpec(
     arch_id="webanns",

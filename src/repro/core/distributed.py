@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +51,6 @@ else:  # jax 0.4.x / 0.5.x
     _SHARD_MAP_KW = {"check_rep": False}
 
 from repro.core import search as S
-from repro.core.distances import distance_matrix
 from repro.core.graph import HNSWGraph
 from repro.core.hnsw import build_hnsw
 

@@ -66,7 +66,7 @@ import numpy as np
 
 from repro.core import pq, quant
 from repro.core import search as S
-from repro.core.graph import PAD, HNSWGraph, random_levels
+from repro.core.graph import HNSWGraph, random_levels
 from repro.core.hnsw import build_hnsw, insert_hnsw
 from repro.core.index import Index
 from repro.core.metadata import Filter, MetadataStore
@@ -77,6 +77,13 @@ from repro.core.store import (
     TieredStore,
     cache_lookup,
 )
+
+
+# Boosted-ef values are snapped UP to this grain: ef_eff is a static
+# argument of the phase jits, and the selectivity-driven boost would
+# otherwise compile one specialization per observed sel value
+# (DESIGN.md §9/§13).
+EF_SNAP_GRAIN = 8
 
 
 def _np_point_distance(
@@ -660,12 +667,20 @@ class WebANNSEngine:
     def _boost_ef(self, ef: int, sel: float) -> int:
         """Selectivity-adaptive beam widening: ef_eff = ef * min(cap,
         sqrt(1/sel)), so recall holds as filters tighten while the cap
-        bounds the latency cost (DESIGN.md §9)."""
+        bounds the latency cost (DESIGN.md §9).
+
+        The boosted ef is snapped UP to ``EF_SNAP_GRAIN`` — sel is a
+        continuous runtime quantity, and every distinct ef_eff value is
+        a distinct static argument of the phase jits, so an unsnapped
+        boost compiles one phase specialization per observed selectivity
+        (the R003 retrace-hazard class; see DESIGN.md §13)."""
         if sel >= 1.0:
             return ef
         boost = min(self.config.filter_ef_cap,
                     math.sqrt(1.0 / max(sel, 1e-9)))
-        return min(self.n, int(math.ceil(ef * max(1.0, boost))))
+        eff = int(math.ceil(ef * max(1.0, boost)))
+        eff += (-eff) % EF_SNAP_GRAIN  # snap UP: wider beam only helps
+        return min(self.n, eff)
 
     def add(
         self,
@@ -1372,7 +1387,7 @@ class WebANNSEngine:
             pool = min(int(bi.shape[1]),
                        quant.rerank_pool(k, cfg.rerank_alpha))
             if banned_mat is not None:
-                p_dists, p_ids = _finalize_cached(st, pool)
+                p_dists, p_ids = _finalize_cached(st, pool)  # lint: disable=R003 -- pool ≤ k·α with the beam width grain-snapped in _boost_ef; bounded trace set
             else:
                 p_ids = bi[:, :pool]
                 p_dists = bd[:, :pool]
@@ -1532,7 +1547,7 @@ class WebANNSEngine:
             if banned_mat is not None:
                 # per-query allowed-only pools: banned ids never reach
                 # the rerank fetch (route-but-don't-return, §9)
-                p_dists, p_ids = _finalize_cached(st, pool)
+                p_dists, p_ids = _finalize_cached(st, pool)  # lint: disable=R003 -- pool ≤ k·α with the beam width grain-snapped in _boost_ef; bounded trace set
             else:
                 p_ids = st.beam.ids[:, :pool]
                 p_dists = st.beam.dists[:, :pool]

@@ -20,7 +20,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Optional
 
 import numpy as np
 

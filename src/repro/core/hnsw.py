@@ -15,7 +15,7 @@ algorithmic fidelity.
 from __future__ import annotations
 
 import heapq
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -19,7 +19,6 @@ Reimplements the behaviors the paper measures (§2.1.2, §2.2):
 
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import time
 from collections import OrderedDict

@@ -36,7 +36,6 @@ corpus-wide re-encode.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ recsys / GNN generators feed training smoke tests and benchmarks.
 
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List
 
 import numpy as np
 

@@ -15,9 +15,8 @@ further — see ``zero_opt_specs``).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.transformer import LMConfig

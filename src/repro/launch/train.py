@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.data.synthetic import click_batches, molecular_graphs, token_batches

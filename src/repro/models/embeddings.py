@@ -9,13 +9,13 @@ to the Pallas ``embedding_bag`` kernel on TPU). Tables row-shard over the
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
-from repro.models.layers import Params, _init
+from repro.models.layers import _init
 
 
 def init_embedding_table(key, vocab: int, dim: int, scale: float = 0.01):

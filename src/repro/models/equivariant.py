@@ -28,7 +28,6 @@ from __future__ import annotations
 
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 
 Irreps = Dict[str, jnp.ndarray]  # {"0": (...,C0), "1": (...,C1,3), "2": (...,C2,3,3)}

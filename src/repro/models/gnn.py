@@ -21,7 +21,7 @@ small graphs (``molecule`` shape) use a ``graph_ids`` segment vector.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ flat in depth — required for the 88-layer mistral-large dry-run.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ parallelism). Load-balancing aux loss per Switch/GShard included.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ vs brute force; see examples/recsys_retrieval.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

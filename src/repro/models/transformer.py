@@ -11,7 +11,6 @@ memory-sane.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -21,7 +20,6 @@ from repro.models import attention as A
 from repro.models import moe as M
 from repro.models.layers import (
     Params,
-    cross_entropy_loss,
     embed,
     init_embedding,
     init_mlp,

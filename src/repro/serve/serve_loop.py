@@ -8,7 +8,7 @@ Prefill shapes lower the full-sequence forward that populates the cache.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

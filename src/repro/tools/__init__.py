@@ -1,0 +1,6 @@
+"""Developer tooling for the repro tree (static analysis, maintenance).
+
+Nothing under ``repro.tools`` is imported by the library, serving, or
+training paths — these are repo-maintenance entry points only
+(DESIGN.md §13).
+"""

@@ -1,0 +1,35 @@
+"""repro-lint — a JAX/Pallas-aware static-analysis suite (DESIGN.md §13).
+
+The rules encode invariants this repo enforces by construction on its
+hot paths and artifacts; each is grounded in a defect class a past PR
+actually hit:
+
+- **R001** kernel-triple contract: every Pallas kernel has a numpy/jnp
+  oracle in ``kernels/ref.py``, a dispatch entry in ``kernels/ops.py``,
+  and a test module exercising kernel-vs-oracle.
+- **R002** host-sync / tracer leak: no ``np.*`` / ``.item()`` /
+  ``float()``/``int()``/``bool()`` coercion of traced values inside
+  functions reachable from ``jax.jit`` / ``shard_map`` /
+  ``pl.pallas_call``.
+- **R003** retrace hazard: runtime-derived Python scalars must be
+  grain-snapped before flowing into a static argument of a jitted
+  function.
+- **R004** PRNG key reuse: the same key may not feed two samplers
+  without an intervening ``split``.
+- **R005** deprecation milestones: shims past their stamped removal
+  milestone must be deleted; shims without a stamp are findings.
+- **R006** DESIGN.md cross-reference integrity: every ``§N`` reference
+  resolves to an existing DESIGN.md section.
+
+Run ``python -m repro.tools.lint src tests benchmarks`` (or the
+``repro-lint`` console script). Suppress a finding with an end-of-line
+comment carrying a reason::
+
+    x = float(dist)  # lint: disable=R002 -- host metrics path, jit-exempt
+
+Suppressions without a reason are themselves findings under ``--strict``.
+"""
+
+from repro.tools.lint.registry import Finding, Rule, all_rules, register
+
+__all__ = ["Finding", "Rule", "all_rules", "register"]

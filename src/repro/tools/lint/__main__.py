@@ -1,0 +1,7 @@
+"""``python -m repro.tools.lint`` entry point."""
+
+import sys
+
+from repro.tools.lint.cli import main
+
+sys.exit(main())

@@ -1,0 +1,191 @@
+"""repro-lint driver: file collection, rule dispatch, output, exit codes.
+
+Usage::
+
+    python -m repro.tools.lint [--strict] [--json] [--select R001,R002]
+                               [--root DIR] [--list-rules] [paths…]
+
+Exit codes: 0 clean; 1 unsuppressed findings (plus, under ``--strict``,
+reasonless suppressions); 2 usage error.
+
+``--root`` anchors project-level rules (kernel-triple layout, DESIGN.md,
+pyproject version) — defaults to the git/pyproject root above the first
+path, falling back to the current directory. Findings are reported
+project-relative.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.tools.lint.context import (
+    FileInfo,
+    LintContext,
+    apply_suppressions,
+    collect_python_files,
+    load_file,
+)
+from repro.tools.lint.registry import Finding, all_rules
+
+JSON_SCHEMA_VERSION = 1
+
+
+def find_project_root(start: Path) -> Path:
+    p = start.resolve()
+    if p.is_file():
+        p = p.parent
+    for cand in [p] + list(p.parents):
+        if (cand / "pyproject.toml").is_file() or (cand / ".git").exists():
+            return cand
+    return p
+
+
+def run_lint(paths: Sequence[str], root: Optional[Path] = None,
+             select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Programmatic entry: lint ``paths``, return ALL findings
+    (suppressed ones included, marked)."""
+    path_objs = [Path(p) for p in paths]
+    for p in path_objs:
+        if not p.exists():
+            raise FileNotFoundError(f"no such path: {p}")
+    if root is None:
+        root = find_project_root(path_objs[0] if path_objs else Path("."))
+    files = [load_file(f, root) for f in collect_python_files(path_objs, root)]
+    ctx = LintContext(root, files)
+
+    rules = all_rules()
+    if select:
+        wanted = set(select)
+        rules = [r for r in rules if r.rule_id in wanted]
+
+    findings: List[Finding] = []
+    for f in files:
+        if f.parse_error is not None:
+            findings.append(Finding(
+                rule="R000", path=f.rel, line=0, col=0,
+                message=f"syntax error: {f.parse_error}"))
+    for rule in rules:
+        for f in files:
+            findings.extend(rule.check_file(f, ctx))
+        findings.extend(rule.check_project(ctx))
+
+    # Dedup by site (a rule may derive the same fact along two paths,
+    # e.g. R004's loop-body and straight-line analyses).
+    seen = set()
+    unique: List[Finding] = []
+    for f in findings:
+        key = (f.rule, f.path, f.line, f.col, f.message)
+        if key not in seen:
+            seen.add(key)
+            unique.append(f)
+
+    by_rel: Dict[str, FileInfo] = {f.rel: f for f in files}
+    unique = apply_suppressions(unique, by_rel)
+
+    # Reasonless suppressions are themselves findings (policy:
+    # suppressions require a reason string — DESIGN.md §13).
+    for fi in files:
+        for s in fi.suppressions:
+            if s.reason is None:
+                unique.append(Finding(
+                    rule="R000", path=fi.rel, line=s.line, col=0,
+                    message=("suppression of "
+                             f"{','.join(s.rules)} has no reason "
+                             "(write `# lint: disable=RXXX -- reason`)")))
+
+    unique.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return unique
+
+
+def _emit_human(findings: List[Finding], strict: bool,
+                out=None) -> None:
+    out = out if out is not None else sys.stdout
+    shown = 0
+    for f in findings:
+        if f.suppressed and not strict:
+            continue
+        print(f.format(), file=out)
+        shown += 1
+    active = [f for f in findings if not f.suppressed]
+    supp = [f for f in findings if f.suppressed]
+    print(f"repro-lint: {len(active)} finding(s), "
+          f"{len(supp)} suppressed", file=out)
+
+
+def _emit_json(findings: List[Finding], out=None) -> None:
+    out = out if out is not None else sys.stdout
+    active = [f for f in findings if not f.suppressed]
+    doc = {
+        "schema_version": JSON_SCHEMA_VERSION,
+        "findings": [f.to_json() for f in findings],
+        "summary": {
+            "total": len(findings),
+            "active": len(active),
+            "suppressed": len(findings) - len(active),
+            "by_rule": _counts(active),
+        },
+    }
+    json.dump(doc, out, indent=2)
+    out.write("\n")
+
+
+def _counts(findings: List[Finding]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return dict(sorted(out.items()))
+
+
+def exit_code(findings: List[Finding], strict: bool) -> int:
+    active = [f for f in findings if not f.suppressed]
+    if active:
+        return 1
+    return 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="JAX/Pallas-aware static analysis for the repro tree "
+                    "(DESIGN.md §13)")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories to lint")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="project root for project-level rules")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--strict", action="store_true",
+                    help="also show suppressed findings; reasonless "
+                         "suppressions fail the run")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.rule_id}  {rule.name}: {rule.summary}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (try: repro-lint src tests benchmarks)")
+
+    select = args.select.split(",") if args.select else None
+    try:
+        findings = run_lint(args.paths, root=args.root, select=select)
+    except FileNotFoundError as e:
+        print(f"repro-lint: {e}", file=sys.stderr)
+        return 2
+
+    if args.as_json:
+        _emit_json(findings)
+    else:
+        _emit_human(findings, strict=args.strict)
+    return exit_code(findings, strict=args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

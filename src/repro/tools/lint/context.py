@@ -1,0 +1,199 @@
+"""File collection, parsing, and suppression handling for repro-lint.
+
+Suppression grammar (DESIGN.md §13 — suppressions require a reason)::
+
+    <code>  # lint: disable=R002 -- why this is exempt
+    <code>  # lint: disable=R002,R004 -- shared reason
+
+applies to findings on that physical line. A file-scoped form::
+
+    # lint: file-disable=R006 -- why the whole file is exempt
+
+may appear on any line and suppresses the rule for the entire file.
+A suppression with no ``-- reason`` text still suppresses, but the
+driver reports it as an ``R000`` finding (and ``--strict`` fails on it).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*(?P<scope>file-)?disable="
+    r"(?P<rules>R[0-9]{3}(?:\s*,\s*R[0-9]{3})*)"
+    r"(?:\s+--\s*(?P<reason>\S.*?))?\s*$"
+)
+
+# Directory names never collected, even when inside a requested path.
+# ``lint_fixtures`` holds intentionally-broken rule fixtures.
+EXCLUDED_DIRS = {"lint_fixtures", "__pycache__", ".git", ".venv", "build",
+                 "dist", ".eggs"}
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int                  # 1-based line the comment sits on
+    rules: Tuple[str, ...]
+    reason: Optional[str]
+    file_scope: bool = False
+    used: bool = False
+
+
+@dataclasses.dataclass
+class FileInfo:
+    path: Path                 # absolute
+    rel: str                   # project-relative posix path
+    source: str
+    tree: Optional[ast.AST]
+    parse_error: Optional[str]
+    suppressions: List[Suppression]
+
+    @property
+    def lines(self) -> List[str]:
+        return self.source.splitlines()
+
+
+def parse_suppressions(source: str) -> List[Suppression]:
+    out: List[Suppression] = []
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        m = SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(","))
+        out.append(Suppression(
+            line=lineno,
+            rules=rules,
+            reason=m.group("reason"),
+            file_scope=bool(m.group("scope")),
+        ))
+    return out
+
+
+def load_file(path: Path, root: Path) -> FileInfo:
+    source = path.read_text(encoding="utf-8")
+    tree: Optional[ast.AST] = None
+    err: Optional[str] = None
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:  # surfaced as a driver finding
+        err = f"{e.msg} (line {e.lineno})"
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    return FileInfo(path=path, rel=rel, source=source, tree=tree,
+                    parse_error=err, suppressions=parse_suppressions(source))
+
+
+def collect_python_files(paths: List[Path], root: Path) -> List[Path]:
+    """Expand CLI path args into a sorted, de-duplicated .py file list."""
+    seen: Set[Path] = set()
+    out: List[Path] = []
+
+    def add(p: Path) -> None:
+        rp = p.resolve()
+        if rp not in seen:
+            seen.add(rp)
+            out.append(p)
+
+    for p in paths:
+        if p.is_file():
+            if p.suffix == ".py":
+                add(p)
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if any(part in EXCLUDED_DIRS or part.startswith(".")
+                       for part in f.relative_to(p).parts[:-1]):
+                    continue
+                add(f)
+    return out
+
+
+class LintContext:
+    """Shared state for one lint run: parsed files plus lazily-computed
+    project facts (DESIGN.md sections, project version) that project
+    rules consult via ``root`` regardless of the CLI path args."""
+
+    def __init__(self, root: Path, files: List[FileInfo]):
+        self.root = root
+        self.files = files
+        self._design_sections: Optional[Set[int]] = None
+        self._version: Optional[Tuple[int, ...]] = None
+
+    # -------------------------------------------------- project facts
+
+    @property
+    def design_path(self) -> Path:
+        return self.root / "DESIGN.md"
+
+    def design_sections(self) -> Set[int]:
+        """Section numbers with a ``## §N`` heading in DESIGN.md."""
+        if self._design_sections is None:
+            secs: Set[int] = set()
+            if self.design_path.is_file():
+                for line in self.design_path.read_text(
+                        encoding="utf-8").splitlines():
+                    m = re.match(r"#{1,3}\s*§(\d+)\b", line)
+                    if m:
+                        secs.add(int(m.group(1)))
+            self._design_sections = secs
+        return self._design_sections
+
+    def project_version(self) -> Tuple[int, ...]:
+        """``(major, minor, …)`` from pyproject.toml; ``(0,)`` if absent."""
+        if self._version is None:
+            ver: Tuple[int, ...] = (0,)
+            pyproject = self.root / "pyproject.toml"
+            if pyproject.is_file():
+                m = re.search(
+                    r'^version\s*=\s*"(\d+(?:\.\d+)*)',
+                    pyproject.read_text(encoding="utf-8"), re.MULTILINE)
+                if m:
+                    ver = tuple(int(x) for x in m.group(1).split("."))
+            self._version = ver
+        return self._version
+
+    # -------------------------------------------------- file helpers
+
+    def file_by_rel(self, rel: str) -> Optional[FileInfo]:
+        for f in self.files:
+            if f.rel == rel:
+                return f
+        return None
+
+    def read_project_file(self, rel: str) -> Optional[FileInfo]:
+        """Load a file relative to the project root, reusing the parsed
+        copy when it was already collected from the CLI paths."""
+        hit = self.file_by_rel(rel)
+        if hit is not None:
+            return hit
+        p = self.root / rel
+        if not p.is_file():
+            return None
+        return load_file(p, self.root)
+
+
+def apply_suppressions(findings: List, files: Dict[str, FileInfo]) -> List:
+    """Return findings with ``suppressed``/``suppression_reason`` filled
+    in from each file's suppression comments (marking them used)."""
+    out = []
+    for f in findings:
+        fi = files.get(f.path)
+        sup = None
+        if fi is not None:
+            for s in fi.suppressions:
+                if f.rule not in s.rules:
+                    continue
+                if s.file_scope or s.line == f.line:
+                    sup = s
+                    break
+        if sup is not None:
+            sup.used = True
+            f = dataclasses.replace(
+                f, suppressed=True, suppression_reason=sup.reason)
+        out.append(f)
+    return out

@@ -1,0 +1,320 @@
+"""Shared JAX-aware AST analysis for repro-lint rules.
+
+Two facilities:
+
+- :func:`traced_functions` — which function defs in a module are
+  *traced*: decorated with / wrapped in ``jax.jit`` (incl.
+  ``functools.partial(jax.jit, …)``), passed to ``shard_map`` /
+  ``pl.pallas_call`` / ``vmap`` / ``pmap`` / ``lax`` control-flow
+  combinators, lexically nested inside a traced function, or called by
+  name from one (intra-module worklist to a fixpoint).
+
+- :class:`TaintTracker` — a conservative intra-function dataflow over
+  straight-line assignments: parameters of a traced function are traced
+  values; expressions mentioning them are tainted, EXCEPT subtrees
+  rooted at trace-time-static accessors (``.shape``, ``.ndim``,
+  ``.dtype``, ``.size``, ``len(...)``) which are concrete Python values
+  under tracing and safe to coerce.
+
+Both are heuristics: intra-module, name-based resolution, no imports
+followed. They are tuned so the repo's real hot paths come out clean
+and the defect classes from past PRs (host-sync coercions, unsnapped
+static scalars) are caught.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+# Callables whose function-valued arguments are traced by JAX.
+_TRACING_ENTRY_NAMES = {
+    "jit", "pjit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+    "remat", "pallas_call", "shard_map", "scan", "while_loop", "cond",
+    "fori_loop", "switch", "map", "custom_vjp", "custom_jvp",
+}
+
+# Attribute chains that mean "jax.jit" etc. when rendered dotted.
+_JIT_NAMES = {"jit", "jax.jit", "pjit", "jax.pjit"}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Render ``a.b.c`` / ``name`` to a dotted string, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _tail(name: Optional[str]) -> Optional[str]:
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jax.jit`` / ``jit`` / ``functools.partial(jax.jit, …)``."""
+    d = dotted(node)
+    if d in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        head = dotted(node.func)
+        if _tail(head) == "partial" and node.args:
+            return _is_jit_expr(node.args[0])
+        # jax.jit(fn, static_argnames=…) used as a decorator factory
+        if head in _JIT_NAMES:
+            return True
+    return False
+
+
+def jit_static_names(node: ast.AST) -> Set[str]:
+    """static_argnames from a jit decorator/call expression, when they
+    are literal strings/tuples (else empty — conservative)."""
+    names: Set[str] = set()
+    calls: List[ast.Call] = []
+    if isinstance(node, ast.Call):
+        calls.append(node)
+        if _tail(dotted(node.func)) == "partial":
+            pass  # kwargs live on the partial call itself
+    for call in calls:
+        for kw in call.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                if kw.arg == "static_argnames":
+                    names |= _literal_strs(kw.value)
+    return names
+
+
+def _literal_strs(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.add(elt.value)
+    return out
+
+
+def _collect_defs(tree: ast.AST) -> Dict[str, List[ast.AST]]:
+    """Map bare function name -> def nodes (module- and class-level and
+    nested; duplicates keep all candidates)."""
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, FuncDef):
+            defs.setdefault(node.name, []).append(node)
+    return defs
+
+
+def traced_functions(tree: ast.AST) -> Dict[ast.AST, str]:
+    """Return {def_node: why} for every function considered traced."""
+    defs = _collect_defs(tree)
+    traced: Dict[ast.AST, str] = {}
+
+    def mark(node: ast.AST, why: str) -> None:
+        if node not in traced:
+            traced[node] = why
+
+    # Seed 1: decorators.
+    for name, nodes in defs.items():
+        for node in nodes:
+            for dec in node.decorator_list:
+                if _is_jit_expr(dec):
+                    mark(node, "decorated with jax.jit")
+
+    # Seed 2: function names passed to tracing entry points
+    # (jax.jit(f), shard_map(f, …), pl.pallas_call(kernel, …),
+    # lax.scan(body, …), vmap(f), …).
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        head = _tail(dotted(call.func))
+        if head not in _TRACING_ENTRY_NAMES:
+            continue
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            # unwrap functools.partial(fn, …) around the function value
+            while (isinstance(arg, ast.Call)
+                   and _tail(dotted(arg.func)) == "partial" and arg.args):
+                arg = arg.args[0]
+            name = dotted(arg)
+            if name and name in defs:
+                for node in defs[name]:
+                    mark(node, f"passed to {head}")
+
+    # Closure: defs lexically nested inside a traced def are traced.
+    changed = True
+    while changed:
+        changed = False
+        for node in list(traced):
+            for sub in ast.walk(node):
+                if isinstance(sub, FuncDef) and sub is not node:
+                    if sub not in traced:
+                        traced[sub] = f"nested in traced `{getattr(node, 'name', '?')}`"
+                        changed = True
+        # Calls from a traced body to a module-local function.
+        for node in list(traced):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    callee = dotted(sub.func)
+                    if callee and callee in defs:
+                        for cd in defs[callee]:
+                            if cd not in traced:
+                                traced[cd] = (
+                                    f"called from traced "
+                                    f"`{getattr(node, 'name', '?')}`")
+                                changed = True
+    return traced
+
+
+def traced_param_names(node: ast.AST) -> Set[str]:
+    """Parameter names of a traced def, minus literal static_argnames
+    found on its jit decorators (those stay Python values)."""
+    args = node.args
+    names = {a.arg for a in (
+        list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs))}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    static: Set[str] = set()
+    for dec in node.decorator_list:
+        if _is_jit_expr(dec):
+            static |= jit_static_names(dec)
+    return names - static
+
+
+# ------------------------------------------------------------- taint
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+_STATIC_CALLS = {"len", "isinstance", "type"}
+
+
+class TaintTracker:
+    """Tracks which local names hold traced values inside one function.
+
+    Straight-line, conservative: assignment of a tainted expression
+    taints the target(s); ``.shape``-style accessors and ``len()``
+    launder (static under tracing). Loop targets over tainted iterables
+    are tainted."""
+
+    def __init__(self, initial: Iterable[str]):
+        self.tainted: Set[str] = set(initial)
+
+    def expr_tainted(self, node: ast.AST) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False  # static under tracing — do not descend
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            fname = _tail(dotted(node.func))
+            if fname in _STATIC_CALLS:
+                return False  # len(x) etc. are trace-time Python ints
+            parts = [node.func] if not isinstance(
+                node.func, (ast.Name, ast.Attribute)) else (
+                [node.func.value] if isinstance(node.func, ast.Attribute)
+                else [])
+            parts += list(node.args)
+            parts += [kw.value for kw in node.keywords]
+            return any(self.expr_tainted(p) for p in parts)
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value) or self.expr_tainted(node.slice)
+        return any(self.expr_tainted(c) for c in ast.iter_child_nodes(node))
+
+    # -- statement-level propagation -------------------------------
+
+    def _assign_target(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._assign_target(elt, tainted)
+        elif isinstance(target, ast.Starred):
+            self._assign_target(target.value, tainted)
+        # attribute/subscript targets: no name-level tracking
+
+    def observe(self, stmt: ast.stmt) -> None:
+        """Update taint state from one statement (non-recursive into
+        compound bodies — callers drive the walk)."""
+        if isinstance(stmt, ast.Assign):
+            t = self.expr_tainted(stmt.value)
+            for target in stmt.targets:
+                self._assign_target(target, t)
+        elif isinstance(stmt, ast.AugAssign):
+            if self.expr_tainted(stmt.value):
+                self._assign_target(stmt.target, True)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._assign_target(stmt.target, self.expr_tainted(stmt.value))
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._assign_target(stmt.target, self.expr_tainted(stmt.iter))
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                if item.optional_vars is not None:
+                    self._assign_target(
+                        item.optional_vars,
+                        self.expr_tainted(item.context_expr))
+
+
+def walk_statements(body: List[ast.stmt]) -> Iterable[ast.stmt]:
+    """Yield statements in source order, descending into compound
+    statements but NOT into nested function/class definitions (those
+    are analyzed as their own scopes). Single pass; good enough for
+    assignment-before-use in typical jitted code."""
+    for stmt in body:
+        yield stmt
+        if isinstance(stmt, FuncDef) or isinstance(stmt, ast.ClassDef):
+            continue
+        for attr in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, attr, None)
+            if sub:
+                yield from walk_statements(sub)
+        for handler in getattr(stmt, "handlers", []) or []:
+            yield from walk_statements(handler.body)
+
+
+def walk_expr_nodes(stmt: ast.stmt) -> Iterable[ast.AST]:
+    """Walk one statement's expression nodes without descending into
+    nested function/class definitions or into the bodies of compound
+    statements (which walk_statements already yields separately)."""
+    skip_attrs = {"body", "orelse", "finalbody", "handlers"}
+    if isinstance(stmt, FuncDef) or isinstance(stmt, ast.ClassDef):
+        return
+
+    def _walk(node: ast.AST) -> Iterable[ast.AST]:
+        for field, value in ast.iter_fields(node):
+            if isinstance(node, ast.stmt) and field in skip_attrs:
+                continue
+            children = value if isinstance(value, list) else [value]
+            for child in children:
+                if not isinstance(child, ast.AST):
+                    continue
+                if isinstance(child, FuncDef) or isinstance(child, ast.ClassDef):
+                    continue
+                yield child
+                yield from _walk(child)
+
+    yield from _walk(stmt)
+
+
+def enclosing_traced_params(fn: ast.AST, traced: Dict[ast.AST, str],
+                            tree: ast.AST) -> Set[str]:
+    """Own traced params plus those of lexically-enclosing traced defs
+    (closure captures of traced values stay tainted in nested bodies)."""
+    names = traced_param_names(fn)
+    for outer in traced:
+        if outer is fn:
+            continue
+        for sub in ast.walk(outer):
+            if sub is fn:
+                names |= traced_param_names(outer)
+                break
+    return names

@@ -1,0 +1,97 @@
+"""Rule registry and finding model for repro-lint (DESIGN.md §13).
+
+A rule is a class with a ``rule_id`` (``R00x``), registered via the
+:func:`register` decorator. Rules implement one or both hooks:
+
+- ``check_file(file, ctx)`` — per-file AST analysis; called once per
+  collected Python file.
+- ``check_project(ctx)`` — whole-tree invariants (artifact contracts,
+  cross-file integrity); called once per run, independent of which
+  paths were passed on the command line.
+
+Both return iterables of :class:`Finding`. The driver owns suppression
+matching and exit codes; rules always report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Dict, Iterable, List, Type
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.tools.lint.context import FileInfo, LintContext
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint finding, pointing at a project-relative location."""
+
+    rule: str           # "R002"
+    path: str           # project-relative posix path ("src/repro/…")
+    line: int           # 1-based; 0 for whole-file/project findings
+    col: int            # 0-based column
+    message: str
+    suppressed: bool = False
+    suppression_reason: str | None = None
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}:{self.col + 1}"
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{loc}: {self.rule}{tag}: {self.message}"
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "suppressed": self.suppressed,
+            "suppression_reason": self.suppression_reason,
+        }
+
+
+class Rule:
+    """Base class for lint rules. Subclass, set the class attrs, and
+    decorate with :func:`register`."""
+
+    rule_id: str = ""
+    name: str = ""
+    summary: str = ""
+
+    def check_file(self, file: "FileInfo", ctx: "LintContext") -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, ctx: "LintContext") -> Iterable[Finding]:
+        return ()
+
+
+_REGISTRY: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator adding a rule to the global registry."""
+    if not cls.rule_id or not cls.rule_id.startswith("R"):
+        raise ValueError(f"rule_id must look like 'R00x', got {cls.rule_id!r}")
+    if cls.rule_id in _REGISTRY and _REGISTRY[cls.rule_id] is not cls:
+        raise ValueError(f"duplicate rule id {cls.rule_id}")
+    _REGISTRY[cls.rule_id] = cls
+    return cls
+
+
+def all_rules() -> List[Rule]:
+    """Instantiate every registered rule, ordered by rule id.
+
+    Imports the rule modules lazily so the registry is populated on
+    first use (and so a broken rule module fails loudly here, not at
+    package import).
+    """
+    from repro.tools.lint import rules as _rules  # noqa: F401  (registers)
+
+    return [_REGISTRY[rid]() for rid in sorted(_REGISTRY)]
+
+
+def get_rule(rule_id: str) -> Rule:
+    from repro.tools.lint import rules as _rules  # noqa: F401  (registers)
+
+    return _REGISTRY[rule_id]()

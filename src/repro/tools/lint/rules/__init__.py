@@ -1,0 +1,17 @@
+"""Rule modules for repro-lint. Importing this package registers every
+rule with the registry (``registry.all_rules`` imports it lazily).
+
+To add a rule (DESIGN.md §13): create ``r0xx_<slug>.py`` defining a
+``Rule`` subclass decorated with ``@register``, import it below, add a
+positive+negative fixture pair under ``tests/lint_fixtures/``, and a
+case in ``tests/test_lint.py``.
+"""
+
+from repro.tools.lint.rules import (  # noqa: F401  (import-time registration)
+    r001_kernel_triple,
+    r002_host_sync,
+    r003_retrace,
+    r004_prng_reuse,
+    r005_deprecation,
+    r006_design_refs,
+)

@@ -1,0 +1,134 @@
+"""R001 — kernel-triple contract (project rule).
+
+Every Pallas kernel module under ``src/repro/kernels/`` must ship as a
+*triple* (the pattern established across ``gather_distance`` /
+``dequant_gather_distance`` / ``adc_gather_distance`` / ``topk``):
+
+1. a public entry point named ``<base>_pallas`` wrapping the
+   ``pl.pallas_call``;
+2. a reference oracle ``<base>_ref`` in ``kernels/ref.py`` (the
+   bit-match target for the sweep tests);
+3. a dispatch entry in ``kernels/ops.py`` referencing BOTH the kernel
+   and its oracle (the CPU/TPU routing layer);
+4. a test module under ``tests/`` referencing both ``<base>_pallas``
+   and ``<base>_ref``.
+
+Deleting an oracle or a dispatch entry for an existing kernel makes
+this rule (and the CI lint lane) fail.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List
+
+from repro.tools.lint.context import LintContext
+from repro.tools.lint.jaxast import FuncDef, dotted
+from repro.tools.lint.registry import Finding, Rule, register
+
+KERNELS_REL = "src/repro/kernels"
+NON_KERNEL_MODULES = {"__init__.py", "ref.py", "ops.py"}
+
+
+def _has_pallas_call(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            if name and name.rsplit(".", 1)[-1] == "pallas_call":
+                return True
+    return False
+
+
+def _kernel_entry_points(tree: ast.AST) -> List[ast.AST]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, FuncDef) and n.name.endswith("_pallas")]
+
+
+def _defined_functions(tree: ast.AST) -> Dict[str, int]:
+    return {n.name: n.lineno for n in ast.walk(tree) if isinstance(n, FuncDef)}
+
+
+def _references_name(tree: ast.AST, name: str) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and node.id == name:
+            return True
+        if isinstance(node, ast.Attribute) and node.attr == name:
+            return True
+        if isinstance(node, ast.alias) and node.name.split(".")[-1] == name:
+            return True
+    return False
+
+
+@register
+class KernelTripleRule(Rule):
+    rule_id = "R001"
+    name = "kernel-triple-contract"
+    summary = ("every pl.pallas_call kernel has a ref.py oracle, an ops.py "
+               "dispatch entry, and a test module exercising both")
+
+    def check_project(self, ctx: LintContext) -> Iterable[Finding]:
+        kdir = ctx.root / KERNELS_REL
+        if not kdir.is_dir():
+            return []
+        findings: List[Finding] = []
+
+        ref_info = ctx.read_project_file(f"{KERNELS_REL}/ref.py")
+        ops_info = ctx.read_project_file(f"{KERNELS_REL}/ops.py")
+        ref_defs = (_defined_functions(ref_info.tree)
+                    if ref_info and ref_info.tree else {})
+        ops_tree = ops_info.tree if ops_info else None
+
+        # Test corpus: word-boundary regex over raw sources (imports or
+        # attribute access both count as "referencing").
+        test_sources: Dict[str, str] = {}
+        tdir = ctx.root / "tests"
+        if tdir.is_dir():
+            for tf in sorted(tdir.glob("test_*.py")):
+                test_sources[tf.name] = tf.read_text(encoding="utf-8")
+
+        for mod in sorted(kdir.glob("*.py")):
+            if mod.name in NON_KERNEL_MODULES:
+                continue
+            info = ctx.read_project_file(f"{KERNELS_REL}/{mod.name}")
+            if info is None or info.tree is None:
+                continue
+            if not _has_pallas_call(info.tree):
+                continue
+            entries = _kernel_entry_points(info.tree)
+            if not entries:
+                findings.append(Finding(
+                    rule=self.rule_id, path=info.rel, line=1, col=0,
+                    message=(f"kernel module {mod.name} contains a "
+                             "pl.pallas_call but no `<base>_pallas` entry "
+                             "point (naming contract)")))
+                continue
+            for entry in entries:
+                base = re.sub(r"_pallas$", "", entry.name)
+                oracle = f"{base}_ref"
+                if oracle not in ref_defs:
+                    findings.append(Finding(
+                        rule=self.rule_id, path=info.rel,
+                        line=entry.lineno, col=entry.col_offset,
+                        message=(f"kernel `{entry.name}` has no oracle "
+                                 f"`{oracle}` in kernels/ref.py")))
+                if ops_tree is None or not (
+                        _references_name(ops_tree, entry.name)
+                        and _references_name(ops_tree, oracle)):
+                    findings.append(Finding(
+                        rule=self.rule_id, path=info.rel,
+                        line=entry.lineno, col=entry.col_offset,
+                        message=(f"kernels/ops.py has no dispatch entry "
+                                 f"routing `{entry.name}` (must reference "
+                                 f"both `{entry.name}` and `{oracle}`)")))
+                pat_k = re.compile(rf"\b{re.escape(entry.name)}\b")
+                pat_r = re.compile(rf"\b{re.escape(oracle)}\b")
+                if not any(pat_k.search(src) and pat_r.search(src)
+                           for src in test_sources.values()):
+                    findings.append(Finding(
+                        rule=self.rule_id, path=info.rel,
+                        line=entry.lineno, col=entry.col_offset,
+                        message=(f"no test module under tests/ references "
+                                 f"both `{entry.name}` and `{oracle}` "
+                                 "(kernel-vs-oracle sweep missing)")))
+        return findings

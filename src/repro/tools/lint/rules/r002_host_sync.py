@@ -1,0 +1,91 @@
+"""R002 — host-sync / tracer leak (per-file rule).
+
+Inside any function reachable from ``jax.jit`` / ``shard_map`` /
+``pl.pallas_call`` / ``lax`` control flow (see
+``jaxast.traced_functions``), a *traced value* must never round-trip
+through the host:
+
+- ``np.*`` / ``numpy.*`` calls fed a traced value (device→host copy,
+  or a tracer leak into numpy);
+- ``.item()`` on a traced value (blocking device sync);
+- ``float()`` / ``int()`` / ``bool()`` / ``complex()`` coercions of a
+  traced value (ConcretizationTypeError at trace time, or a silent
+  sync under eager fallback).
+
+Trace-time-static derivations (``x.shape``, ``x.ndim``, ``x.dtype``,
+``len(x)``) launder taint — coercing those is fine and idiomatic
+(tile-size math). ``np.*`` calls on non-traced arguments (dtype
+constants, static grids) are equally fine.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.tools.lint.context import FileInfo, LintContext
+from repro.tools.lint.jaxast import (
+    TaintTracker,
+    dotted,
+    enclosing_traced_params,
+    traced_functions,
+    walk_expr_nodes,
+    walk_statements,
+)
+from repro.tools.lint.registry import Finding, Rule, register
+
+_COERCIONS = {"float", "int", "bool", "complex"}
+_NUMPY_ROOTS = {"np", "numpy", "onp"}
+
+
+@register
+class HostSyncRule(Rule):
+    rule_id = "R002"
+    name = "host-sync-tracer-leak"
+    summary = ("no np.* / .item() / float()/int()/bool() coercions of "
+               "traced values inside jit/shard_map/pallas-reachable code")
+
+    def check_file(self, file: FileInfo, ctx: LintContext) -> Iterable[Finding]:
+        if file.tree is None:
+            return []
+        findings: List[Finding] = []
+        traced = traced_functions(file.tree)
+        for fn, why in traced.items():
+            tracker = TaintTracker(
+                enclosing_traced_params(fn, traced, file.tree))
+            for stmt in walk_statements(fn.body):
+                for node in walk_expr_nodes(stmt):
+                    if isinstance(node, ast.Call):
+                        findings.extend(
+                            self._check_call(node, tracker, file, fn, why))
+                tracker.observe(stmt)
+        return findings
+
+    def _check_call(self, node: ast.Call, tracker: TaintTracker,
+                    file: FileInfo, fn, why: str) -> List[Finding]:
+        out: List[Finding] = []
+        head = dotted(node.func)
+        fname = getattr(fn, "name", "?")
+
+        def hit(msg: str) -> None:
+            out.append(Finding(
+                rule=self.rule_id, path=file.rel,
+                line=node.lineno, col=node.col_offset,
+                message=f"{msg} inside `{fname}` ({why})"))
+
+        args = list(node.args) + [kw.value for kw in node.keywords]
+        any_tainted_arg = any(tracker.expr_tainted(a) for a in args)
+
+        if head and head.split(".", 1)[0] in _NUMPY_ROOTS:
+            if any_tainted_arg:
+                hit(f"host numpy call `{head}(...)` on a traced value")
+            return out
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+                and not node.args
+                and tracker.expr_tainted(node.func.value)):
+            hit("`.item()` on a traced value (blocking host sync)")
+            return out
+        if head in _COERCIONS and any_tainted_arg:
+            hit(f"`{head}()` coercion of a traced value "
+                "(concretizes the tracer)")
+        return out

@@ -1,0 +1,240 @@
+"""R003 — retrace hazard (per-file rule): unsnapped runtime scalars in
+static argument positions.
+
+Every distinct value of a ``static_argnums``/``static_argnames``
+argument compiles a fresh jit specialization. A Python scalar *derived
+from runtime values* (``len(...)``, ``.shape``, ``int(...)`` of data,
+``//`` / ``math.ceil`` arithmetic) flowing into a static slot therefore
+produces an unbounded trace set — the ``cache_opt`` probe bug class,
+where unsnapped secant capacities cost minutes of compiles, twice.
+
+Such scalars must pass through a *grain-snapping* helper before
+reaching the static slot. Recognized snappers: any callable whose name
+contains ``round_to``, ``pad_pow2``, ``snap``, ``grain`` or ``bucket``
+(``_round_to``/``_pad_pow2`` are the in-repo canon — they collapse the
+shape set to multiples of the grain, bounding specializations).
+
+The rule resolves jit-wrapped callables defined in the same module
+(decorator or ``g = jax.jit(f, static_argnames=…)`` form), then flags
+call-site static arguments whose expression — or the right-hand sides
+of same-function assignments to the argument's name — contains a
+derived-scalar marker with no snapping call in the chain.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.tools.lint.context import FileInfo, LintContext
+from repro.tools.lint.jaxast import FuncDef, _is_jit_expr, dotted
+from repro.tools.lint.registry import Finding, Rule, register
+
+SNAP_NAME_RE = re.compile(r"(round_to|pad_pow2|snap|grain|bucket)",
+                          re.IGNORECASE)
+_DERIVE_CALLS = {"len", "round", "ceil", "floor", "int"}
+
+
+def _literal_strs(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.add(elt.value)
+    return out
+
+
+def _literal_ints(node: ast.AST) -> Set[int]:
+    out: Set[int] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.add(elt.value)
+    return out
+
+
+def _static_spec_from_call(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names |= _literal_strs(kw.value)
+        elif kw.arg == "static_argnums":
+            nums |= _literal_ints(kw.value)
+    return names, nums
+
+
+class _JitTarget:
+    """A module-local callable with known static slots."""
+
+    def __init__(self, names: Set[str], nums: Set[int],
+                 params: Optional[List[str]]):
+        self.static_names = set(names)
+        self.static_nums = set(nums)
+        if params:
+            for i in nums:
+                if 0 <= i < len(params):
+                    self.static_names.add(params[i])
+
+    def static_positions(self, params: Optional[List[str]]) -> Set[int]:
+        pos = set(self.static_nums)
+        if params:
+            for i, p in enumerate(params):
+                if p in self.static_names:
+                    pos.add(i)
+        return pos
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    return [x.arg for x in list(a.posonlyargs) + list(a.args)]
+
+
+def _collect_jit_targets(tree: ast.AST) -> Dict[str, Tuple[_JitTarget,
+                                                           List[str]]]:
+    """Map callable-name -> (_JitTarget, param-name list)."""
+    defs: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, FuncDef):
+            defs.setdefault(node.name, node)
+
+    targets: Dict[str, Tuple[_JitTarget, List[str]]] = {}
+
+    # Form 1: decorated defs.
+    for name, fn in defs.items():
+        for dec in fn.decorator_list:
+            if _is_jit_expr(dec) and isinstance(dec, ast.Call):
+                names, nums = _static_spec_from_call(dec)
+                if names or nums:
+                    params = _param_names(fn)
+                    targets[name] = (_JitTarget(names, nums, params), params)
+
+    # Form 2: g = jax.jit(f, static_argnames=…) aliases.
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)):
+            continue
+        call = node.value
+        if dotted(call.func) not in ("jax.jit", "jit", "jax.pjit", "pjit"):
+            continue
+        names, nums = _static_spec_from_call(call)
+        if not (names or nums):
+            continue
+        inner = dotted(call.args[0]) if call.args else None
+        params = _param_names(defs[inner]) if inner in defs else None
+        targets[node.targets[0].id] = (
+            _JitTarget(names, nums, params), params or [])
+    return targets
+
+
+def _contains_snap(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = dotted(sub.func)
+            if name and SNAP_NAME_RE.search(name.rsplit(".", 1)[-1]):
+                return True
+    return False
+
+
+def _derived_marker(node: ast.AST) -> Optional[str]:
+    """Return a human tag when the expression derives a scalar from
+    runtime values (unbounded value set)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = dotted(sub.func)
+            tail = name.rsplit(".", 1)[-1] if name else None
+            if tail in _DERIVE_CALLS:
+                # int(<literal>) / len(<literal list>) are bounded
+                if not (sub.args and isinstance(sub.args[0], ast.Constant)):
+                    return f"{tail}(...)"
+        elif isinstance(sub, ast.Attribute) and sub.attr == "shape":
+            return ".shape"
+        elif isinstance(sub, ast.BinOp) and isinstance(
+                sub.op, (ast.FloorDiv, ast.Div, ast.Mod)):
+            return "derived arithmetic"
+    return None
+
+
+def _enclosing_function(tree: ast.AST, target: ast.AST) -> Optional[ast.AST]:
+    best: Optional[ast.AST] = None
+    for node in ast.walk(tree):
+        if isinstance(node, FuncDef):
+            for sub in ast.walk(node):
+                if sub is target:
+                    best = node  # innermost wins on later (deeper) visits
+    return best
+
+
+@register
+class RetraceHazardRule(Rule):
+    rule_id = "R003"
+    name = "retrace-hazard"
+    summary = ("runtime-derived Python scalars must be grain-snapped "
+               "before flowing into jit static arguments")
+
+    def check_file(self, file: FileInfo, ctx: LintContext) -> Iterable[Finding]:
+        if file.tree is None:
+            return []
+        targets = _collect_jit_targets(file.tree)
+        if not targets:
+            return []
+        findings: List[Finding] = []
+        for call in ast.walk(file.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            cname = dotted(call.func)
+            if cname not in targets:
+                continue
+            target, params = targets[cname]
+            static_pos = target.static_positions(params)
+            suspect_args: List[Tuple[str, ast.AST]] = []
+            for i, arg in enumerate(call.args):
+                if i in static_pos:
+                    label = params[i] if params and i < len(params) else str(i)
+                    suspect_args.append((label, arg))
+            for kw in call.keywords:
+                if kw.arg in target.static_names:
+                    suspect_args.append((kw.arg, kw.value))
+            if not suspect_args:
+                continue
+            encl = _enclosing_function(file.tree, call)
+            for label, arg in suspect_args:
+                findings.extend(self._check_static_arg(
+                    file, call, cname, label, arg, encl))
+        return findings
+
+    def _check_static_arg(self, file: FileInfo, call: ast.Call, cname: str,
+                          label: str, arg: ast.AST,
+                          encl: Optional[ast.AST]) -> List[Finding]:
+        chain: List[ast.AST] = [arg]
+        if isinstance(arg, ast.Name) and encl is not None:
+            for node in ast.walk(encl):
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name) and t.id == arg.id:
+                            chain.append(node.value)
+                elif (isinstance(node, ast.AugAssign)
+                      and isinstance(node.target, ast.Name)
+                      and node.target.id == arg.id):
+                    chain.append(node.value)
+        if any(_contains_snap(c) for c in chain):
+            return []
+        for c in chain:
+            marker = _derived_marker(c)
+            if marker is not None:
+                return [Finding(
+                    rule=self.rule_id, path=file.rel,
+                    line=call.lineno, col=call.col_offset,
+                    message=(
+                        f"static argument `{label}` of jitted `{cname}` "
+                        f"derives from runtime values ({marker}) without "
+                        "grain snapping — every distinct value retraces "
+                        "(snap with _round_to/_pad_pow2 or a *snap*/"
+                        "*grain* helper)"))]
+        return []

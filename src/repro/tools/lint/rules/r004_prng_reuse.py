@@ -1,0 +1,219 @@
+"""R004 — PRNG key reuse (per-file rule).
+
+JAX keys are consumed, not streams: feeding the same key object to two
+``jax.random.*`` samplers yields correlated (identical) draws. The rule
+flags, per function:
+
+- two sampler calls in the same straight-line block consuming the same
+  key name with no intervening reassignment (``split``/``fold_in``/
+  fresh ``PRNGKey``), and
+- a sampler call inside a loop body consuming a key defined outside the
+  loop and never reassigned inside it (every iteration reuses it).
+
+``split`` / ``fold_in`` / ``PRNGKey`` are constructors, not consumers.
+Branches of an ``if``/``else`` are analyzed independently (one use in
+each arm is legal — only one arm runs).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.tools.lint.context import FileInfo, LintContext
+from repro.tools.lint.jaxast import FuncDef, dotted
+from repro.tools.lint.registry import Finding, Rule, register
+
+_NON_CONSUMING = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                  "wrap_key_data", "clone", "key_impl"}
+
+
+def random_roots(tree: ast.AST) -> Set[str]:
+    """Dotted prefixes bound to ``jax.random`` in this module (resolved
+    from the imports, so stdlib ``random`` never matches)."""
+    roots = {"jax.random"}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "jax.random" and alias.asname:
+                    roots.add(alias.asname)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for alias in node.names:
+                    if alias.name == "random":
+                        roots.add(alias.asname or "random")
+    return roots
+
+
+def _sampler_call(node: ast.Call, roots: Set[str]) -> Optional[str]:
+    """Return the sampler name when `node` is a jax.random consumer."""
+    name = dotted(node.func)
+    if not name or "." not in name:
+        return None
+    root, leaf = name.rsplit(".", 1)
+    if root not in roots or leaf in _NON_CONSUMING:
+        return None
+    return leaf
+
+
+def _key_arg(node: ast.Call) -> Optional[str]:
+    """The key operand (first positional or ``key=``) when it is a
+    plain name."""
+    arg: Optional[ast.AST] = None
+    if node.args:
+        arg = node.args[0]
+    else:
+        for kw in node.keywords:
+            if kw.arg == "key":
+                arg = kw.value
+    return arg.id if isinstance(arg, ast.Name) else None
+
+
+def _assigned_names(stmt: ast.stmt) -> Set[str]:
+    names: Set[str] = set()
+
+    def add_target(t: ast.AST) -> None:
+        if isinstance(t, ast.Name):
+            names.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                add_target(e)
+        elif isinstance(t, ast.Starred):
+            add_target(t.value)
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            add_target(t)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        add_target(stmt.target)
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        add_target(stmt.target)
+    return names
+
+
+def _stmt_expr_calls(stmt: ast.stmt) -> Iterable[ast.Call]:
+    """Calls inside one statement, not descending into compound bodies
+    or nested defs (those are walked separately)."""
+    skip = {"body", "orelse", "finalbody", "handlers"}
+
+    def _walk(node: ast.AST) -> Iterable[ast.AST]:
+        for field, value in ast.iter_fields(node):
+            if isinstance(node, ast.stmt) and field in skip:
+                continue
+            children = value if isinstance(value, list) else [value]
+            for child in children:
+                if not isinstance(child, ast.AST):
+                    continue
+                if isinstance(child, FuncDef) or isinstance(child, ast.ClassDef):
+                    continue
+                yield child
+                yield from _walk(child)
+
+    for sub in _walk(stmt):
+        if isinstance(sub, ast.Call):
+            yield sub
+
+
+@register
+class PrngReuseRule(Rule):
+    rule_id = "R004"
+    name = "prng-key-reuse"
+    summary = ("the same PRNG key must not feed two jax.random samplers "
+               "without an intervening split")
+
+    def check_file(self, file: FileInfo, ctx: LintContext) -> Iterable[Finding]:
+        if file.tree is None:
+            return []
+        self._roots = random_roots(file.tree)
+        findings: List[Finding] = []
+        for fn in ast.walk(file.tree):
+            if isinstance(fn, FuncDef):
+                self._check_block(fn.body, {}, file, findings)
+        # module level
+        if isinstance(file.tree, ast.Module):
+            self._check_block(file.tree.body, {}, file, findings)
+        # the loop and straight-line analyses can both flag one call
+        # site; report each site once (first message wins)
+        seen: Set[tuple] = set()
+        unique: List[Finding] = []
+        for f in findings:
+            site = (f.line, f.col)
+            if site not in seen:
+                seen.add(site)
+                unique.append(f)
+        return unique
+
+    def _check_block(self, body: List[ast.stmt],
+                     consumed: Dict[str, int], file: FileInfo,
+                     findings: List[Finding]) -> None:
+        """``consumed`` maps key name -> line of its first consumption
+        in this straight-line block."""
+        for stmt in body:
+            if isinstance(stmt, FuncDef) or isinstance(stmt, ast.ClassDef):
+                continue  # separate scope, walked by check_file
+            for call in _stmt_expr_calls(stmt):
+                sampler = _sampler_call(call, self._roots)
+                if sampler is None:
+                    continue
+                key = _key_arg(call)
+                if key is None:
+                    continue
+                if key in consumed:
+                    findings.append(Finding(
+                        rule=self.rule_id, path=file.rel,
+                        line=call.lineno, col=call.col_offset,
+                        message=(
+                            f"key `{key}` consumed by `{sampler}` was "
+                            f"already consumed on line {consumed[key]} "
+                            "without an intervening split — identical "
+                            "draws")))
+                else:
+                    consumed[key] = call.lineno
+            # reassignment resets the key (split/fresh key/any rebind)
+            for name in _assigned_names(stmt):
+                consumed.pop(name, None)
+
+            if isinstance(stmt, (ast.If,)):
+                for branch in (stmt.body, stmt.orelse):
+                    self._check_block(branch, dict(consumed), file, findings)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                self._check_loop(stmt, dict(consumed), file, findings)
+            elif isinstance(stmt, ast.Try):
+                for branch in ([stmt.body, stmt.orelse, stmt.finalbody]
+                               + [h.body for h in stmt.handlers]):
+                    if branch:
+                        self._check_block(branch, dict(consumed), file,
+                                          findings)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                self._check_block(stmt.body, consumed, file, findings)
+
+    def _check_loop(self, stmt, consumed: Dict[str, int], file: FileInfo,
+                    findings: List[Finding]) -> None:
+        """Inside a loop body: a sampler consuming a key that is never
+        reassigned within the body reuses it every iteration."""
+        body = stmt.body
+        assigned_in_body: Set[str] = set()
+        for s in body:
+            for sub in ast.walk(s):
+                if isinstance(sub, ast.stmt):
+                    assigned_in_body |= _assigned_names(sub)
+        for s in body:
+            if isinstance(s, FuncDef) or isinstance(s, ast.ClassDef):
+                continue
+            for call in _stmt_expr_calls(s):
+                sampler = _sampler_call(call, self._roots)
+                if sampler is None:
+                    continue
+                key = _key_arg(call)
+                if key is None:
+                    continue
+                if key not in assigned_in_body:
+                    findings.append(Finding(
+                        rule=self.rule_id, path=file.rel,
+                        line=call.lineno, col=call.col_offset,
+                        message=(
+                            f"key `{key}` consumed by `{sampler}` inside a "
+                            "loop without per-iteration split — every "
+                            "iteration draws identically")))
+        # also run the straight-line analysis within the body itself
+        self._check_block(body, dict(consumed), file, findings)

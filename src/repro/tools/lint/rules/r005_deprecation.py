@@ -1,0 +1,87 @@
+"""R005 — deprecation-milestone enforcement (per-file rule).
+
+The repo's shim lifecycle (the ``query``/``query_batch`` tuple shims,
+PRs 4→7): a deprecation shim must carry a removal milestone in its
+docstring (``"removed at v0.6"`` style), and once the project version
+reaches that milestone the shim must be *deleted*, not kept limping.
+
+Detection: a function/class is a shim when its docstring mentions
+"deprecat" or its body raises/emits ``DeprecationWarning``. Findings:
+
+- shim with no ``vMAJOR.MINOR`` milestone stamp in the docstring;
+- shim whose stamped milestone ≤ the version in pyproject.toml.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional, Tuple
+
+from repro.tools.lint.context import FileInfo, LintContext
+from repro.tools.lint.jaxast import FuncDef, dotted
+from repro.tools.lint.registry import Finding, Rule, register
+
+MILESTONE_RE = re.compile(r"\bv(\d+)\.(\d+)(?:\.(\d+))?\b")
+
+
+def _uses_deprecation_warning(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Name, ast.Attribute)):
+            name = dotted(sub)
+            if name and name.rsplit(".", 1)[-1] == "DeprecationWarning":
+                return True
+    return False
+
+
+def _milestone(doc: str) -> Optional[Tuple[int, ...]]:
+    m = MILESTONE_RE.search(doc)
+    if not m:
+        return None
+    return tuple(int(g) for g in m.groups() if g is not None)
+
+
+@register
+class DeprecationMilestoneRule(Rule):
+    rule_id = "R005"
+    name = "deprecation-milestone"
+    summary = ("deprecation shims carry a removal milestone and are "
+               "deleted once the project version reaches it")
+
+    def check_file(self, file: FileInfo, ctx: LintContext) -> Iterable[Finding]:
+        if file.tree is None:
+            return []
+        findings: List[Finding] = []
+        current = ctx.project_version()
+        for node in ast.walk(file.tree):
+            if not isinstance(node, FuncDef + (ast.ClassDef,)):
+                continue
+            doc = ast.get_docstring(node) or ""
+            is_shim = ("deprecat" in doc.lower()
+                       or _uses_deprecation_warning(node))
+            if not is_shim:
+                continue
+            ms = _milestone(doc)
+            if ms is None:
+                findings.append(Finding(
+                    rule=self.rule_id, path=file.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(
+                        f"deprecation shim `{node.name}` has no removal "
+                        "milestone stamp in its docstring (expected "
+                        "'removed at vX.Y' style)")))
+                continue
+            # pad for comparison: v0.6 vs (0, 1, 0)
+            width = max(len(ms), len(current))
+            ms_p = ms + (0,) * (width - len(ms))
+            cur_p = current + (0,) * (width - len(current))
+            if ms_p <= cur_p:
+                findings.append(Finding(
+                    rule=self.rule_id, path=file.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(
+                        f"deprecation shim `{node.name}` is past its "
+                        f"removal milestone v{'.'.join(map(str, ms))} "
+                        f"(project is at "
+                        f"v{'.'.join(map(str, current))}) — delete it")))
+        return findings

@@ -1,0 +1,90 @@
+"""R006 — DESIGN.md § cross-reference integrity.
+
+Every ``§N`` reference in Python docstrings/comments and in the repo's
+own docs (README.md, DESIGN.md body text) must resolve to an existing
+``## §N`` section of DESIGN.md — the defect class PR 1 fixed by hand
+(dangling §2/§4 references written before the sections existed).
+
+Subsection refs (``§2.1.2``) resolve on their leading integer. Files
+the repo does not own (ISSUE.md, PAPERS.md — driver-provided) are not
+scanned.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Set, Tuple
+
+from repro.tools.lint.context import FileInfo, LintContext
+from repro.tools.lint.registry import Finding, Rule, register
+
+SECTION_REF_RE = re.compile(r"§\s*(\d+)")
+PROJECT_DOCS = ("README.md", "DESIGN.md")
+
+
+def _py_ref_sites(file: FileInfo) -> Iterable[Tuple[int, int, int]]:
+    """Yield (section, line, col) for §N refs in docstrings + comments."""
+    # Docstrings and other string constants in the AST.
+    if file.tree is not None:
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                for m in SECTION_REF_RE.finditer(node.value):
+                    prefix = node.value[: m.start()]
+                    yield (int(m.group(1)),
+                           node.lineno + prefix.count("\n"),
+                           node.col_offset)
+    # Comments (regex over raw lines; strings already covered above, so
+    # restrict to text after a '#').
+    for lineno, line in enumerate(file.lines, start=1):
+        if "#" not in line:
+            continue
+        comment = line[line.index("#"):]
+        for m in SECTION_REF_RE.finditer(comment):
+            yield (int(m.group(1)), lineno, line.index("#") + m.start())
+
+
+@register
+class DesignRefIntegrityRule(Rule):
+    rule_id = "R006"
+    name = "design-ref-integrity"
+    summary = ("every §N reference in docs/docstrings resolves to an "
+               "existing DESIGN.md section")
+
+    def _check_sites(self, sites, sections: Set[int], rel: str,
+                     findings: List[Finding]) -> None:
+        for sec, line, col in sites:
+            if sec not in sections:
+                findings.append(Finding(
+                    rule=self.rule_id, path=rel, line=line, col=col,
+                    message=(f"§{sec} does not resolve to a DESIGN.md "
+                             f"section (have: "
+                             f"{', '.join(f'§{s}' for s in sorted(sections))})")))
+
+    def check_file(self, file: FileInfo, ctx: LintContext) -> Iterable[Finding]:
+        sections = ctx.design_sections()
+        if not sections:
+            return []  # no DESIGN.md in this tree — nothing to resolve
+        findings: List[Finding] = []
+        self._check_sites(_py_ref_sites(file), sections, file.rel, findings)
+        return findings
+
+    def check_project(self, ctx: LintContext) -> Iterable[Finding]:
+        sections = ctx.design_sections()
+        if not sections:
+            return []
+        findings: List[Finding] = []
+        for doc in PROJECT_DOCS:
+            p = ctx.root / doc
+            if not p.is_file():
+                continue
+            sites = []
+            for lineno, line in enumerate(
+                    p.read_text(encoding="utf-8").splitlines(), start=1):
+                # headings define sections; skip them as "refs"
+                if re.match(r"\s*#{1,3}\s*§\d+", line):
+                    continue
+                for m in SECTION_REF_RE.finditer(line):
+                    sites.append((int(m.group(1)), lineno, m.start()))
+            self._check_sites(sites, sections, doc, findings)
+        return findings

@@ -23,7 +23,7 @@ import os
 import queue
 import shutil
 import threading
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np

@@ -10,7 +10,7 @@ exactly where the cross-pod all-reduce happens in the production mesh.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,6 @@ import dataclasses
 import time
 from typing import Any, Callable, List, Optional
 
-import jax
-import numpy as np
 
 from repro.train.checkpoint import latest_step, restore_checkpoint
 
@@ -117,7 +115,6 @@ def run_with_restarts(
     ``run_steps(state, start, stop)`` must checkpoint every
     ``ckpt_every`` steps and may raise at any point.
     """
-    from repro.train.checkpoint import save_checkpoint
 
     elastic = ElasticMesh(ckpt_dir)
     restarts = 0

@@ -15,8 +15,7 @@ The loss_fn contract: ``loss_fn(params, batch) -> scalar``.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

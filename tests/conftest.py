@@ -6,6 +6,11 @@ import pytest
 
 from repro.core.hnsw import build_hnsw
 
+# lint_fixtures holds intentionally-broken inputs for tests/test_lint.py
+# (including fixture mini-projects with their own test_*.py files) —
+# they are data, not tests
+collect_ignore_glob = ["lint_fixtures/*"]
+
 
 @pytest.fixture(scope="session")
 def small_dataset():

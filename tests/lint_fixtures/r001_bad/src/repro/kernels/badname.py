@@ -1,0 +1,16 @@
+"""pallas_call with no `<base>_pallas`-named entry point (naming
+contract violation)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x):
+    return pl.pallas_call(
+        _k, out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True)(x)

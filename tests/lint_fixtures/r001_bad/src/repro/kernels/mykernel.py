@@ -1,0 +1,21 @@
+"""Kernel with a missing oracle, missing dispatch, and missing test —
+plus a second pallas_call module with no `<base>_pallas` entry point."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _my_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def myop_pallas(x, interpret=False):
+    return pl.pallas_call(
+        _my_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,7 @@
+"""Dispatch layer — deliberately missing the myop entry."""
+
+from repro.kernels import ref
+
+
+def otherop(x):
+    return ref.otherop_ref(x)

@@ -1,0 +1,7 @@
+"""Oracles — deliberately missing `myop_ref`."""
+
+import jax.numpy as jnp
+
+
+def otherop_ref(x):
+    return jnp.asarray(x) + 1.0

@@ -1,0 +1,5 @@
+"""A test module that exercises an unrelated code path."""
+
+
+def test_nothing():
+    assert True

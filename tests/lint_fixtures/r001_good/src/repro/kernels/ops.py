@@ -1,0 +1,12 @@
+"""Dispatch layer for the fixture kernels."""
+
+from repro.kernels import ref
+from repro.kernels.mykernel import myop_pallas
+
+
+def myop(x):
+    import jax
+
+    if jax.default_backend() == "tpu":
+        return myop_pallas(x)
+    return ref.myop_ref(x)

@@ -1,0 +1,12 @@
+"""Kernel-vs-oracle sweep for the fixture kernel."""
+
+import numpy as np
+
+from repro.kernels.mykernel import myop_pallas
+from repro.kernels.ref import myop_ref
+
+
+def test_myop_matches_oracle():
+    x = np.ones((4,), np.float32)
+    assert np.array_equal(np.asarray(myop_pallas(x, interpret=True)),
+                          np.asarray(myop_ref(x)))

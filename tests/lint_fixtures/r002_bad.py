@@ -1,0 +1,52 @@
+"""R002 positive fixture: host-sync coercions of traced values.
+
+Every flagged line is annotated with `# FINDING` so the test can count
+expected sites.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def np_on_traced(x):
+    m = jnp.mean(x)
+    return np.asarray(m) + 1.0  # FINDING: np.* on traced
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def item_sync(x, flag):
+    s = x.sum()
+    if flag:
+        return s.item()  # FINDING: .item() on traced
+    return s
+
+
+def _helper(y):
+    return float(y)  # FINDING: reachable from jit below
+
+
+@jax.jit
+def calls_helper(y):
+    return _helper(y * 2.0)
+
+
+def scan_body(carry, x):
+    total = carry + x
+    host = int(total)  # FINDING: lax.scan body is traced
+    return total, host
+
+
+def run_scan(xs):
+    return jax.lax.scan(scan_body, 0.0, xs)
+
+
+@jax.jit
+def closure_leak(table):
+    def inner(i):
+        return np.take(table, i)  # FINDING: np on closure-captured traced
+
+    return inner(0)

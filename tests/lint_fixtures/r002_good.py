@@ -1,0 +1,35 @@
+"""R002 negative fixture: trace-time-static host work and host-side
+drivers — none of this may be flagged."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def static_shape_math(x):
+    n = int(x.shape[0])        # shape is static under tracing: fine
+    d = float(len(x))          # len() is static too
+    pad = np.zeros((4,), np.float32)  # np on constants: trace-time literal
+    return x * n + d + jnp.asarray(pad)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def static_arg_use(x, metric):
+    if metric == "l2":          # static arg: plain Python is fine
+        return jnp.sum(x * x)
+    return -jnp.sum(x)
+
+
+def host_driver(x):
+    """Not traced — host coercions and numpy are the POINT here."""
+    arr = np.asarray(x)
+    best = float(arr.min())
+    return int(arr.argmin()), best
+
+
+@jax.jit
+def pure_device(x):
+    return jnp.sqrt(jnp.sum(x * x))

@@ -1,0 +1,28 @@
+"""R003 positive fixture: unsnapped runtime scalars into static args."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cap"))
+def topk_static(d, k, cap):
+    return jnp.sort(d)[: min(k, cap)]
+
+
+def probe_loop(d, budget):
+    c = int(budget // 4)                 # runtime-derived scalar
+    return topk_static(d, k=c, cap=8)    # FINDING: unsnapped static k
+
+
+def shape_flow(d):
+    return topk_static(d, int(d.shape[0] // 2), 8)  # FINDING: derived positional
+
+
+_jit_alias = jax.jit(lambda d, k: jnp.sort(d)[:k], static_argnums=(1,))
+
+
+def secant(d, lo, hi):
+    mid = (lo + hi) // 2
+    return topk_static(d, k=mid, cap=16)  # FINDING: derived arithmetic

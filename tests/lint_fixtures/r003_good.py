@@ -1,0 +1,39 @@
+"""R003 negative fixture: snapped or bounded static arguments."""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _round_to(c, grain):
+    if grain <= 1:
+        return c
+    return max(grain, int(math.ceil(c / grain)) * grain)
+
+
+def _pad_pow2(n):
+    return 1 << max(6, (int(n) - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cap"))
+def topk_static(d, k, cap):
+    return jnp.sort(d)[: min(k, cap)]
+
+
+def probe_loop(d, budget):
+    c = _round_to(int(budget // 4), 64)   # snapped: bounded trace set
+    return topk_static(d, k=c, cap=8)
+
+
+def config_passthrough(d, k):
+    return topk_static(d, k=k, cap=8)     # plain config param: fine
+
+
+def literal_static(d):
+    return topk_static(d, k=10, cap=16)   # literal: fine
+
+
+def pow2_bucket(d, n):
+    return topk_static(d, k=_pad_pow2(n), cap=1 << 20)

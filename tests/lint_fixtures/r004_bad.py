@@ -1,0 +1,29 @@
+"""R004 positive fixture: PRNG key reuse."""
+
+import jax
+import jax.random as jrandom
+from jax import random
+
+
+def straight_line_reuse():
+    key = jrandom.PRNGKey(0)
+    a = jrandom.normal(key, (3,))
+    b = jrandom.uniform(key, (3,))  # FINDING: key consumed twice
+    return a, b
+
+
+def loop_reuse(n):
+    key = random.PRNGKey(1)
+    out = []
+    for _ in range(n):
+        out.append(random.normal(key, (2,)))  # FINDING: per-iteration reuse
+    return out
+
+
+def reuse_after_constructor_noise():
+    key = jax.random.PRNGKey(2)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (4,))
+    y = jax.random.normal(k1, (4,))  # FINDING: k1 consumed twice
+    del k2
+    return x, y

@@ -1,0 +1,43 @@
+"""R004 negative fixture: disciplined key handling (and stdlib random,
+which must never match)."""
+
+import random as stdlib_random
+
+import jax
+from jax import random
+
+
+def split_before_use():
+    key = random.PRNGKey(0)
+    k1, k2 = random.split(key)
+    a = random.normal(k1, (3,))
+    b = random.uniform(k2, (3,))
+    return a, b
+
+
+def loop_with_split(n):
+    key = random.PRNGKey(1)
+    out = []
+    for _ in range(n):
+        key, sub = random.split(key)
+        out.append(random.normal(sub, (2,)))
+    return out
+
+
+def branch_exclusive(flag):
+    key = jax.random.PRNGKey(2)
+    if flag:
+        return jax.random.normal(key, (3,))
+    else:
+        return jax.random.uniform(key, (3,))  # only one arm runs
+
+
+def fold_in_stream(key, steps):
+    return [jax.random.normal(jax.random.fold_in(key, i), (2,))
+            for i in range(steps)]
+
+
+def stdlib_is_not_jax(items):
+    a = stdlib_random.choice(items)
+    b = stdlib_random.choice(items)  # stdlib: stateful, reuse is fine
+    return a, b

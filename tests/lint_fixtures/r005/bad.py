@@ -1,0 +1,23 @@
+"""R005 positive fixture (fixture project version: 0.5.0)."""
+
+import warnings
+
+
+def tuple_query(q, k=10):
+    """Deprecated tuple API; removed at the v0.4 milestone."""
+    # FINDING: past milestone (v0.4 <= v0.5.0) — must be deleted
+    warnings.warn("use search()", DeprecationWarning, stacklevel=2)
+    return None
+
+
+def unstamped_shim(q):
+    """Deprecated: use search() instead."""
+    # FINDING: no removal milestone stamp
+    warnings.warn("use search()", DeprecationWarning, stacklevel=2)
+    return None
+
+
+def silent_shim(q):
+    # FINDING: emits DeprecationWarning but docstring has no milestone
+    warnings.warn("gone soon", DeprecationWarning, stacklevel=2)
+    return None

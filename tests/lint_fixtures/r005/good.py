@@ -1,0 +1,14 @@
+"""R005 negative fixture (fixture project version: 0.5.0)."""
+
+import warnings
+
+
+def tuple_query(q, k=10):
+    """Deprecated tuple API; removed at the v0.9 milestone."""
+    warnings.warn("use search()", DeprecationWarning, stacklevel=2)
+    return None
+
+
+def not_a_shim(q):
+    """Plain function; the word milestone alone means nothing."""
+    return q

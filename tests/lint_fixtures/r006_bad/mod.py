@@ -1,0 +1,6 @@
+"""Module with a dangling docstring reference (DESIGN.md §5)."""
+
+
+def f():
+    # dangling comment reference: §42
+    return 1

@@ -1,0 +1,6 @@
+"""Module referencing real sections (DESIGN.md §1, §2.1 subsection)."""
+
+
+def f():
+    # the comment form also resolves (§2)
+    return 1

@@ -1,0 +1,21 @@
+"""Suppression-handling fixture: one reasoned suppression (legal), one
+reasonless suppression (an R000 finding under --strict), one
+unsuppressed violation."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def reasoned(x):
+    return np.asarray(x)  # lint: disable=R002 -- fixture: exercising reasoned suppression
+
+
+@jax.jit
+def reasonless(x):
+    return np.asarray(x)  # lint: disable=R002
+
+
+@jax.jit
+def unsuppressed(x):
+    return np.asarray(x)

@@ -1,7 +1,6 @@
 """Per-arch smoke tests: reduced config, one forward/train step on CPU,
 output shapes asserted, no NaNs. (Full configs are dry-run-only.)"""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

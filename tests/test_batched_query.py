@@ -19,12 +19,7 @@ import pytest
 from repro.core.engine import (BatchStats, EngineConfig, SearchRequest,
                               WebANNSEngine)
 from repro.core.hnsw import exact_search
-from repro.core.store import (
-    TieredStore,
-    cache_init,
-    cache_insert_batch,
-    cache_lookup_batch,
-)
+from repro.core.store import cache_init, cache_insert_batch, cache_lookup_batch
 from repro.kernels import ref
 from repro.kernels.gather_distance import gather_distance_batch_pallas
 

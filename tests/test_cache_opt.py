@@ -1,6 +1,5 @@
 """Heuristic cache-size optimization (Algorithm 2) + Eq. 3/4 validation."""
 
-import math
 
 import numpy as np
 import pytest
@@ -9,7 +8,6 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache_opt import (
-    CacheOptResult,
     QueryTestStats,
     RollbackManager,
     get_theta,

@@ -1,6 +1,5 @@
 """Dry-run machinery unit tests (no 512-device init — pure functions)."""
 
-import numpy as np
 import pytest
 
 from repro.launch.dryrun import parse_collective_bytes
@@ -41,7 +40,6 @@ def test_hw_constants_sane():
 
 
 def test_model_flops_lm_train():
-    from repro.configs.base import ShapeSpec
     from repro.launch.dryrun import model_flops
     from repro import configs
 
@@ -69,7 +67,6 @@ def test_model_flops_moe_uses_active_params():
 
 def test_decode_state_specs_divisibility():
     """KV sharding rules must always produce divisible specs."""
-    import os
     if len(__import__("jax").devices()) != 1:
         pytest.skip("mesh test runs in dryrun process")
     # pure-logic check of the chooser using a fake mesh-shape dict

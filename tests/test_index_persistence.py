@@ -2,7 +2,6 @@
 compatibility with the graph-only format, and bit-identical queries on
 both storage backends."""
 
-import os
 
 import numpy as np
 import pytest
@@ -10,7 +9,7 @@ import pytest
 from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.graph import HNSWGraph
 from repro.core.index import Index
-from repro.core.storage import InMemoryBackend, ShardedFileBackend
+from repro.core.storage import ShardedFileBackend
 
 
 @pytest.fixture(scope="module")

@@ -2,7 +2,6 @@
 paper attributes to it (redundancy, access counts)."""
 
 import numpy as np
-import pytest
 
 from repro.core.engine import EngineConfig, SearchRequest, WebANNSEngine
 from repro.core.hnsw import exact_search

@@ -8,9 +8,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.store import (
-    EVICT_FIFO,
     EVICT_LRU,
-    CacheState,
     ExternalStore,
     TieredStore,
     cache_init,
